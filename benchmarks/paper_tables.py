@@ -1,0 +1,188 @@
+"""Paper-table harnesses (one per Table/Figure in MING's evaluation).
+
+Four execution models reproduce the paper's comparison frameworks on our
+calibrated static resource model (repro.core.resource_model):
+
+  vanilla    — Vitis auto baseline: materialized tensors, no unroll.
+  scalehls   — graph pipelining only: II=2 (WAR hazards, Sec. V), no
+               unroll, arguments passed between nodes (no explicit BRAM
+               for intermediates — HLS maps them to LUT/FF, unmodeled).
+  streamhls  — dataflow + DSP-aware unroll DSE, materialized
+               intermediates + reorder copies, II=2 (WAR), BRAM-blind.
+  ming       — the reproduction: streaming + line buffers + Eq.(1) ILP.
+
+Each table prints ours next to the paper's published numbers (where the
+paper reports that cell) so calibration drift is visible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+
+from repro.core import cnn_graphs
+from repro.core.dse import DseResult, solve_ilp, solve_materialized
+from repro.core.resource_model import (
+    ExecMode,
+    FpgaResourceModel,
+    KV260_BRAM18K,
+    KV260_DSP,
+)
+from repro.core.streaming import plan_streams
+
+
+@dataclass
+class Row:
+    kernel: str
+    mode: str
+    mcycles: float
+    bram: int
+    dsp: int
+    speedup: float
+    e_dsp: float
+    feasible: bool
+
+
+def _modes_for(dfg) -> dict[str, tuple[float, int, int, bool]]:
+    """(cycles, bram, dsp, feasible) per mode."""
+    plan = plan_streams(dfg)
+    model = FpgaResourceModel()
+
+    vanilla = model.estimate(plan, ExecMode.VANILLA, {})
+    scale = model.estimate(plan, ExecMode.MATERIALIZED_DATAFLOW, {})
+    stream_dse = solve_materialized(plan, b_total=KV260_BRAM18K)
+    ming = solve_ilp(plan)
+
+    return {
+        "vanilla": (vanilla.cycles, vanilla.bram, max(vanilla.dsp, 1), True),
+        "scalehls": (
+            scale.pipeline_cycles,
+            # ScaleHLS passes intermediates as function args (LUT/FF):
+            # charge only the weight/constant buffers
+            sum(model.node_bram_streaming(n, 1, 1) for n in plan.node_order()),
+            scale.dsp,
+            True,
+        ),
+        "streamhls": (
+            stream_dse.estimate.pipeline_cycles,
+            stream_dse.estimate.bram,
+            stream_dse.estimate.dsp,
+            stream_dse.estimate.bram <= KV260_BRAM18K
+            and stream_dse.estimate.dsp <= KV260_DSP,
+        ),
+        "ming": (
+            ming.estimate.pipeline_cycles,
+            ming.bram_used,
+            ming.dsp_used,
+            ming.feasible,
+        ),
+    }
+
+
+#: paper Table II (published values) for calibration display:
+#: kernel → {mode: (MCycles|speedup, BRAM, DSP)}
+PAPER_TABLE2 = {
+    "conv_relu_32": {"vanilla": (0.53, 19, 5), "ming_speedup": 504,
+                     "ming_bram": 16, "ming_dsp": 246,
+                     "streamhls_speedup": 1.84, "streamhls_bram": 51},
+    "conv_relu_224": {"vanilla": (29.2, 707, 8), "ming_speedup": 582,
+                      "ming_bram": 16, "ming_dsp": 246,
+                      "streamhls_speedup": 2.06, "streamhls_bram": 2016},
+    "cascade_conv_32": {"vanilla": (1.45, 52, 10), "ming_speedup": 44.6,
+                        "ming_bram": 32, "ming_dsp": 183,
+                        "streamhls_speedup": 2.95, "streamhls_bram": 116},
+    "cascade_conv_224": {"vanilla": (86.1, 2280, 18), "ming_speedup": 48.6,
+                         "ming_bram": 32, "ming_dsp": 183,
+                         "streamhls_speedup": 4.06, "streamhls_bram": 6664},
+    "residual_block_32": {"vanilla": (1.56, 89, 19), "ming_speedup": 57.8,
+                          "ming_bram": 48, "ming_dsp": 259,
+                          "streamhls_speedup": 2.02, "streamhls_bram": 162},
+    "residual_block_224": {"vanilla": (88.6, 3947, 35), "ming_speedup": 53.7,
+                           "ming_bram": 48, "ming_dsp": 259,
+                           "streamhls_speedup": 2.9, "streamhls_bram": 6152},
+    "linear": {"vanilla": (17.0, 265, 5), "ming_speedup": 125,
+               "ming_bram": 64, "ming_dsp": 256,
+               "streamhls_speedup": 32319, "streamhls_bram": 6144},
+    "feed_forward": {"vanilla": (33.9, 463, 10), "ming_speedup": 249,
+                     "ming_bram": 96, "ming_dsp": 192,
+                     "streamhls_speedup": None, "streamhls_bram": None},
+}
+
+
+def table2(emit=print) -> list[Row]:
+    """Paper Table II: cycles/BRAM/DSP/speedup/E_DSP per kernel × mode."""
+    rows: list[Row] = []
+    emit("# Table II — kernels × frameworks (ours | paper where published)")
+    emit("kernel,mode,MCycles,BRAM,DSP,speedup,E_DSP,feasible,"
+         "paper_speedup,paper_bram")
+    for name, make in cnn_graphs.PAPER_SUITE.items():
+        modes = _modes_for(make())
+        v_cyc, v_bram, v_dsp, _ = modes["vanilla"]
+        paper = PAPER_TABLE2.get(name, {})
+        for mode, (cyc, bram, dsp, feas) in modes.items():
+            speedup = v_cyc / max(cyc, 1)
+            e_dsp = speedup / max(dsp / max(v_dsp, 1), 1e-9)
+            rows.append(Row(name, mode, cyc / 1e6, bram, dsp, speedup, e_dsp,
+                            feas))
+            p_speed = paper.get(f"{mode}_speedup", "")
+            p_bram = paper.get(f"{mode}_bram", "")
+            if mode == "vanilla" and "vanilla" in paper:
+                p_speed, p_bram = 1.0, paper["vanilla"][1]
+            emit(
+                f"{name},{mode},{cyc/1e6:.4f},{bram},{dsp},"
+                f"{speedup:.1f},{e_dsp:.2f},{feas},{p_speed},{p_bram}"
+            )
+    return rows
+
+
+def fig3(emit=print, sizes=(32, 64, 96, 128, 160, 192, 224)) -> dict:
+    """Fig. 3: single-layer BRAM vs input size, materialized vs streaming."""
+    out = {"sizes": list(sizes), "materialized": [], "streaming": []}
+    emit("# Fig. 3 — single-layer Conv+ReLU BRAM utilization vs input size")
+    emit("input_size,materialized_bram,ming_bram")
+    for n in sizes:
+        plan = plan_streams(cnn_graphs.conv_relu(n))
+        mat = solve_materialized(plan)
+        ming = solve_ilp(plan)
+        out["materialized"].append(mat.estimate.bram)
+        out["streaming"].append(ming.bram_used)
+        emit(f"{n},{mat.estimate.bram},{ming.bram_used}")
+    return out
+
+
+#: paper Table IV published rows: DSP budget → (speedup, DSP, E_DSP)
+PAPER_TABLE4 = {1248: (504, 246, 10.24), 250: (19.1, 76, 2.25),
+                50: (3.54, 21, 0.84)}
+
+
+def table4(emit=print, budgets=(1248, 250, 50)) -> list[dict]:
+    """Table IV: DSP budget sweep on single-layer 32×32."""
+    plan = plan_streams(cnn_graphs.conv_relu(32))
+    model = FpgaResourceModel()
+    vanilla = model.estimate(plan, ExecMode.VANILLA, {})
+    rows = []
+    emit("# Table IV — DSP budget vs speedup (single-layer 32×32)")
+    emit("dsp_budget,speedup,dsp_used,E_DSP,feasible,"
+         "paper_speedup,paper_dsp,paper_edsp")
+    for b in budgets:
+        res = solve_ilp(plan, d_total=b)
+        speed = vanilla.cycles / max(res.estimate.pipeline_cycles, 1)
+        e_dsp = speed / max(res.dsp_used / max(vanilla.dsp, 1), 1e-9)
+        p = PAPER_TABLE4.get(b, ("", "", ""))
+        rows.append({"budget": b, "speedup": speed, "dsp": res.dsp_used,
+                     "e_dsp": e_dsp, "feasible": res.feasible})
+        emit(f"{b},{speed:.1f},{res.dsp_used},{e_dsp:.2f},{res.feasible},"
+             f"{p[0]},{p[1]},{p[2]}")
+    return rows
+
+
+def run_all(emit=print):
+    table2(emit)
+    emit("")
+    fig3(emit)
+    emit("")
+    table4(emit)
+
+
+if __name__ == "__main__":
+    run_all()

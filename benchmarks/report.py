@@ -1,0 +1,87 @@
+"""Markdown table generators for EXPERIMENTS.md (§Dry-run / §Roofline).
+
+Usage: PYTHONPATH=src python -m benchmarks.report [--out runs/dryrun]
+Prints markdown to stdout; EXPERIMENTS.md embeds the output.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.roofline import load_records, sort_key
+
+
+def _gb(x) -> str:
+    return f"{x / (1 << 30):.2f}"
+
+
+def dryrun_table(recs, mesh: str) -> list[str]:
+    out = [
+        f"### Mesh `{mesh}`",
+        "",
+        "| arch | shape | entry | status | compile s | args GiB/dev | "
+        "temp GiB/dev | collectives (count) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted([r for r in recs if r.get("mesh") == mesh], key=sort_key):
+        if r.get("skipped"):
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | **skip** (recorded) "
+                f"| — | — | — | — |"
+            )
+            continue
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | **FAIL** | — | — | — | — |")
+            continue
+        mem = r.get("memory_analysis", {})
+        colls = ", ".join(
+            f"{k}×{v}" for k, v in sorted(r.get("collective_counts", {}).items())
+        ) or "none"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['entry']} | ok "
+            f"| {r.get('compile_s', 0):.0f} "
+            f"| {_gb(mem.get('argument_size_in_bytes', 0))} "
+            f"| {_gb(mem.get('temp_size_in_bytes', 0))} "
+            f"| {colls} |"
+        )
+    return out
+
+
+def roofline_table(recs, mesh: str) -> list[str]:
+    out = [
+        f"### Mesh `{mesh}` (per-device seconds per step)",
+        "",
+        "| arch | shape | compute | memory | collective | bottleneck | "
+        "MODEL/HLO FLOPs | roofline-MFU |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted([r for r in recs if r.get("mesh") == mesh], key=sort_key):
+        if r.get("skipped") or not r.get("ok"):
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} "
+            f"| {r['memory_s']:.3g} | {r['collective_s']:.3g} "
+            f"| **{r['dominant'][:-2]}** | {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_mfu']:.4f} |"
+        )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--section", choices=["dryrun", "roofline", "both"],
+                    default="both")
+    args = ap.parse_args()
+    recs = load_records(args.out)
+    lines: list[str] = []
+    if args.section in ("dryrun", "both"):
+        lines += dryrun_table(recs, "single") + [""]
+        lines += dryrun_table(recs, "multi") + [""]
+    if args.section in ("roofline", "both"):
+        lines += roofline_table(recs, "single") + [""]
+        lines += roofline_table(recs, "multi")
+    print("\n".join(lines))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Benchmark orchestrator: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Sections:
+  1. Paper tables (Table II, Fig. 3, Table IV) from the calibrated
+     FPGA resource model — one harness per paper artifact.
+  2. Kernel micro-validation: every Pallas kernel vs its ref.py oracle
+     (interpret mode) with wall-times (CPU emulation — correctness
+     gates, not TPU performance).
+  3. MING DSE micro-bench: ILP solve times + explored nodes (the paper's
+     "lightweight DSE" claim).
+  4. Roofline summary from dry-run artifacts (if present) + the three
+     hillclimb cells.
+
+Writes everything it prints; exit code 0 iff all validations pass.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _section(title: str):
+    print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}", flush=True)
+
+
+def paper_tables() -> bool:
+    from benchmarks import paper_tables as pt
+
+    _section("Paper tables (Table II / Fig. 3 / Table IV)")
+    pt.run_all()
+    return True
+
+
+def kernel_validation() -> bool:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops, ref
+
+    _section("Kernel validation vs ref.py oracles (interpret mode)")
+    ok = True
+    print("kernel,case,us_per_call,max_abs_err,pass")
+
+    def check(name, case, fn, oracle, atol):
+        nonlocal ok
+        t0 = time.perf_counter()
+        out = jax.tree.map(np.asarray, fn())
+        dt = (time.perf_counter() - t0) * 1e6
+        exp = jax.tree.map(np.asarray, oracle())
+        errs = [
+            np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32)).max()
+            for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(exp))
+        ]
+        err = max(errs)
+        good = err <= atol
+        ok = ok and good
+        print(f"{name},{case},{dt:.0f},{err:.2e},{good}")
+
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 8)
+
+    x8 = jax.random.randint(ks[0], (1, 16, 16, 8), -8, 8, jnp.int8)
+    w8 = jax.random.randint(ks[1], (3, 3, 8, 16), -4, 4, jnp.int8)
+    check("conv2d_stream", "int8_3x3",
+          lambda: ops.conv2d_stream(x8, w8, fuse_relu=True),
+          lambda: ref.conv2d(x8, w8, fuse_relu=True), 0)
+
+    q = jax.random.normal(ks[2], (2, 8, 128, 64), jnp.float32)
+    k = jax.random.normal(ks[3], (2, 2, 128, 64), jnp.float32)
+    v = jax.random.normal(ks[4], (2, 2, 128, 64), jnp.float32)
+    check("flash_attention", "gqa_causal_128",
+          lambda: ops.flash_attention(q, k, v, causal=True,
+                                      block_q=64, block_k=64),
+          lambda: ref.attention(q, k, v, causal=True), 5e-5)
+
+    xm = jax.random.normal(ks[5], (64, 128), jnp.float32)
+    wg = jax.random.normal(ks[6], (128, 256), jnp.float32) * 0.05
+    wu = jax.random.normal(ks[7], (128, 256), jnp.float32) * 0.05
+    wd = jax.random.normal(ks[0], (256, 128), jnp.float32) * 0.05
+    check("fused_mlp", "gated_silu",
+          lambda: ops.fused_mlp(xm, wg, wu, wd, block_m=32, block_f=64),
+          lambda: ref.mlp(xm, wg, wu, wd), 1e-3)
+
+    xs = jax.random.normal(ks[1], (2, 64, 4, 16), jnp.float32)
+    dt_ = jax.nn.softplus(jax.random.normal(ks[2], (2, 64, 4)))
+    a = -jnp.exp(jax.random.normal(ks[3], (4,)) * 0.3)
+    bm = jax.random.normal(ks[4], (2, 64, 8)) * 0.5
+    cm = jax.random.normal(ks[5], (2, 64, 8)) * 0.5
+    check("mamba2_ssd", "chunk16",
+          lambda: ops.mamba2_ssd(xs, dt_, a, bm, cm, chunk=16),
+          lambda: ref.ssd(xs, dt_, a, bm, cm), 5e-3)
+    return ok
+
+
+def dse_bench() -> bool:
+    from repro.core import cnn_graphs
+    from repro.core.dse import solve_ilp
+    from repro.core.streaming import plan_streams
+
+    _section("DSE micro-bench (lightweight-ILP claim)")
+    print("kernel,solve_ms,explored,objective_cycles,feasible")
+    for name, make in cnn_graphs.PAPER_SUITE.items():
+        plan = plan_streams(make())
+        t0 = time.perf_counter()
+        res = solve_ilp(plan)
+        dt = (time.perf_counter() - t0) * 1e3
+        print(f"{name},{dt:.1f},{res.explored},{res.objective_cycles},"
+              f"{res.feasible}")
+    return True
+
+
+def roofline_summary() -> bool:
+    import os
+
+    from benchmarks import roofline
+
+    for label, out in (("BASELINE (paper-faithful)", "runs/dryrun"),
+                       ("OPTIMIZED (beyond-paper)", "runs/dryrun_opt")):
+        _section(f"Roofline summary — {label} ({out})")
+        if not os.path.isdir(out):
+            print(f"# {out} not present — run the dry-run sweep first")
+            continue
+        roofline.table(out, mesh="single")
+        print()
+        roofline.table(out, mesh="multi")
+    print()
+    _section("Hillclimb cell selection (from baseline)")
+    if os.path.isdir("runs/dryrun"):
+        roofline.pick_hillclimb_cells("runs/dryrun")
+    return True
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args(argv)
+    ok = True
+    ok &= paper_tables()
+    if not args.skip_kernels:
+        ok &= kernel_validation()
+    ok &= dse_bench()
+    ok &= roofline_summary()
+    _section(f"RESULT: {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

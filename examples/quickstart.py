@@ -1,0 +1,79 @@
+"""Quickstart: the whole MING pipeline on one CNN kernel, end to end.
+
+  1. Build the paper's Conv+ReLU kernel as a linalg-style DFG.
+  2. Classify every node (Alg. 1 + 2): sliding-window vs pure-parallel.
+  3. Streaming transform: streams + line buffers (never materialize the
+     intermediate tensor — contribution C1).
+  4. ILP DSE under the Kria KV260 budgets (Eq. 1).
+  5. Emit Vitis-style HLS C++ with the five pragma families.
+  6. TPU path: run the line-buffer streaming conv as a Pallas kernel
+     (interpret mode on CPU) and check it against the oracle.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    KV260_BRAM18K,
+    KV260_DSP,
+    classify_kernel,
+    cnn_graphs,
+    plan_streams,
+    solve_ilp,
+    solve_materialized,
+)
+from repro.core.emit_hls import emit_cpp
+from repro.kernels import ops, ref
+
+
+def main() -> None:
+    # 1-2. build + classify ---------------------------------------------------
+    dfg = cnn_graphs.conv_relu(32)
+    print(f"DFG {dfg.name!r}: {len(dfg.nodes)} nodes, "
+          f"{len(dfg.intermediate_values())} intermediate tensor(s)")
+    for node in dfg.topo_order():
+        info = classify_kernel(node)
+        extra = (f" stride={info.stride} dilation={info.dilation}"
+                 if info.kernel_class.value == "sliding_window" else "")
+        print(f"  {node.name:8s} -> {info.kernel_class.value}{extra}")
+
+    # 3. streaming transform ---------------------------------------------------
+    plan = plan_streams(dfg)
+    conv = plan.nodes["conv0"]
+    print(f"\nstreaming plan: line buffer {conv.line_buffer_bits // 8} B "
+          f"(vs {dfg.values['conv0_out'].total_bits // 8} B materialized), "
+          f"{len(plan.streams)} streams, {len(plan.regions)} DATAFLOW region")
+
+    # 4. DSE --------------------------------------------------------------------
+    ming = solve_ilp(plan, d_total=KV260_DSP, b_total=KV260_BRAM18K)
+    mat = solve_materialized(plan)
+    speed = mat.estimate.pipeline_cycles / ming.estimate.pipeline_cycles
+    print(f"\nDSE (KV260: {KV260_DSP} DSP, {KV260_BRAM18K} BRAM18K):")
+    print(f"  MING      : {ming.estimate.pipeline_cycles:>9} cycles, "
+          f"{ming.bram_used:>4} BRAM, {ming.dsp_used:>4} DSP "
+          f"(explored {ming.explored} states)")
+    print(f"  StreamHLS-like: {mat.estimate.pipeline_cycles:>9} cycles, "
+          f"{mat.estimate.bram:>4} BRAM, {mat.estimate.dsp:>4} DSP")
+    print(f"  -> {speed:.1f}x faster with "
+          f"{mat.estimate.bram / max(ming.bram_used, 1):.1f}x less BRAM")
+
+    # 5. HLS emission -------------------------------------------------------------
+    cpp = emit_cpp(plan, ming)
+    print(f"\nemitted {len(cpp.splitlines())} lines of Vitis HLS C++; head:")
+    print("\n".join("  | " + l for l in cpp.splitlines()[:16]))
+
+    # 6. TPU Pallas path ------------------------------------------------------------
+    key = jax.random.key(0)
+    x = jax.random.randint(key, (1, 32, 32, 3), -8, 8, jnp.int8)
+    w = jax.random.randint(jax.random.key(1), (3, 3, 3, 16), -4, 4, jnp.int8)
+    out = ops.conv2d_stream(x, w, fuse_relu=True)      # line-buffer kernel
+    exp = ref.conv2d(x, w, fuse_relu=True)             # oracle
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+    print(f"\nPallas line-buffer conv (interpret): {out.shape} int32 — "
+          "matches oracle exactly")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Batched serving example: prefill a wave of prompts, decode lock-step,
+report tokens/s — then demonstrate the decode-cache contract by checking
+the engine's greedy tokens against teacher-forced full forwards.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.launch.serve import ServeEngine
+from repro.models import lm
+
+
+def main() -> None:
+    cfg = get_config("llama3.2-1b", smoke=True).with_(remat=False)
+    engine = ServeEngine(cfg, max_len=160, seed=0)
+    rng = np.random.default_rng(0)
+
+    # wave 1: warmup/compile
+    prompts = rng.integers(0, cfg.vocab_size, (8, 64), dtype=np.int32)
+    engine.generate(prompts, max_new=8)
+
+    # wave 2: measured
+    out, stats = engine.generate(prompts, max_new=64)
+    print(f"batch=8 prompt=64 new=64: prefill {stats.prefill_s*1e3:.0f} ms, "
+          f"decode {stats.decode_s*1e3:.0f} ms, "
+          f"{stats.tokens_per_s:.0f} tok/s (CPU)")
+
+    # correctness: engine greedy == teacher-forced argmax
+    small = rng.integers(0, cfg.vocab_size, (2, 16), dtype=np.int32)
+    got, _ = engine.generate(small, max_new=4)
+    seq = small.copy()
+    for t in range(4):
+        logits, _ = lm.lm_prefill(engine.params, cfg,
+                                  {"tokens": jnp.asarray(seq)})
+        nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+        assert np.array_equal(nxt, got[:, t]), f"divergence at step {t}"
+        seq = np.concatenate([seq, nxt[:, None]], axis=1)
+    print("decode-cache contract verified: engine tokens == teacher-forced "
+          "argmax for 4 steps")
+
+    # temperature sampling determinism under a seed
+    s1, _ = engine.generate(small, max_new=8, temperature=0.8, seed=42)
+    s2, _ = engine.generate(small, max_new=8, temperature=0.8, seed=42)
+    assert np.array_equal(s1, s2)
+    print("seeded sampling is reproducible")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end training driver: a ~100M-param llama-family model trained
+for a few hundred steps on CPU, with checkpointing, an injected mid-run
+crash (auto-restart), and loss-curve verification.
+
+This is the (b) "end-to-end driver" deliverable at the scale this
+container can actually execute; the same ``repro.launch.train`` driver
+runs the full configs on a TPU fleet (dry-run-validated).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import tempfile
+
+from repro.configs.base import count_params
+from repro.configs.registry import get_config
+from repro.launch.train import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    # ~100M params: llama3.2-1b family, narrowed
+    cfg = get_config("llama3.2-1b").with_(
+        num_layers=4, d_model=512, num_heads=8, num_kv_heads=4, d_ff=1536,
+        vocab_size=32768, attn_block_q=128, attn_block_k=128, loss_chunk=128,
+        dtype="float32",
+    )
+    n = count_params(cfg)
+    print(f"model: {n/1e6:.1f}M params "
+          f"({cfg.num_layers}L d={cfg.d_model} ff={cfg.d_ff} v={cfg.vocab_size})")
+
+    import repro.configs.registry as registry
+
+    # register the custom config under a temp name for the CLI driver
+    registry.ARCHS["_example100m"] = "llama3_2_1b"
+    import repro.configs.llama3_2_1b as mod
+
+    orig = mod.CONFIG
+    mod.CONFIG = cfg
+    try:
+        with tempfile.TemporaryDirectory() as ckpt:
+            out = train(
+                arch="_example100m", smoke=False, steps=args.steps,
+                batch=args.batch, seq=args.seq, ckpt_dir=ckpt,
+                ckpt_every=50, lr=6e-4, fail_at=(args.steps // 2,),
+                log_every=20,
+            )
+    finally:
+        mod.CONFIG = orig
+        registry.ARCHS.pop("_example100m")
+
+    losses = out["losses"]
+    first = sum(losses[:10]) / 10
+    last = sum(losses[-10:]) / 10
+    print(f"\nfirst-10 mean loss {first:.4f} -> last-10 mean loss {last:.4f}")
+    print(f"survived injected crash at step {args.steps // 2}; "
+          f"median step {out['median_step_s']*1e3:.0f} ms; "
+          f"stragglers flagged: {len(out['straggler_flags'])}")
+    assert last < first - 0.3, "model failed to learn"
+    print("OK — loss decreased through a mid-run crash + restart")
+
+
+if __name__ == "__main__":
+    main()

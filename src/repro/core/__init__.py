@@ -1,0 +1,52 @@
+"""MING core: the paper's contribution as a composable library.
+
+Pipeline (paper Fig. 4):
+  DFG of GenericOps → analysis (Alg. 1+2) → streaming transform (streams +
+  line buffers) → ILP DSE (Eq. 1) → backends (Vitis-style C++ emission /
+  Pallas block planning).
+"""
+from .analysis import (
+    IteratorClasses,
+    KernelClass,
+    KernelInfo,
+    SlidingWindowInfo,
+    classify_iterators,
+    classify_kernel,
+    detect_sliding_window,
+    window_geometry,
+)
+from .dse import (
+    DseResult,
+    divisors,
+    plan_attention_blocks,
+    plan_conv_rows,
+    plan_matmul_blocks,
+    solve_ilp,
+    solve_materialized,
+)
+from .ir import (
+    DFG,
+    AffineExpr,
+    AffineMap,
+    GenericOp,
+    IteratorType,
+    PayloadKind,
+    Value,
+    make_conv2d_op,
+    make_elementwise_op,
+    make_matmul_op,
+    make_pool2d_op,
+)
+from .resource_model import (
+    ExecMode,
+    FpgaResourceModel,
+    GraphEstimate,
+    KV260_BRAM18K,
+    KV260_DSP,
+    TPU_V5E,
+    TpuResourceModel,
+    TpuSpec,
+)
+from .streaming import FusionRegion, NodePlan, StreamEdge, StreamingPlan, plan_streams
+
+__all__ = [k for k in dir() if not k.startswith("_")]

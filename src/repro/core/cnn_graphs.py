@@ -1,0 +1,151 @@
+"""The paper's evaluation kernel suite (Sec. V-A) as GenericOp DFGs.
+
+Five kernels, matching Table II rows:
+
+* ``conv_relu(N)``        — Conv3×3 + ReLU, input N×N
+* ``cascade_conv(N)``     — (Conv3×3+ReLU) × 2
+* ``residual_block(N)``   — Conv→ReLU→Conv → (+skip) → ReLU (diamond)
+* ``linear()``            — 512×128 @ 128×256
+* ``feed_forward()``      — 512×128 @ 128×256 → ReLU → @ 256×128
+
+The paper does not publish channel counts; we fix C_in=3→C_out=16, K=3,
+'same' padding — chosen so the *Vanilla* BRAM footprint reproduces the
+paper's Table II values (19 blocks @32², ~707 @224²; see
+benchmarks/paper_tables.py for the calibration table).  All tensors are
+int8 (post-training quantization, Sec. V-A).
+"""
+from __future__ import annotations
+
+from .ir import (
+    DFG,
+    GenericOp,
+    PayloadKind,
+    Value,
+    make_conv2d_op,
+    make_elementwise_op,
+    make_matmul_op,
+)
+
+INT8 = 8
+
+
+def _conv(
+    dfg: DFG,
+    idx: int,
+    in_name: str,
+    n: int,
+    h: int,
+    w: int,
+    c_in: int,
+    c_out: int,
+    k: int = 3,
+) -> str:
+    wname = f"w{idx}"
+    oname = f"conv{idx}_out"
+    dfg.add_value(Value(wname, (k, k, c_in, c_out), INT8, is_constant=True))
+    dfg.add_value(Value(oname, (n, h, w, c_out), INT8))
+    dfg.add_node(
+        make_conv2d_op(
+            f"conv{idx}", in_name, wname, oname,
+            n=n, h_out=h, w_out=w, c_out=c_out, kh=k, kw=k, c_in=c_in,
+        )
+    )
+    return oname
+
+
+def _relu(dfg: DFG, idx: int, in_name: str, shape: tuple[int, ...]) -> str:
+    oname = f"relu{idx}_out"
+    dfg.add_value(Value(oname, shape, INT8))
+    dfg.add_node(
+        make_elementwise_op(f"relu{idx}", [in_name], oname, shape, PayloadKind.RELU)
+    )
+    return oname
+
+
+def conv_relu(n_size: int = 32, c_in: int = 3, c_out: int = 16) -> DFG:
+    dfg = DFG(f"conv_relu_{n_size}")
+    shape = (1, n_size, n_size, c_in)
+    dfg.add_value(Value("x", shape, INT8))
+    dfg.graph_inputs.append("x")
+    c1 = _conv(dfg, 0, "x", 1, n_size, n_size, c_in, c_out)
+    r1 = _relu(dfg, 0, c1, (1, n_size, n_size, c_out))
+    dfg.graph_outputs.append(r1)
+    return dfg
+
+
+def cascade_conv(n_size: int = 32, c_in: int = 3, c_mid: int = 16) -> DFG:
+    dfg = DFG(f"cascade_conv_{n_size}")
+    dfg.add_value(Value("x", (1, n_size, n_size, c_in), INT8))
+    dfg.graph_inputs.append("x")
+    c1 = _conv(dfg, 0, "x", 1, n_size, n_size, c_in, c_mid)
+    r1 = _relu(dfg, 0, c1, (1, n_size, n_size, c_mid))
+    c2 = _conv(dfg, 1, r1, 1, n_size, n_size, c_mid, c_mid)
+    r2 = _relu(dfg, 1, c2, (1, n_size, n_size, c_mid))
+    dfg.graph_outputs.append(r2)
+    return dfg
+
+
+def residual_block(n_size: int = 32, c: int = 16) -> DFG:
+    """Diamond: x → conv0 → relu0 → conv1 → add(x) → relu1.
+
+    Exercises the FIFO-depth sizing for diamond structures (Sec. IV-C)."""
+    dfg = DFG(f"residual_block_{n_size}")
+    shape = (1, n_size, n_size, c)
+    dfg.add_value(Value("x", shape, INT8))
+    dfg.graph_inputs.append("x")
+    c1 = _conv(dfg, 0, "x", 1, n_size, n_size, c, c)
+    r1 = _relu(dfg, 0, c1, shape)
+    c2 = _conv(dfg, 1, r1, 1, n_size, n_size, c, c)
+    dfg.add_value(Value("add_out", shape, INT8))
+    dfg.add_node(
+        make_elementwise_op("add_skip", [c2, "x"], "add_out", shape, PayloadKind.ADD)
+    )
+    r2 = _relu(dfg, 1, "add_out", shape)
+    dfg.graph_outputs.append(r2)
+    return dfg
+
+
+def linear(batch: int = 512, d_in: int = 128, d_out: int = 256) -> DFG:
+    """'Linear 512x128' (Table II): batch 512, features 128→256."""
+    dfg = DFG("linear")
+    dfg.add_value(Value("x", (batch, d_in), INT8))
+    dfg.add_value(Value("w0", (d_in, d_out), INT8, is_constant=True))
+    dfg.add_value(Value("y", (batch, d_out), INT8))
+    dfg.graph_inputs.append("x")
+    dfg.add_node(
+        make_matmul_op("linear0", "x", "w0", "y", m=batch, k=d_in, n_out=d_out)
+    )
+    dfg.graph_outputs.append("y")
+    return dfg
+
+
+def feed_forward(batch: int = 512, d_in: int = 128, d_hidden: int = 256) -> DFG:
+    """Two cascading Linear layers with ReLU (Table II 'Feed Forward')."""
+    dfg = DFG("feed_forward")
+    dfg.add_value(Value("x", (batch, d_in), INT8))
+    dfg.add_value(Value("w0", (d_in, d_hidden), INT8, is_constant=True))
+    dfg.add_value(Value("h", (batch, d_hidden), INT8))
+    dfg.graph_inputs.append("x")
+    dfg.add_node(
+        make_matmul_op("linear0", "x", "w0", "h", m=batch, k=d_in, n_out=d_hidden)
+    )
+    hr = _relu(dfg, 0, "h", (batch, d_hidden))
+    dfg.add_value(Value("w1", (d_hidden, d_in), INT8, is_constant=True))
+    dfg.add_value(Value("y", (batch, d_in), INT8))
+    dfg.add_node(
+        make_matmul_op("linear1", hr, "w1", "y", m=batch, k=d_hidden, n_out=d_in)
+    )
+    dfg.graph_outputs.append("y")
+    return dfg
+
+
+PAPER_SUITE = {
+    "conv_relu_32": lambda: conv_relu(32),
+    "conv_relu_224": lambda: conv_relu(224),
+    "cascade_conv_32": lambda: cascade_conv(32),
+    "cascade_conv_224": lambda: cascade_conv(224),
+    "residual_block_32": lambda: residual_block(32),
+    "residual_block_224": lambda: residual_block(224),
+    "linear": linear,
+    "feed_forward": feed_forward,
+}

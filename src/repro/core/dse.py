@@ -1,0 +1,404 @@
+"""MING lightweight DSE (paper Sec. IV-C, Eq. (1)).
+
+The ILP::
+
+    min   Σ_v Cycles(v)                       (objective: sum of node latencies)
+    s.t.  u_ℓ | trip(ℓ)                       (unroll divisibility)
+          Σ u_ℓ η_ℓd ≤ D_total                (DSP budget)
+          Σ u_ℓ η_ℓb ≤ B_total                (BRAM budget)
+          κ_src(s),s = κ_dst(s),s             (stream width consistency)
+
+is solved *exactly* with branch-and-bound over divisor lattices — the
+paper's point is that streaming collapses the design space enough that a
+lightweight solver suffices; we lean on the same property (candidate sets
+are divisor lists, typically a few dozen entries per node).
+
+The decision variable is one unroll factor per dataflow node.  Reduction
+loops unroll first (they add MACs/cycle without widening streams); once a
+node's reduction trips are fully unrolled, further factors widen the
+parallel (stream) loops.  The resulting *stream width* ``κ`` must agree
+across every producer/consumer pair — Eq. (1)'s stream constraint.
+
+``plan_tpu_blocks`` is the TPU dual: identical problem shape with
+VMEM-bytes standing in for BRAM and MXU lane occupancy for DSPs
+(DESIGN.md §2); its output drives the Pallas kernels' BlockSpecs.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .resource_model import (
+    ExecMode,
+    FpgaResourceModel,
+    GraphEstimate,
+    KV260_BRAM18K,
+    KV260_DSP,
+    TPU_V5E,
+    TpuResourceModel,
+    TpuSpec,
+)
+from .streaming import NodePlan, StreamingPlan
+
+
+def divisors(n: int, cap: int | None = None) -> list[int]:
+    out = []
+    i = 1
+    while i * i <= n:
+        if n % i == 0:
+            out.append(i)
+            if i != n // i:
+                out.append(n // i)
+        i += 1
+    out.sort()
+    if cap is not None:
+        out = [d for d in out if d <= cap]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Node-level unroll semantics
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class UnrollChoice:
+    """One candidate unroll factor for a node, with derived quantities."""
+
+    unroll: int
+    stream_width: int     # κ: parallel lanes on this node's streams
+    dsp: int
+    bram: int
+    cycles: int
+
+
+def _reduction_trip(plan: NodePlan) -> int:
+    op = plan.op
+    r = 1
+    for d in plan.info.classes.reduction:
+        r *= op.dim_extent(d)
+    return max(r, 1)
+
+
+def _parallel_trip(plan: NodePlan) -> int:
+    """Product of the *unrollable* parallel dims only.
+
+    Sliding spatial (window) dims are never unrolled — replicating the
+    sliding loops would break the streaming arrival order (Sec. IV-B's
+    point about polyhedral reordering) — so the widening budget is the
+    channel-like parallel dims (e.g. c_out), matching the paper's DSP
+    ladder (Table II: conv unroll ≈ K·K·C_in · C_out)."""
+    op = plan.op
+    window = set(plan.info.classes.window)
+    p = 1
+    for d in op.parallel_dims:
+        if d not in window:
+            p *= op.dim_extent(d)
+    return max(p, 1)
+
+
+def node_candidates(
+    plan: NodePlan,
+    model: FpgaResourceModel,
+    d_total: int,
+    max_unroll: int = 4096,
+) -> list[UnrollChoice]:
+    """Enumerate legal unroll factors for one node (Unroll Constr.),
+    STREAMING mode (II=1, line-buffer BRAM only).
+
+    Factors are products r*p with r | reduction_trip and p | parallel_trip;
+    the stream width is p (reduction unrolling does not widen streams).
+    """
+    red = _reduction_trip(plan)
+    par = _parallel_trip(plan)
+    choices: dict[int, UnrollChoice] = {}
+    for r in divisors(red, cap=max_unroll):
+        for p in divisors(par, cap=max(max_unroll // r, 1)):
+            u = r * p
+            if u > max_unroll:
+                continue
+            # widening streams before exhausting the reduction wastes DSPs
+            # feeding idle lanes — prune dominated shapes
+            if p > 1 and r != red:
+                continue
+            cyc = model.node_cycles(plan, u, ii=1)
+            dsp = model.node_dsp(plan, u)
+            if dsp > d_total:
+                continue
+            bram = model.node_bram_streaming(plan, u, width=p)
+            prev = choices.get(u)
+            cand = UnrollChoice(u, p, dsp, bram, cyc)
+            if prev is None or cand.cycles < prev.cycles:
+                choices[u] = cand
+    return sorted(choices.values(), key=lambda c: c.unroll)
+
+
+# ---------------------------------------------------------------------------
+# Exact branch-and-bound ILP solver
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DseResult:
+    unrolls: dict[str, int]
+    stream_widths: dict[str, int]
+    estimate: GraphEstimate
+    objective_cycles: int
+    dsp_used: int
+    bram_used: int
+    feasible: bool
+    explored: int = 0
+
+
+def solve_ilp(
+    plan: StreamingPlan,
+    *,
+    d_total: int = KV260_DSP,
+    b_total: int = KV260_BRAM18K,
+    model: FpgaResourceModel | None = None,
+    max_unroll: int = 4096,
+) -> DseResult:
+    """Solve Eq. (1) exactly for the STREAMING (MING) mode."""
+    model = model or FpgaResourceModel()
+    nodes = plan.node_order()
+    cand: dict[str, list[UnrollChoice]] = {
+        n.name: node_candidates(n, model, d_total, max_unroll)
+        for n in nodes
+    }
+    # stream adjacency: consumer -> producers already placed (topo order)
+    producers_of: dict[str, list[str]] = {n.name: [] for n in nodes}
+    for s in plan.streams.values():
+        if s.producer and s.consumer:
+            producers_of[s.consumer].append(s.producer)
+
+    order = [n.name for n in nodes]
+    best: dict = {"cycles": math.inf, "assign": None, "explored": 0}
+    # optimistic per-node lower bounds for pruning
+    min_cycles = {name: min(c.cycles for c in cs) for name, cs in cand.items()}
+    suffix_bound = [0] * (len(order) + 1)
+    for i in range(len(order) - 1, -1, -1):
+        suffix_bound[i] = suffix_bound[i + 1] + min_cycles[order[i]]
+
+    def recurse(
+        i: int, assign: dict[str, UnrollChoice], dsp: int, bram: int, cycles: int
+    ) -> None:
+        best["explored"] += 1
+        if cycles + suffix_bound[i] >= best["cycles"]:
+            return
+        if i == len(order):
+            best["cycles"] = cycles
+            best["assign"] = dict(assign)
+            return
+        name = order[i]
+        # stream constraint: κ must equal every already-placed producer's κ
+        widths = {assign[p].stream_width for p in producers_of[name] if p in assign}
+        for choice in cand[name]:
+            if widths and choice.stream_width not in widths:
+                continue
+            if dsp + choice.dsp > d_total:
+                continue
+            if bram + choice.bram > b_total:
+                continue
+            assign[name] = choice
+            recurse(i + 1, assign, dsp + choice.dsp, bram + choice.bram,
+                    cycles + choice.cycles)
+            del assign[name]
+
+    recurse(0, {}, 0, 0, 0)
+
+    if best["assign"] is None:
+        # infeasible under the budgets — report unroll=1 estimate
+        unrolls = {n: 1 for n in order}
+        est = model.estimate(plan, ExecMode.STREAMING, unrolls)
+        return DseResult(unrolls, {n: 1 for n in order}, est, est.cycles,
+                         est.dsp, est.bram, feasible=False,
+                         explored=best["explored"])
+
+    assign: dict[str, UnrollChoice] = best["assign"]
+    unrolls = {n: c.unroll for n, c in assign.items()}
+    est = model.estimate(
+        plan, ExecMode.STREAMING, unrolls,
+        widths={n: c.stream_width for n, c in assign.items()},
+    )
+    return DseResult(
+        unrolls=unrolls,
+        stream_widths={n: c.stream_width for n, c in assign.items()},
+        estimate=est,
+        objective_cycles=sum(c.cycles for c in assign.values()),
+        dsp_used=sum(c.dsp for c in assign.values()),
+        bram_used=sum(c.bram for c in assign.values()),
+        feasible=True,
+        explored=best["explored"],
+    )
+
+
+def solve_materialized(
+    plan: StreamingPlan,
+    *,
+    d_total: int = KV260_DSP,
+    b_total: int | None = None,
+    model: FpgaResourceModel | None = None,
+) -> DseResult:
+    """StreamHLS-like DSE: unroll under the DSP budget only (the paper's
+    observation: StreamHLS's DSE tracks DSPs but not BRAM, which is what
+    lets its designs blow past edge BRAM limits)."""
+    model = model or FpgaResourceModel()
+    unrolls: dict[str, int] = {}
+    widths: dict[str, int] = {}
+    budget = d_total
+    for np_ in plan.node_order():
+        red = _reduction_trip(np_)
+        # greedy: largest reduction-unroll fitting the remaining DSP budget
+        u = 1
+        for cand_u in divisors(red):
+            dsp = model.node_dsp(np_, cand_u)
+            if dsp <= max(budget, 0):
+                u = cand_u
+        budget -= model.node_dsp(np_, u)
+        unrolls[np_.name] = u
+        widths[np_.name] = 1
+    est = model.estimate(plan, ExecMode.MATERIALIZED_DATAFLOW, unrolls)
+    feasible = b_total is None or est.bram <= b_total
+    return DseResult(unrolls, widths, est, est.cycles, est.dsp, est.bram,
+                     feasible=feasible)
+
+
+# ---------------------------------------------------------------------------
+# TPU dual: Pallas block-shape selection under (VMEM, MXU) budgets
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TpuBlockPlan:
+    """Chosen BlockSpec tile sizes for one fused kernel."""
+
+    kind: str
+    blocks: dict
+    est_cycles: float
+    vmem_bytes: int
+    mxu_util: float
+
+
+def _pow2_multiples(base: int, limit: int) -> list[int]:
+    out = []
+    v = base
+    while v <= limit:
+        out.append(v)
+        v *= 2
+    return out or [base]
+
+
+def plan_attention_blocks(
+    *,
+    seq_q: int,
+    seq_k: int,
+    head_dim: int,
+    vmem_budget: int | None = None,
+    spec: TpuSpec = TPU_V5E,
+    bytes_per_el: int = 2,
+) -> TpuBlockPlan:
+    """Pick (block_q, block_k) for KV-streaming flash attention.
+
+    BRAM constraint → resident q/k/v tiles + accumulators ≤ VMEM;
+    DSP constraint → tiles 128-aligned so MXU lanes are fully claimed;
+    objective → minimize estimated cycles (favors the largest feasible
+    k-tile: fewer stream iterations, better pipelining)."""
+    model = TpuResourceModel(spec)
+    budget = vmem_budget or spec.vmem_bytes
+    best: Optional[TpuBlockPlan] = None
+    for bq in _pow2_multiples(min(128, seq_q), min(seq_q, 1024)):
+        for bk in _pow2_multiples(min(128, seq_k), min(seq_k, 2048)):
+            if seq_q % bq or seq_k % bk:
+                continue
+            e = model.attention_blocks(
+                block_q=bq, block_k=bk, head_dim=head_dim, bytes_per_el=bytes_per_el
+            )
+            if e.vmem_bytes > budget:
+                continue
+            steps = (seq_q // bq) * (seq_k // bk)
+            total = e.cycles * steps
+            if best is None or total < best.est_cycles or (
+                total == best.est_cycles and e.vmem_bytes < best.vmem_bytes
+            ):
+                best = TpuBlockPlan(
+                    "attention", {"block_q": bq, "block_k": bk},
+                    total, e.vmem_bytes, e.mxu_util,
+                )
+    assert best is not None, "no feasible attention tiling"
+    return best
+
+
+def plan_matmul_blocks(
+    *,
+    m: int,
+    k: int,
+    n: int,
+    vmem_budget: int | None = None,
+    spec: TpuSpec = TPU_V5E,
+    bytes_per_el: int = 2,
+) -> TpuBlockPlan:
+    """Pick (bm, bk, bn) for a streamed matmul (fused-MLP building block)."""
+    model = TpuResourceModel(spec)
+    budget = vmem_budget or spec.vmem_bytes
+    best: Optional[TpuBlockPlan] = None
+    for bm in _pow2_multiples(min(128, m), min(m, 1024)):
+        for bn in _pow2_multiples(min(128, n), min(n, 1024)):
+            for bk in _pow2_multiples(min(128, k), min(k, 2048)):
+                if m % bm or n % bn or k % bk:
+                    continue
+                e = model.matmul_block(bm, bk, bn, bytes_per_el)
+                if e.vmem_bytes > budget:
+                    continue
+                steps = (m // bm) * (n // bn) * (k // bk)
+                total = e.cycles * steps
+                key = (total, -e.mxu_util, e.vmem_bytes)
+                if best is None or key < (best.est_cycles, -best.mxu_util,
+                                          best.vmem_bytes):
+                    best = TpuBlockPlan(
+                        "matmul", {"bm": bm, "bk": bk, "bn": bn},
+                        total, e.vmem_bytes, e.mxu_util,
+                    )
+    assert best is not None, "no feasible matmul tiling"
+    return best
+
+
+def plan_conv_rows(
+    *,
+    h: int,
+    w: int,
+    c_in: int,
+    c_out: int,
+    kh: int,
+    kw: int,
+    vmem_budget: int | None = None,
+    spec: TpuSpec = TPU_V5E,
+    bytes_per_el: int = 1,
+) -> TpuBlockPlan:
+    """Rows-per-block for the line-buffer streaming conv kernel.
+
+    The VMEM working set is the TPU line buffer: (rows + kh - 1) input
+    rows + weights + rows of output — directly mirroring the paper's
+    (K-1)×N BRAM line buffer."""
+    budget = vmem_budget or spec.vmem_bytes
+    best: Optional[TpuBlockPlan] = None
+    rows = 1
+    while rows <= h:
+        if h % rows == 0:
+            in_rows = (rows + kh - 1) * w * c_in * bytes_per_el * 2
+            w_bytes = kh * kw * c_in * c_out * bytes_per_el
+            out_rows = rows * w * c_out * 4  # int32/fp32 accumulators
+            vmem = in_rows + w_bytes + out_rows
+            if vmem <= budget:
+                macs = rows * w * c_out * kh * kw * c_in
+                cycles = macs / (spec.mxu_dim * spec.mxu_dim)
+                steps = h // rows
+                cand = TpuBlockPlan(
+                    "conv_rows", {"rows": rows}, cycles * steps, vmem, 1.0
+                )
+                # prefer more rows (fewer grid steps, better DMA pipelining)
+                if best is None or cand.blocks["rows"] > best.blocks["rows"]:
+                    best = cand
+        rows *= 2
+    assert best is not None, "no feasible conv row tiling"
+    return best

@@ -1,0 +1,481 @@
+"""MING core IR: a linalg.generic-like dataflow representation in Python.
+
+The paper (Sec. IV-A) operates on ``linalg.generic`` operations: each op
+carries *indexing maps* (affine maps from loop iterators to operand
+subscripts) and *iterator types* (``parallel`` | ``reduction``).  MING's
+analyses — sliding-window detection (Alg. 1) and iterator classification
+(Alg. 2) — read only this structure, never the payload.  We mirror that
+here: :class:`GenericOp` is the unit of analysis, :class:`DFG` is the
+dataflow graph whose edges are tensors ("streams" after the transform).
+
+This IR is deliberately tiny and dependency-free: it is the contract
+between the model-graph frontends (``repro.core.cnn_graphs`` for the
+paper's CNN suite, ``repro.graph`` for LM layers) and the analysis /
+streaming / DSE passes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Mapping, Optional, Sequence
+
+
+# ---------------------------------------------------------------------------
+# Affine expressions / maps (the subset MLIR's affine maps need here:
+# integer-linear combinations of loop dims plus a constant).
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AffineExpr:
+    """``sum(coeff_i * d_i) + const`` over loop dimensions ``d_i``.
+
+    ``terms`` is a sorted tuple of ``(dim_index, coefficient)`` with all
+    coefficients nonzero.  A *single-dim* expression (``IS_SINGLE_DIM`` in
+    Alg. 2) is one term with coefficient 1 and zero constant.
+    """
+
+    terms: tuple[tuple[int, int], ...] = ()
+    const: int = 0
+
+    @staticmethod
+    def dim(d: int, coeff: int = 1) -> "AffineExpr":
+        if coeff == 0:
+            return AffineExpr((), 0)
+        return AffineExpr(((d, coeff),), 0)
+
+    @staticmethod
+    def constant(c: int) -> "AffineExpr":
+        return AffineExpr((), c)
+
+    def __add__(self, other: "AffineExpr") -> "AffineExpr":
+        acc: dict[int, int] = {}
+        for d, c in self.terms + other.terms:
+            acc[d] = acc.get(d, 0) + c
+        terms = tuple(sorted((d, c) for d, c in acc.items() if c != 0))
+        return AffineExpr(terms, self.const + other.const)
+
+    def __mul__(self, k: int) -> "AffineExpr":
+        if k == 0:
+            return AffineExpr((), 0)
+        return AffineExpr(tuple((d, c * k) for d, c in self.terms), self.const * k)
+
+    # -- predicates used by the paper's algorithms --------------------------
+
+    def is_single_dim(self) -> bool:
+        """One iterator, unit coefficient, no offset (Alg. 2 IS_SINGLE_DIM)."""
+        return len(self.terms) == 1 and self.terms[0][1] == 1 and self.const == 0
+
+    def dims(self) -> tuple[int, ...]:
+        return tuple(d for d, _ in self.terms)
+
+    def coeff(self, d: int) -> int:
+        for dd, c in self.terms:
+            if dd == d:
+                return c
+        return 0
+
+    def evaluate(self, point: Sequence[int]) -> int:
+        return self.const + sum(c * point[d] for d, c in self.terms)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        parts = [
+            (f"d{d}" if c == 1 else f"{c}*d{d}") for d, c in self.terms
+        ]
+        if self.const or not parts:
+            parts.append(str(self.const))
+        return " + ".join(parts)
+
+
+@dataclass(frozen=True)
+class AffineMap:
+    """An affine map ``(d0, ..., d{n-1}) -> (E_0, ..., E_{m-1})``."""
+
+    n_dims: int
+    results: tuple[AffineExpr, ...]
+
+    @staticmethod
+    def identity(n: int) -> "AffineMap":
+        return AffineMap(n, tuple(AffineExpr.dim(i) for i in range(n)))
+
+    @staticmethod
+    def of(n_dims: int, exprs: Iterable[AffineExpr]) -> "AffineMap":
+        return AffineMap(n_dims, tuple(exprs))
+
+    def is_identity(self) -> bool:
+        return self.results == tuple(
+            AffineExpr.dim(i) for i in range(self.n_dims)
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        ds = ", ".join(f"d{i}" for i in range(self.n_dims))
+        rs = ", ".join(repr(e) for e in self.results)
+        return f"({ds}) -> ({rs})"
+
+
+class IteratorType(str, enum.Enum):
+    PARALLEL = "parallel"
+    REDUCTION = "reduction"
+
+
+# ---------------------------------------------------------------------------
+# Values (tensors / streams) and GenericOp
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Value:
+    """A tensor edge in the DFG.  After the streaming transform these are
+    realized as streams (FIFO channels in the FPGA path, VMEM-resident
+    producer→consumer handoffs in the TPU path) instead of materialized
+    arrays — the core of MING contribution C1."""
+
+    name: str
+    shape: tuple[int, ...]
+    elem_bits: int = 8  # paper evaluates int8 post-training quantization
+    is_constant: bool = False  # weights/biases: not streamed, held on-chip
+
+    @property
+    def num_elements(self) -> int:
+        return math.prod(self.shape) if self.shape else 1
+
+    @property
+    def total_bits(self) -> int:
+        return self.num_elements * self.elem_bits
+
+
+class PayloadKind(str, enum.Enum):
+    """Semantic tag for the scalar payload region of a GenericOp.
+
+    MING never inspects the payload for *classification* (that is purely
+    structural, from indexing maps + iterator types); the payload kind is
+    only used by the resource model to count multiplies/adds per iteration
+    point (DSP/MXU cost) and by the emitters.
+    """
+
+    MAC = "mac"               # out += in0 * in1   (conv / matmul)
+    ADD = "add"               # out = in0 + in1
+    MAX = "max"               # out = max(in0, in1) (pooling)
+    RELU = "relu"             # out = max(in0, 0)
+    SQUARED_RELU = "squared_relu"
+    IDENTITY = "identity"
+    EXP = "exp"
+    MUL = "mul"
+
+
+#: multiplies, adds per iteration point, keyed by payload kind
+PAYLOAD_COSTS: dict[PayloadKind, tuple[int, int]] = {
+    PayloadKind.MAC: (1, 1),
+    PayloadKind.ADD: (0, 1),
+    PayloadKind.MAX: (0, 1),
+    PayloadKind.RELU: (0, 1),
+    PayloadKind.SQUARED_RELU: (1, 1),
+    PayloadKind.IDENTITY: (0, 0),
+    PayloadKind.EXP: (4, 4),  # poly approx budget
+    PayloadKind.MUL: (1, 0),
+}
+
+
+@dataclass
+class GenericOp:
+    """A ``linalg.generic``-like op.
+
+    ``indexing_maps`` has one entry per input followed by one for the
+    output (same convention as MLIR).  ``dim_sizes`` gives the extent of
+    every loop dimension (trip counts), known statically for inference
+    workloads — the property MING's lightweight DSE relies on.
+    """
+
+    name: str
+    inputs: tuple[str, ...]
+    output: str
+    indexing_maps: tuple[AffineMap, ...]
+    iterator_types: tuple[IteratorType, ...]
+    dim_sizes: tuple[int, ...]
+    payload: PayloadKind = PayloadKind.MAC
+    elem_bits: int = 8
+
+    def __post_init__(self) -> None:
+        if len(self.indexing_maps) != len(self.inputs) + 1:
+            raise ValueError(
+                f"{self.name}: need {len(self.inputs) + 1} indexing maps "
+                f"(inputs + output), got {len(self.indexing_maps)}"
+            )
+        n = len(self.iterator_types)
+        if len(self.dim_sizes) != n:
+            raise ValueError(f"{self.name}: dim_sizes/iterator_types length mismatch")
+        for m in self.indexing_maps:
+            if m.n_dims != n:
+                raise ValueError(f"{self.name}: map arity {m.n_dims} != {n}")
+
+    # -- convenience ---------------------------------------------------------
+
+    @property
+    def input_maps(self) -> tuple[AffineMap, ...]:
+        return self.indexing_maps[: len(self.inputs)]
+
+    @property
+    def output_map(self) -> AffineMap:
+        return self.indexing_maps[-1]
+
+    @property
+    def n_dims(self) -> int:
+        return len(self.iterator_types)
+
+    def is_parallel_dim(self, d: int) -> bool:
+        return self.iterator_types[d] == IteratorType.PARALLEL
+
+    def is_reduction_dim(self, d: int) -> bool:
+        return self.iterator_types[d] == IteratorType.REDUCTION
+
+    @property
+    def parallel_dims(self) -> tuple[int, ...]:
+        return tuple(
+            d for d, t in enumerate(self.iterator_types) if t == IteratorType.PARALLEL
+        )
+
+    @property
+    def reduction_dims(self) -> tuple[int, ...]:
+        return tuple(
+            d for d, t in enumerate(self.iterator_types) if t == IteratorType.REDUCTION
+        )
+
+    @property
+    def total_trip_count(self) -> int:
+        return math.prod(self.dim_sizes) if self.dim_sizes else 1
+
+    def macs(self) -> int:
+        """Multiply-accumulate-equivalents for the whole op."""
+        mults, adds = PAYLOAD_COSTS[self.payload]
+        return self.total_trip_count * max(mults, adds, 1) if (mults or adds) else 0
+
+    def dim_extent(self, d: int) -> int:
+        return self.dim_sizes[d]
+
+
+# ---------------------------------------------------------------------------
+# Dataflow graph
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DFG:
+    """Dataflow graph over :class:`GenericOp` nodes.
+
+    Mirrors the paper's dfg-mlir abstraction (Sec. III-B): nodes are KPN
+    processes, values are FIFO channels.  ``graph_inputs`` are tensors
+    arriving from host memory; ``graph_outputs`` leave the fabric.
+    """
+
+    name: str
+    values: dict[str, Value] = field(default_factory=dict)
+    nodes: list[GenericOp] = field(default_factory=list)
+    graph_inputs: list[str] = field(default_factory=list)
+    graph_outputs: list[str] = field(default_factory=list)
+
+    # -- construction --------------------------------------------------------
+
+    def add_value(self, value: Value) -> Value:
+        if value.name in self.values:
+            raise ValueError(f"duplicate value {value.name}")
+        self.values[value.name] = value
+        return value
+
+    def add_node(self, node: GenericOp) -> GenericOp:
+        for v in node.inputs + (node.output,):
+            if v not in self.values:
+                raise ValueError(f"{node.name}: unknown value {v}")
+        self.nodes.append(node)
+        return node
+
+    # -- topology ------------------------------------------------------------
+
+    def producer_of(self, value_name: str) -> Optional[GenericOp]:
+        for n in self.nodes:
+            if n.output == value_name:
+                return n
+        return None
+
+    def consumers_of(self, value_name: str) -> list[GenericOp]:
+        return [n for n in self.nodes if value_name in n.inputs]
+
+    def node(self, name: str) -> GenericOp:
+        for n in self.nodes:
+            if n.name == name:
+                return n
+        raise KeyError(name)
+
+    def topo_order(self) -> list[GenericOp]:
+        """Kahn's algorithm over the tensor-mediated edges."""
+        ready: list[GenericOp] = []
+        produced = set(self.graph_inputs) | {
+            v for v, val in self.values.items() if val.is_constant
+        }
+        pending = list(self.nodes)
+        order: list[GenericOp] = []
+        while pending:
+            ready = [n for n in pending if all(i in produced for i in n.inputs)]
+            if not ready:
+                raise ValueError(f"{self.name}: cycle or missing producer in DFG")
+            for n in ready:
+                order.append(n)
+                produced.add(n.output)
+                pending.remove(n)
+        return order
+
+    def edges(self) -> list[tuple[GenericOp, GenericOp, str]]:
+        """(producer, consumer, value) triples for non-constant edges."""
+        out = []
+        for n in self.nodes:
+            for c in self.consumers_of(n.output):
+                out.append((n, c, n.output))
+        return out
+
+    def intermediate_values(self) -> list[Value]:
+        """Values produced and consumed inside the graph — exactly the
+        tensors MING refuses to materialize (Fig. 2b)."""
+        names = {n.output for n in self.nodes} - set(self.graph_outputs)
+        return [self.values[v] for v in names]
+
+
+# ---------------------------------------------------------------------------
+# Builders for common NN GenericOps (used by cnn_graphs and the LM frontend)
+# ---------------------------------------------------------------------------
+
+
+def make_conv2d_op(
+    name: str,
+    input_name: str,
+    weight_name: str,
+    output_name: str,
+    *,
+    n: int,
+    h_out: int,
+    w_out: int,
+    c_out: int,
+    kh: int,
+    kw: int,
+    c_in: int,
+    stride: int = 1,
+    dilation: int = 1,
+    elem_bits: int = 8,
+) -> GenericOp:
+    """NHWC conv2d as linalg.generic (paper Fig. 5 maps 1-3).
+
+    dims: (d0=n, d1=h, d2=w, d3=c_out, d4=r, d5=s, d6=c_in);
+    input map:  (d0, d1*stride + d4*dilation, d2*stride + d5*dilation, d6)
+    weight map: (d4, d5, d6, d3)
+    output map: (d0, d1, d2, d3)
+    """
+    d = AffineExpr.dim
+    imap = AffineMap.of(
+        7,
+        [
+            d(0),
+            d(1, stride) + d(4, dilation),
+            d(2, stride) + d(5, dilation),
+            d(6),
+        ],
+    )
+    wmap = AffineMap.of(7, [d(4), d(5), d(6), d(3)])
+    omap = AffineMap.of(7, [d(0), d(1), d(2), d(3)])
+    P, R = IteratorType.PARALLEL, IteratorType.REDUCTION
+    return GenericOp(
+        name=name,
+        inputs=(input_name, weight_name),
+        output=output_name,
+        indexing_maps=(imap, wmap, omap),
+        iterator_types=(P, P, P, P, R, R, R),
+        dim_sizes=(n, h_out, w_out, c_out, kh, kw, c_in),
+        payload=PayloadKind.MAC,
+        elem_bits=elem_bits,
+    )
+
+
+def make_matmul_op(
+    name: str,
+    lhs: str,
+    rhs: str,
+    output: str,
+    *,
+    m: int,
+    k: int,
+    n_out: int,
+    elem_bits: int = 8,
+) -> GenericOp:
+    """(m,k) x (k,n) -> (m,n): dims (d0=m, d1=n, d2=k)."""
+    d = AffineExpr.dim
+    P, R = IteratorType.PARALLEL, IteratorType.REDUCTION
+    return GenericOp(
+        name=name,
+        inputs=(lhs, rhs),
+        output=output,
+        indexing_maps=(
+            AffineMap.of(3, [d(0), d(2)]),
+            AffineMap.of(3, [d(2), d(1)]),
+            AffineMap.of(3, [d(0), d(1)]),
+        ),
+        iterator_types=(P, P, R),
+        dim_sizes=(m, n_out, k),
+        payload=PayloadKind.MAC,
+        elem_bits=elem_bits,
+    )
+
+
+def make_elementwise_op(
+    name: str,
+    inputs: Sequence[str],
+    output: str,
+    shape: tuple[int, ...],
+    payload: PayloadKind,
+    elem_bits: int = 8,
+) -> GenericOp:
+    """Pure-parallel op: identity maps on every operand (paper map0)."""
+    n = len(shape)
+    ident = AffineMap.identity(n)
+    return GenericOp(
+        name=name,
+        inputs=tuple(inputs),
+        output=output,
+        indexing_maps=tuple(ident for _ in range(len(inputs) + 1)),
+        iterator_types=tuple(IteratorType.PARALLEL for _ in range(n)),
+        dim_sizes=shape,
+        payload=payload,
+        elem_bits=elem_bits,
+    )
+
+
+def make_pool2d_op(
+    name: str,
+    input_name: str,
+    output_name: str,
+    *,
+    n: int,
+    h_out: int,
+    w_out: int,
+    c: int,
+    kh: int,
+    kw: int,
+    stride: int,
+    payload: PayloadKind = PayloadKind.MAX,
+    elem_bits: int = 8,
+) -> GenericOp:
+    """Max/avg pool: sliding window with a single (streamed) input."""
+    d = AffineExpr.dim
+    P, R = IteratorType.PARALLEL, IteratorType.REDUCTION
+    imap = AffineMap.of(
+        6, [d(0), d(1, stride) + d(4), d(2, stride) + d(5), d(3)]
+    )
+    omap = AffineMap.of(6, [d(0), d(1), d(2), d(3)])
+    return GenericOp(
+        name=name,
+        inputs=(input_name,),
+        output=output_name,
+        indexing_maps=(imap, omap),
+        iterator_types=(P, P, P, P, R, R),
+        dim_sizes=(n, h_out, w_out, c, kh, kw),
+        payload=payload,
+        elem_bits=elem_bits,
+    )

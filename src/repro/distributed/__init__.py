@@ -1,0 +1,1 @@
+"""Distribution: activation sharding context, parameter sharding rules."""

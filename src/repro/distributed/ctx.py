@@ -1,0 +1,38 @@
+"""Activation-sharding context.
+
+Model code stays mesh-agnostic: it calls ``shard_activation(x, kind)`` at
+layer boundaries; the launcher installs a hook that applies
+``with_sharding_constraint`` with the mesh's axis names.  On a single
+device (smoke tests) the hook is identity.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Optional
+
+import jax
+
+_HOOK: Optional[Callable[[jax.Array, str], jax.Array]] = None
+
+
+def set_activation_sharding(hook: Optional[Callable]) -> None:
+    global _HOOK
+    _HOOK = hook
+
+
+def shard_activation(x: jax.Array, kind: str) -> jax.Array:
+    """kind ∈ {'hidden', 'tokens', 'logits', 'kv_cache', 'expert_buf'}."""
+    if _HOOK is None:
+        return x
+    return _HOOK(x, kind)
+
+
+@contextlib.contextmanager
+def activation_sharding(hook: Optional[Callable]):
+    global _HOOK
+    prev = _HOOK
+    _HOOK = hook
+    try:
+        yield
+    finally:
+        _HOOK = prev

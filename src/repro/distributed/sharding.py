@@ -1,0 +1,251 @@
+"""Parameter / batch / cache sharding rules (GSPMD partition specs).
+
+Axis roles:
+  ``model``          — tensor parallelism (heads, d_ff, vocab, experts)
+  ``data`` (+``pod``) — batch parallelism; together they form the FSDP
+                        axis group along which params & optimizer states
+                        are fully sharded.
+
+Rules are keyed on leaf *names* (the pytree key path suffix), with one
+structural convention: leaves under a ``blocks`` subtree carry a leading
+layer-stack axis (from scan-over-layers) which is never sharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def fsdp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def dp_axes(mesh: Mesh):
+    return fsdp_axes(mesh)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+
+#: attention leaves whose TP sharding slices q-heads / kv-heads
+_Q_HEAD_LEAVES = frozenset({"wq", "wo", "bq"})
+_KV_HEAD_LEAVES = frozenset({"wk", "wv", "bk", "bv"})
+
+
+def _param_spec_for(name: str, ndim: int, fsdp, *, q_ok=True, kv_ok=True) -> P:
+    """Spec for an *unstacked* leaf (stack prefix handled by caller).
+
+    ``q_ok`` / ``kv_ok``: whether TP may shard the q / kv head axes.
+    When heads don't divide the model axis, GSPMD would slice *inside*
+    head_dim and insert an all-reduce of every (bq, bk) score block — the
+    dominant collective in the unaware baseline (EXPERIMENTS.md §Perf
+    iteration A1: 28.9 s of a 31.2 s collective term on qwen2-0.5b) — so
+    these leaves replicate their head axis instead.
+    """
+    if name in ("embed",):                       # (V, D): vocab-parallel
+        return P("model", fsdp)
+    if name in ("lm_head",):                     # (D, V)
+        return P(fsdp, "model")
+    if name in _Q_HEAD_LEAVES and not q_ok:
+        if name == "wq":
+            return P(fsdp, None)
+        if name == "wo":
+            return P(None, fsdp)
+        return P(None)                           # bq
+    if name in _KV_HEAD_LEAVES and not kv_ok:
+        if name in ("wk", "wv"):
+            return P(fsdp, None)
+        return P(None)                           # bk / bv
+    if name in ("wq", "wk", "wv", "wu", "wg", "in_proj"):   # (D, X)
+        if ndim == 3:                            # MoE experts (E, D, F)
+            return P("model", fsdp, None)
+        return P(fsdp, "model")
+    if name in ("wo", "wd", "out_proj"):         # (X, D)
+        if ndim == 3:                            # MoE experts (E, F, D)
+            return P("model", None, fsdp)
+        return P("model", fsdp)
+    if name == "router":                         # (D, E)
+        return P(fsdp, None)
+    if name == "conv_w":                         # (K, conv_dim)
+        return P(None, "model")
+    if name in ("bq", "bk", "bv"):               # (X,)
+        return P("model")
+    # norms / scalars / per-head vectors: replicate
+    return P(*([None] * 0))
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    """True when a dim of this size can shard over the axis group."""
+    n = axis_size(mesh, axes)
+    return n > 0 and dim % n == 0
+
+
+def make_param_shardings(mesh: Mesh, params_shape: Any, cfg=None) -> Any:
+    """Pytree of NamedShardings congruent with the params pytree.
+
+    Divisibility-aware: any proposed axis that does not evenly divide the
+    corresponding dim is dropped (falls back to replication on that dim) —
+    e.g. unpadded vocabs (50280, 49155, 256206) cannot vocab-shard over a
+    model=16 axis; the §Perf vocab-padding optimization removes exactly
+    this fallback.  ``cfg`` (a ModelConfig) enables head-aware attention
+    sharding — see :func:`_param_spec_for`.
+    """
+    fsdp = fsdp_axes(mesh)
+    tp = mesh.shape.get("model", 1)
+    q_ok = cfg is None or cfg.num_heads == 0 or cfg.num_heads % tp == 0
+    kv_ok = cfg is None or cfg.num_kv_heads == 0 or cfg.num_kv_heads % tp == 0
+
+    def spec_for(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = keys[-1]
+        ndim = len(leaf.shape)
+        stacked = "blocks" in keys
+        if stacked:
+            base = _param_spec_for(name, ndim - 1, fsdp, q_ok=q_ok,
+                                   kv_ok=kv_ok)
+            parts = (None, *tuple(base))
+        else:
+            parts = tuple(
+                _param_spec_for(name, ndim, fsdp, q_ok=q_ok, kv_ok=kv_ok)
+            )
+        # pad/validate rank
+        if len(parts) > ndim:
+            parts = parts[:ndim]
+        parts = parts + (None,) * (ndim - len(parts))
+        # drop axes that do not divide the dim
+        parts = tuple(
+            a if _fits(leaf.shape[i], mesh, a) else None
+            for i, a in enumerate(parts)
+        )
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def make_opt_shardings(mesh: Mesh, opt_state_shape: Any,
+                       param_shardings: Any) -> Any:
+    """Optimizer state: moments follow param sharding; scalars replicate."""
+    repl = NamedSharding(mesh, P())
+    flat_p = {
+        tuple(_path_str(p)): s
+        for p, s in jax.tree_util.tree_flatten_with_path(param_shardings)[0]
+    }
+
+    def spec_for(path, leaf):
+        keys = _path_str(path)
+        # AdamWState fields: step / mu / nu / nu_scale — mu/nu subtrees are
+        # congruent with params, so match on the path suffix
+        if len(leaf.shape) == 0:
+            return repl
+        for plen in range(len(keys)):
+            cand = tuple(keys[plen:])
+            if cand in flat_p:
+                return flat_p[cand]
+        return repl
+
+    return jax.tree_util.tree_map_with_path(spec_for, opt_state_shape)
+
+
+def _path_str(path) -> list[str]:
+    out = []
+    for k in path:
+        out.append(str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k)))))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def make_batch_shardings(mesh: Mesh, batch_shape: Any) -> Any:
+    """Batch over the DP axis group — adaptively dropped when the batch
+    dim does not divide it (long_500k's global_batch=1)."""
+    dp = dp_axes(mesh)
+
+    def spec_for(path, leaf):
+        name = _path_str(path)[-1]
+        nd = len(leaf.shape)
+        if name == "mrope_positions":               # (3, B, S)
+            d = dp if _fits(leaf.shape[1], mesh, dp) else None
+            return NamedSharding(mesh, P(None, d, None))
+        if name in ("tokens", "labels", "embeds", "frames", "token"):
+            d = dp if _fits(leaf.shape[0], mesh, dp) else None
+            return NamedSharding(mesh, P(d, *([None] * (nd - 1))))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shape)
+
+
+def make_cache_shardings(mesh: Mesh, cache_shape: Any) -> Any:
+    """KV / SSM cache sharding with divisibility-aware fallbacks.
+
+    Preference order for attention KV (L, B, Hkv, S, hd):
+      1. heads over ``model`` (no resharding inside attention),
+      2. sequence over ``model`` when Hkv doesn't divide it (GQA archs
+         with Hkv=8 on a model=16 mesh — the cache stays distributed and
+         decode's cache-update touches one shard),
+    batch over the DP group whenever divisible.
+    """
+    dp = dp_axes(mesh)
+
+    def kv_spec(shape):
+        _, b, h, s, _ = shape
+        d = dp if _fits(b, mesh, dp) else None
+        if _fits(h, mesh, "model"):
+            return P(None, d, "model", None, None)
+        if _fits(s, mesh, "model"):
+            return P(None, d, None, "model", None)
+        return P(None, d, None, None, None)
+
+    def spec_for(path, leaf):
+        name = _path_str(path)[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v", "ck", "cv") and nd == 5:
+            return NamedSharding(mesh, kv_spec(leaf.shape))
+        if name == "conv" and nd == 4:          # (L, B, K-1, conv_dim)
+            d = dp if _fits(leaf.shape[1], mesh, dp) else None
+            m = "model" if _fits(leaf.shape[3], mesh, "model") else None
+            return NamedSharding(mesh, P(None, d, None, m))
+        if name == "ssm" and nd == 5:           # (L, B, H, P, N)
+            d = dp if _fits(leaf.shape[1], mesh, dp) else None
+            m = "model" if _fits(leaf.shape[2], mesh, "model") else None
+            return NamedSharding(mesh, P(None, d, m, None, None))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+# ---------------------------------------------------------------------------
+# activation hook (installed by launchers; models call shard_activation)
+# ---------------------------------------------------------------------------
+
+
+def activation_hook(mesh: Mesh) -> Callable:
+    dp = dp_axes(mesh)
+
+    def hook(x, kind: str):
+        if kind == "hidden" and x.ndim == 3:        # (B, S, D)
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp, None, None))
+            )
+        if kind == "logits" and x.ndim == 3:        # (B, c, V)
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp, None, "model"))
+            )
+        return x
+
+    return hook

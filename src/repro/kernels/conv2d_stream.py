@@ -1,0 +1,118 @@
+"""Line-buffer streaming conv2d (+fused ReLU) — Pallas TPU kernel.
+
+This is the TPU adaptation of MING's centerpiece (paper Sec. IV-B): a
+sliding-window node that *streams* input rows instead of materializing
+the input tensor on-chip.  The mapping:
+
+  FPGA                              TPU (this kernel)
+  ----------------------------      ---------------------------------
+  hls::stream row arrivals          sequential grid steps (R rows each)
+  (K-1)×N BRAM line buffer          VMEM scratch (KH-1, Wp, Cin),
+                                    persisted across grid steps
+  K×K window regs + DSP MAC tree    (R,W,Cin)×(Cin,Cout) MXU matmuls,
+                                    one per (kh, kw) tap
+  fused ReLU node (pure parallel)   fused max(acc, 0) before writeback
+
+The kernel is *causal*: output row ``j`` of the padded frame is the conv
+window ending at padded row ``j``.  ``ops.conv2d_stream`` pre-pads the
+frame and slices ``[KH-1 : KH-1+H]``, recovering exact SAME-padding
+semantics (validated against ``ref.conv2d``).
+
+Grid: ``(B, Hp // rows_per_block)`` — the row-block count is chosen by
+the DSE (``repro.core.dse.plan_conv_rows``) so the VMEM working set
+(line buffer + weights + R output rows) fits the budget, the direct dual
+of the paper's BRAM constraint.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _acc_dtype(dtype) -> jnp.dtype:
+    return jnp.int32 if jnp.issubdtype(dtype, jnp.integer) else jnp.float32
+
+
+def _conv_stream_kernel(
+    x_ref,      # (1, R, Wp, Cin)   current row block (the "stream")
+    w_ref,      # (KH, KW, Cin, Cout)
+    o_ref,      # (1, R, W, Cout)
+    lb_ref,     # (KH-1, Wp, Cin)   the line buffer (VMEM scratch)
+    *,
+    kh: int,
+    kw: int,
+    w_out: int,
+    fuse_relu: bool,
+):
+    i = pl.program_id(1)
+    acc_t = _acc_dtype(o_ref.dtype)
+
+    @pl.when(i == 0)
+    def _init():
+        lb_ref[...] = jnp.zeros_like(lb_ref)
+
+    cur = x_ref[0]                                   # (R, Wp, Cin)
+    if kh > 1:
+        window = jnp.concatenate([lb_ref[...], cur], axis=0)  # (KH-1+R, Wp, Cin)
+    else:
+        window = cur
+    r = cur.shape[0]
+
+    acc = jnp.zeros((r, w_out, o_ref.shape[-1]), acc_t)
+    for dh in range(kh):
+        for dw in range(kw):
+            patch = window[dh : dh + r, dw : dw + w_out, :]   # (R, W, Cin)
+            tap = w_ref[dh, dw]                                # (Cin, Cout)
+            acc = acc + jax.lax.dot_general(
+                patch,
+                tap,
+                (((2,), (0,)), ((), ())),
+                preferred_element_type=acc_t,
+            )
+    if fuse_relu:
+        acc = jnp.maximum(acc, 0)
+    o_ref[...] = acc[None].astype(o_ref.dtype)
+
+    if kh > 1:
+        lb_ref[...] = window[-(kh - 1):]
+
+
+def conv2d_stream_pallas(
+    x_padded: jax.Array,     # (B, Hp, Wp, Cin) — pre-padded frame
+    w: jax.Array,            # (KH, KW, Cin, Cout)
+    *,
+    rows_per_block: int,
+    w_out: int,
+    fuse_relu: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw pallas_call; see ``ops.conv2d_stream`` for the public wrapper."""
+    b, hp, wp, cin = x_padded.shape
+    kh, kw_, _, cout = w.shape
+    assert hp % rows_per_block == 0, (hp, rows_per_block)
+    nb = hp // rows_per_block
+    acc_t = _acc_dtype(x_padded.dtype)
+
+    kernel = functools.partial(
+        _conv_stream_kernel, kh=kh, kw=kw_, w_out=w_out, fuse_relu=fuse_relu
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, nb),
+        in_specs=[
+            pl.BlockSpec(
+                (1, rows_per_block, wp, cin), lambda bb, i: (bb, i, 0, 0)
+            ),
+            pl.BlockSpec((kh, kw_, cin, cout), lambda bb, i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, rows_per_block, w_out, cout), lambda bb, i: (bb, i, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hp, w_out, cout), acc_t),
+        scratch_shapes=[pltpu.VMEM((max(kh - 1, 1), wp, cin), x_padded.dtype)],
+        interpret=interpret,
+    )(x_padded, w)

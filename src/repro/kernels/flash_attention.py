@@ -1,0 +1,139 @@
+"""KV-streaming flash attention — Pallas TPU kernel.
+
+The sequence-axis analogue of MING's line buffer (DESIGN.md §2): instead
+of materializing the (Sq, Sk) score matrix (the "intermediate tensor"
+a naive graph would allocate), K/V tiles *stream* through VMEM while a
+running (m, l, acc) triple — the "line buffer" of softmax state — is
+carried in scratch across grid steps.  Supports GQA (q-head groups share
+a KV head via the BlockSpec index map) and causal masking with a query
+offset for decode.
+
+Grid: (B*Hq, Sq/block_q, Sk/block_k), k innermost (sequential stream).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,      # (1, bq, D)
+    k_ref,      # (1, bk, D)
+    v_ref,      # (1, bk, D)
+    o_ref,      # (1, bq, D)
+    m_ref,      # (bq, 1)  running max
+    l_ref,      # (bq, 1)  running denominator
+    acc_ref,    # (bq, D)  running numerator
+    *,
+    causal: bool,
+    q_offset: int,
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, D)
+    v = v_ref[0].astype(jnp.float32)                  # (bk, D)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                  # (bq, bk)
+
+    if causal:
+        qpos = (
+            jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            + qi * block_q
+            + q_offset
+        )
+        kpos = (
+            jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            + ki * block_k
+        )
+        mask = qpos >= kpos
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)          # (bq, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                             # (bq, bk)
+    if causal:
+        p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)                    # (bq, 1)
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[...] = (acc_ref[...] / safe_l)[None].astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,       # (BHq, Sq, D) — pre-scaled by ops wrapper
+    k: jax.Array,       # (BHkv, Sk, D)
+    v: jax.Array,       # (BHkv, Sk, D)
+    *,
+    group: int,          # Hq // Hkv
+    heads_q: int,        # Hq (per batch element) for the index arithmetic
+    heads_kv: int,
+    block_q: int,
+    block_k: int,
+    causal: bool = True,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    bhq, sq, d = q.shape
+    _, sk, _ = k.shape
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    nq, nk = sq // block_q, sk // block_k
+
+    def kv_index(bh: int, qi: int, ki: int):
+        b = bh // heads_q
+        h = bh % heads_q
+        return (b * heads_kv + h // group, ki, 0)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal,
+        q_offset=q_offset,
+        block_q=block_q,
+        block_k=block_k,
+        num_k_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bhq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

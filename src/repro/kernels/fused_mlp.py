@@ -1,0 +1,127 @@
+"""Fused (gated) MLP — Pallas TPU kernel.
+
+MING's "never materialize the intermediate" (contribution C1) applied to
+the transformer MLP: the (tokens, d_ff) hidden activation — the largest
+intermediate in an LM block — is *streamed* through VMEM in d_ff tiles
+and consumed immediately by the down-projection, never written to HBM.
+The running (tokens, d_model) accumulator in scratch plays the role of
+the output stream.
+
+Grid: (M/bm, F/bf), f innermost.  Tile sizes come from the DSE
+(``repro.core.dse.plan_matmul_blocks``) under the VMEM budget — the BRAM
+constraint dual.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _activate(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return x * jax.nn.sigmoid(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jnp.maximum(x, 0.0)
+    if name == "squared_relu":
+        r = jnp.maximum(x, 0.0)
+        return r * r
+    raise ValueError(name)
+
+
+def _fused_mlp_kernel(
+    x_ref,       # (bm, D)
+    wg_ref,      # (D, bf) or None (ungated)
+    wu_ref,      # (D, bf)
+    wd_ref,      # (bf, D)
+    o_ref,       # (bm, D)
+    acc_ref,     # (bm, D) f32 scratch
+    *,
+    act: str,
+    gated: bool,
+    num_f_blocks: int,
+):
+    fi = pl.program_id(1)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    wu = wu_ref[...].astype(jnp.float32)
+    up = jax.lax.dot_general(
+        x, wu, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                   # (bm, bf)
+    if gated:
+        wg = wg_ref[...].astype(jnp.float32)
+        gate = _activate(
+            act,
+            jax.lax.dot_general(
+                x, wg, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ),
+        )
+        h = gate * up
+    else:
+        h = _activate(act, up)
+
+    wd = wd_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        h, wd, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(fi == num_f_blocks - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def fused_mlp_pallas(
+    x: jax.Array,                   # (M, D)
+    w_gate: jax.Array | None,       # (D, F) or None
+    w_up: jax.Array,                # (D, F)
+    w_down: jax.Array,              # (F, D)
+    *,
+    block_m: int,
+    block_f: int,
+    act: str = "silu",
+    interpret: bool = False,
+) -> jax.Array:
+    m, d = x.shape
+    f = w_up.shape[1]
+    assert m % block_m == 0 and f % block_f == 0, (m, f, block_m, block_f)
+    gated = w_gate is not None
+    nm, nf = m // block_m, f // block_f
+
+    kernel = functools.partial(
+        _fused_mlp_kernel, act=act, gated=gated, num_f_blocks=nf
+    )
+    in_specs = [
+        pl.BlockSpec((block_m, d), lambda mi, fi: (mi, 0)),
+    ]
+    operands = [x]
+    if gated:
+        in_specs.append(pl.BlockSpec((d, block_f), lambda mi, fi: (0, fi)))
+        operands.append(w_gate)
+    else:
+        # keep kernel arity uniform: pass w_up twice, ignore the gate slot
+        in_specs.append(pl.BlockSpec((d, block_f), lambda mi, fi: (0, fi)))
+        operands.append(w_up)
+    in_specs.append(pl.BlockSpec((d, block_f), lambda mi, fi: (0, fi)))
+    operands.append(w_up)
+    in_specs.append(pl.BlockSpec((block_f, d), lambda mi, fi: (fi, 0)))
+    operands.append(w_down)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(nm, nf),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, d), lambda mi, fi: (mi, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, d), jnp.float32)],
+        interpret=interpret,
+    )(*operands)

@@ -1,0 +1,125 @@
+"""Mamba-2 SSD (state-space duality) chunked scan — Pallas TPU kernel.
+
+The SSM arch is the one with the strongest affinity to the paper's idea
+(DESIGN.md §4): the recurrent state S ∈ (H, P, N) *is* a line buffer over
+the time axis — O(1) on-chip state instead of an O(L²) attention matrix
+or an O(L) materialized history.  Chunks stream through VMEM; the carry
+lives in scratch across grid steps exactly like the conv line buffer.
+
+Per chunk (arXiv:2405.21060):
+  y_intra[t] = Σ_{s≤t} exp(cum_t − cum_s) · dt_s · (c_t·b_s) · x_s
+  y_inter[t] = exp(cum_t) · c_t · S_prev
+  S_new      = exp(cum_Q) · S_prev + Σ_s exp(cum_Q − cum_s) dt_s x_s ⊗ b_s
+
+Grid: (B, L/Q), chunk index innermost (sequential stream).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,       # (1, Q, H, P)
+    dt_ref,      # (1, Q, H)
+    a_ref,       # (1, H)
+    b_ref,       # (1, Q, N)
+    c_ref,       # (1, Q, N)
+    s0_ref,      # (1, H, P, N)  initial state (consumed at ci == 0)
+    y_ref,       # (1, Q, H, P)
+    sf_ref,      # (1, H, P, N)  final state (written at last chunk)
+    state_ref,   # (H, P, N) f32 scratch — the time-axis line buffer
+    *,
+    chunk: int,
+    num_chunks: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, H, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, H)
+    a = a_ref[0].astype(jnp.float32)          # (H,)
+    b = b_ref[0].astype(jnp.float32)          # (Q, N)
+    c = c_ref[0].astype(jnp.float32)          # (Q, N)
+
+    da = dt * a[None, :]                      # (Q, H)
+    cum = jnp.cumsum(da, axis=0)              # (Q, H) inclusive
+
+    # intra-chunk (quadratic in Q, like a tiny causal attention)
+    rel = cum[:, None, :] - cum[None, :, :]   # (Q, Q, H): t, s
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    gate = jnp.where(tri[:, :, None], jnp.exp(rel), 0.0)       # (Q, Q, H)
+    cb = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                           # (Q, Q): t, s
+    w = cb[:, :, None] * gate * dt[None, :, :]  # (t, s, H)
+    y_intra = jnp.einsum("tsh,shp->thp", w, x)
+
+    # inter-chunk: carried state contribution
+    state = state_ref[...]                      # (H, P, N)
+    dec_t = jnp.exp(cum)                        # (Q, H)
+    y_inter = jnp.einsum("qn,hpn,qh->qhp", c, state, dec_t)
+
+    y_ref[...] = (y_intra + y_inter)[None].astype(y_ref.dtype)
+
+    # state update
+    dec_chunk = jnp.exp(cum[-1])                # (H,)
+    carry_gate = jnp.exp(cum[-1][None, :] - cum)  # (Q, H)
+    upd = jnp.einsum("qhp,qn->hpn", x * (dt * carry_gate)[:, :, None], b)
+    new_state = state * dec_chunk[:, None, None] + upd
+    state_ref[...] = new_state
+
+    @pl.when(ci == num_chunks - 1)
+    def _final():
+        sf_ref[...] = new_state[None].astype(sf_ref.dtype)
+
+
+def mamba2_ssd_pallas(
+    x: jax.Array,        # (B, L, H, P)
+    dt: jax.Array,       # (B, L, H)
+    a: jax.Array,        # (H,)
+    b_mat: jax.Array,    # (B, L, N)
+    c_mat: jax.Array,    # (B, L, N)
+    init_state: jax.Array,   # (B, H, P, N)
+    *,
+    chunk: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    a2 = a[None].astype(jnp.float32)          # (1, H) — 2D for TPU layout
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, num_chunks=nc)
+    y, sf = pl.pallas_call(
+        kernel,
+        grid=(bsz, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda b, ci: (b, ci, 0, 0)),
+            pl.BlockSpec((1, chunk, h), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, h), lambda b, ci: (0, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, h, p, n), lambda b, ci: (b, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda b, ci: (b, ci, 0, 0)),
+            pl.BlockSpec((1, h, p, n), lambda b, ci: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a2, b_mat, c_mat, init_state)
+    return y, sf

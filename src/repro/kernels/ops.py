@@ -1,0 +1,204 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each wrapper:
+  * derives legal tile sizes from the MING DSE (``repro.core.dse``) under
+    the VMEM budget — the paper's ILP with TPU-dual constraints,
+  * handles padding / reshaping so callers see clean dense semantics,
+  * validates in interpret mode on CPU (``interpret=None`` → auto).
+
+The oracles live in ``ref.py``; ``tests/test_kernels.py`` sweeps
+shapes/dtypes asserting allclose between the two.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dse import plan_attention_blocks, plan_conv_rows, plan_matmul_blocks
+from . import conv2d_stream as _conv
+from . import flash_attention as _flash
+from . import fused_mlp as _mlp
+from . import mamba2_ssd as _ssd
+
+
+def _auto_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_block(size: int, target: int) -> int:
+    """Largest divisor of ``size`` that is ≤ target (≥ 1)."""
+    best = 1
+    for d in range(1, size + 1):
+        if size % d == 0 and d <= target:
+            best = d
+    return best
+
+
+# ---------------------------------------------------------------------------
+# conv2d_stream
+# ---------------------------------------------------------------------------
+
+
+def conv2d_stream(
+    x: jax.Array,            # (B, H, W, Cin)
+    w: jax.Array,            # (KH, KW, Cin, Cout)
+    *,
+    fuse_relu: bool = False,
+    rows_per_block: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """SAME-padding NHWC conv via the line-buffer streaming kernel.
+
+    Returns int32 accumulators for integer inputs (paper's int8 PTQ path),
+    f32 otherwise — requantization is the caller's (graph's) concern.
+    """
+    interpret = _auto_interpret(interpret)
+    b, h, ww, cin = x.shape
+    kh, kw, _, cout = w.shape
+    pad_t = (kh - 1) // 2
+    pad_b = kh - 1 - pad_t
+    pad_l = (kw - 1) // 2
+    pad_r = kw - 1 - pad_l
+
+    # causal trick (see kernel docstring): pad so the padded height is
+    # H + KH - 1 and slice [KH-1 : KH-1+H] of the causal output.
+    hp = h + kh - 1
+    if rows_per_block is None:
+        plan = plan_conv_rows(
+            h=hp, w=ww + kw - 1, c_in=cin, c_out=cout, kh=kh, kw=kw,
+            bytes_per_el=x.dtype.itemsize,
+        )
+        rows_per_block = plan.blocks["rows"]
+    # rows_per_block must divide hp — pad the bottom if necessary
+    hp_pad = _round_up(hp, rows_per_block)
+    x_p = jnp.pad(
+        x,
+        ((0, 0), (pad_t, pad_b + (hp_pad - hp)), (pad_l, pad_r), (0, 0)),
+    )
+    out = _conv.conv2d_stream_pallas(
+        x_p,
+        w,
+        rows_per_block=rows_per_block,
+        w_out=ww,
+        fuse_relu=fuse_relu,
+        interpret=interpret,
+    )
+    return out[:, kh - 1 : kh - 1 + h]
+
+
+# ---------------------------------------------------------------------------
+# flash attention (GQA, causal, decode offset)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: jax.Array,        # (B, Hq, Sq, D)
+    k: jax.Array,        # (B, Hkv, Sk, D)
+    v: jax.Array,        # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    q_offset: int = 0,
+    block_q: int | None = None,
+    block_k: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    interpret = _auto_interpret(interpret)
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    if block_q is None or block_k is None:
+        plan = plan_attention_blocks(seq_q=max(sq, 8), seq_k=max(sk, 8), head_dim=d)
+        block_q = block_q or _pick_block(sq, plan.blocks["block_q"])
+        block_k = block_k or _pick_block(sk, plan.blocks["block_k"])
+
+    qf = (q * scale).reshape(b * hq, sq, d)
+    kf = k.reshape(b * hkv, sk, d)
+    vf = v.reshape(b * hkv, sk, d)
+    out = _flash.flash_attention_pallas(
+        qf, kf, vf,
+        group=group, heads_q=hq, heads_kv=hkv,
+        block_q=block_q, block_k=block_k,
+        causal=causal, q_offset=q_offset, interpret=interpret,
+    )
+    return out.reshape(b, hq, sq, d)
+
+
+# ---------------------------------------------------------------------------
+# fused MLP
+# ---------------------------------------------------------------------------
+
+
+def fused_mlp(
+    x: jax.Array,                  # (..., D)
+    w_gate: jax.Array | None,      # (D, F) | None
+    w_up: jax.Array,               # (D, F)
+    w_down: jax.Array,             # (F, D)
+    *,
+    act: str = "silu",
+    block_m: int | None = None,
+    block_f: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    interpret = _auto_interpret(interpret)
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    f = w_up.shape[1]
+    m = math.prod(lead) if lead else 1
+    x2 = x.reshape(m, d)
+
+    if block_m is None or block_f is None:
+        plan = plan_matmul_blocks(m=max(m, 8), k=d, n=max(f, 8))
+        block_m = block_m or _pick_block(m, plan.blocks["bm"])
+        block_f = block_f or _pick_block(f, plan.blocks["bn"])
+
+    out = _mlp.fused_mlp_pallas(
+        x2, w_gate, w_up, w_down,
+        block_m=block_m, block_f=block_f, act=act, interpret=interpret,
+    )
+    return out.reshape(*lead, d)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+
+
+def mamba2_ssd(
+    x: jax.Array,          # (B, L, H, P)
+    dt: jax.Array,         # (B, L, H)
+    a: jax.Array,          # (H,)
+    b_mat: jax.Array,      # (B, L, N)
+    c_mat: jax.Array,      # (B, L, N)
+    *,
+    init_state: jax.Array | None = None,
+    chunk: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    interpret = _auto_interpret(interpret)
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    if chunk is None:
+        chunk = _pick_block(l, 128)
+    assert l % chunk == 0, (l, chunk)
+    s0 = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+    return _ssd.mamba2_ssd_pallas(
+        x, dt, a, b_mat, c_mat, s0, chunk=chunk, interpret=interpret
+    )

@@ -1,0 +1,247 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels/ops are tested
+against (``tests/test_kernels.py`` sweeps shapes/dtypes and asserts
+allclose).  No Pallas, no tiling — straight dense math.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# conv2d (+ fused ReLU) — the paper's streaming conv oracle
+# ---------------------------------------------------------------------------
+
+
+def conv2d(
+    x: jax.Array,          # (B, H, W, C_in)
+    w: jax.Array,          # (KH, KW, C_in, C_out)
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    fuse_relu: bool = False,
+) -> jax.Array:
+    """NHWC conv; int8 inputs accumulate in int32 (paper's PTQ regime)."""
+    if x.dtype == jnp.int8:
+        acc_dtype = jnp.int32
+    else:
+        acc_dtype = jnp.float32
+    out = lax.conv_general_dilated(
+        x.astype(acc_dtype),
+        w.astype(acc_dtype),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if fuse_relu:
+        out = jnp.maximum(out, 0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# multi-head / grouped-query attention
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    q: jax.Array,          # (B, Hq, Sq, D)
+    k: jax.Array,          # (B, Hkv, Sk, D)
+    v: jax.Array,          # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """GQA attention oracle.  Hq must be a multiple of Hkv; q_offset is the
+    absolute position of q[0] (decode: q_offset = cache_len)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, g, sq, d)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :]
+        mask = qpos >= kpos
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused (optionally gated) MLP
+# ---------------------------------------------------------------------------
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    if name == "squared_relu":
+        r = jnp.maximum(x, 0.0)
+        return r * r
+    raise ValueError(name)
+
+
+def mlp(
+    x: jax.Array,            # (M, D)
+    w_gate: jax.Array | None,  # (D, F) or None for ungated
+    w_up: jax.Array,         # (D, F)
+    w_down: jax.Array,       # (F, D)
+    *,
+    act: str = "silu",
+) -> jax.Array:
+    """out = (act(x@Wg) * (x@Wu)) @ Wd, or act(x@Wu)@Wd when ungated.
+    Accumulation in fp32, cast back to x.dtype."""
+    xf = x.astype(jnp.float32)
+    up = xf @ w_up.astype(jnp.float32)
+    if w_gate is not None:
+        gate = _act(act, xf @ w_gate.astype(jnp.float32))
+        h = gate * up
+    else:
+        h = _act(act, up)
+    out = h @ w_down.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD (state-space duality), sequential-scan oracle
+# ---------------------------------------------------------------------------
+
+
+def ssd(
+    x: jax.Array,        # (B, L, H, P)
+    dt: jax.Array,       # (B, L, H)      softplus-activated step sizes
+    a: jax.Array,        # (H,)           negative decay rates (A = -exp(a_log))
+    b_mat: jax.Array,    # (B, L, N)      input gate (ngroups=1)
+    c_mat: jax.Array,    # (B, L, N)      output gate (ngroups=1)
+    *,
+    init_state: jax.Array | None = None,   # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Exact recurrence (arXiv:2405.21060 Eq. SSD):
+
+        S_t = exp(dt_t * a) * S_{t-1} + dt_t * x_t ⊗ b_t
+        y_t = S_t @ c_t
+
+    Returns (y (B,L,H,P), final_state (B,H,P,N)).  O(L) scan — oracle only.
+    """
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    s0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b_mat.astype(jnp.float32)
+    cf = c_mat.astype(jnp.float32)
+
+    def step(state, t):
+        dt_t = dtf[:, t]                          # (B, H)
+        decay = jnp.exp(dt_t * af[None, :])       # (B, H)
+        upd = jnp.einsum(
+            "bhp,bn->bhpn", xf[:, t] * dt_t[..., None], bf[:, t]
+        )
+        state = state * decay[..., None, None] + upd
+        y_t = jnp.einsum("bhpn,bn->bhp", state, cf[:, t])
+        return state, y_t
+
+    final, ys = lax.scan(step, s0, jnp.arange(l))
+    y = jnp.moveaxis(ys, 0, 1)                    # (B, L, H, P)
+    return y.astype(x.dtype), final
+
+
+def ssd_chunked(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b_mat: jax.Array,
+    c_mat: jax.Array,
+    *,
+    chunk: int = 16,
+    init_state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD (the algorithm the Pallas kernel implements): intra-chunk
+    quadratic term + inter-chunk state carry.  Must match :func:`ssd`."""
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert l % chunk == 0, "oracle requires chunk | L"
+    nc = l // chunk
+    xf = x.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h)
+    af = a.astype(jnp.float32)
+    bf = b_mat.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    cf = c_mat.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+
+    # per-position log decay within a chunk: cum_t = sum_{i<=t} dt_i * a
+    da = dtf * af[None, None, None, :]                 # (B,NC,Q,H)
+    cum = jnp.cumsum(da, axis=2)                       # inclusive
+    s0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+
+    def chunk_step(state, ci):
+        xq, dq, bq, cq = xf[:, ci], dtf[:, ci], bf[:, ci], cf[:, ci]
+        cumq = cum[:, ci]                              # (B,Q,H)
+        # intra-chunk: y_intra[t] = sum_{s<=t} exp(cum_t - cum_s) dt_s (c_t·b_s) x_s
+        rel = cumq[:, :, None, :] - cumq[:, None, :, :]      # (B,Q,Q,H) t,s
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        gate = jnp.where(tri[None, :, :, None], jnp.exp(rel), 0.0)
+        cb = jnp.einsum("btn,bsn->bts", cq, bq)              # (B,Q,Q)
+        w = cb[..., None] * gate * dq[:, None, :, :]          # (B,t,s,H)
+        y_intra = jnp.einsum("btsh,bshp->bthp", w, xq)
+        # inter-chunk: contribution of carried state
+        dec_t = jnp.exp(cumq)                                 # (B,Q,H)
+        y_inter = jnp.einsum(
+            "bqn,bhpn,bqh->bqhp", cq, state, dec_t
+        )
+        # state update: S' = exp(cum_Q) * S + sum_s exp(cum_Q - cum_s) dt_s x_s ⊗ b_s
+        dec_chunk = jnp.exp(cumq[:, -1])                      # (B,H)
+        carry_gate = jnp.exp(cumq[:, -1, None, :] - cumq)     # (B,Q,H)
+        upd = jnp.einsum(
+            "bqhp,bqn->bhpn", xq * (dq * carry_gate)[..., None], bq
+        )
+        state = state * dec_chunk[..., None, None] + upd
+        return state, y_intra + y_inter
+
+    final, ys = lax.scan(chunk_step, s0, jnp.arange(nc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, l, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(
+    state: jax.Array,    # (B, H, P, N)
+    x_t: jax.Array,      # (B, H, P)
+    dt_t: jax.Array,     # (B, H)
+    a: jax.Array,        # (H,)
+    b_t: jax.Array,      # (B, N)
+    c_t: jax.Array,      # (B, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Single-token recurrent step (decode path)."""
+    sf = state.astype(jnp.float32)
+    decay = jnp.exp(dt_t.astype(jnp.float32) * a.astype(jnp.float32)[None])
+    upd = jnp.einsum(
+        "bhp,bn->bhpn",
+        x_t.astype(jnp.float32) * dt_t.astype(jnp.float32)[..., None],
+        b_t.astype(jnp.float32),
+    )
+    new = sf * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new, c_t.astype(jnp.float32))
+    return y.astype(x_t.dtype), new

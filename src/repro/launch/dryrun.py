@@ -1,0 +1,467 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+# NOTE: the two lines above MUST run before any jax import — jax locks the
+# device count on first init.  Tests override via REPRO_DRYRUN_DEVICES by
+# exporting XLA_FLAGS themselves before spawning this module.
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh) cell this driver
+
+  1. builds the step function (train_step / prefill_step / decode_step),
+  2. derives in/out shardings from ``repro.distributed.sharding``,
+  3. ``jax.jit(...).lower(**ShapeDtypeStruct specs)`` — no allocation,
+  4. ``.compile()`` — GSPMD partitioning for the production mesh,
+  5. records ``memory_analysis()`` (fits-per-device proof),
+     ``cost_analysis()`` (XLA's FLOP/byte counts) and the trip-scaled
+     HLO statistics from ``repro.launch.hlo_analysis`` (dot FLOPs +
+     per-kind collective bytes — §Roofline's inputs),
+  6. writes one JSON artifact per cell under ``--out``.
+
+Meshes: ``single`` = (data=16, model=16) — one v5e pod, 256 chips;
+``multi`` = (pod=2, data=16, model=16) — 512 chips; the ``pod`` axis is
+the DCN-connected slow axis (gradient compression targets it).
+
+Usage::
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k --mesh single --out runs/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import math
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ModelConfig,
+    SHAPES,
+    ShapeConfig,
+    count_params,
+    shape_applicable,
+)
+from repro.configs.registry import all_archs, get_config
+from repro.distributed import sharding as shd
+from repro.distributed.ctx import activation_sharding
+from repro.launch import specs as S
+from repro.launch import steps as ST
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.optim import adamw
+
+# TPU v5e roofline constants (per chip)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+# ---------------------------------------------------------------------------
+# per-cell runtime knobs
+# ---------------------------------------------------------------------------
+
+
+def pick_grad_accum(cfg: ModelConfig, shape: ShapeConfig, dp: int,
+                    budget: int = 4 << 30) -> int:
+    """Microbatch count bounding per-device train memory.
+
+    Two terms scale with the microbatch: the remat-saved layer-boundary
+    activations (L × rows/ga × S × D × bf16) and the transient FFN/MoE
+    working set (rows/ga × S × ff_eff × bf16 × ~6 fusion copies).  ga is
+    the smallest power-of-2 divisor of the per-device rows keeping their
+    sum under ``budget`` (the earlier rows-only policy left yi-9b at
+    73 GiB/device — §Perf feasibility iteration)."""
+    rows = max(shape.global_batch // max(dp, 1), 1)
+    ff_eff = max(
+        cfg.d_ff,
+        2 * cfg.d_model,
+        (cfg.moe.top_k * cfg.d_ff) if cfg.moe else 0,
+        cfg.ssm.d_inner(cfg.d_model) * 2 if cfg.ssm else 0,
+    )
+    ga = 1
+    while ga < rows:
+        mrows = rows / ga
+        saved = cfg.num_layers * mrows * shape.seq_len * cfg.d_model * 2
+        work = mrows * shape.seq_len * ff_eff * 2 * 6
+        if cfg.moe:
+            # capacity-padded expert buffers (≈4 live copies through the
+            # expert FFN + backward)
+            work += (mrows * shape.seq_len * cfg.moe.top_k
+                     * cfg.moe.capacity_factor * cfg.d_model * 2 * 4)
+        if saved + work <= budget:
+            break
+        ga *= 2
+    return ga
+
+
+def runtime_config(cfg: ModelConfig, shape: ShapeConfig,
+                   baseline: bool = False) -> ModelConfig:
+    """Shape-dependent knobs for the production lowering.
+
+    ``baseline=True`` strips the beyond-paper optimizations (per-arch TP,
+    vocab padding) so §Perf can record faithful before/after pairs.
+    """
+    kw: dict = {}
+    # blockwise attention tiles: clamp to the sequence
+    kw["attn_block_q"] = min(cfg.attn_block_q, shape.seq_len)
+    kw["attn_block_k"] = min(cfg.attn_block_k, shape.seq_len)
+    if shape.kind != "train":
+        kw["remat"] = False
+    if baseline:
+        kw["pad_vocab_to"] = 0
+        kw["tp_preference"] = 0
+    elif shape.kind == "prefill" and shape.seq_len >= 32_768:
+        # §Perf iteration B2: the flash scan's (m, l, acc) carries round-
+        # trip HBM once per (qi, ki) step — nq·nk ∝ 1/block_k, so a wider
+        # k-tile cuts carry traffic linearly (score-tile bytes are ∝ S²
+        # and unaffected).  VMEM check: plan_attention_blocks admits
+        # (512, 2048) f32 tiles comfortably.
+        kw["attn_block_k"] = min(2048, shape.seq_len)
+    return cfg.with_(**kw)
+
+
+def pick_tp(cfg: ModelConfig, shape: ShapeConfig, chips: int) -> int:
+    """Shape-aware TP: start from the arch preference and widen until the
+    DP group divides the global batch (a dp group larger than the batch
+    replicates/pads every activation — §Perf iteration B1)."""
+    tp = cfg.tp_preference or 16
+    while tp < 16 and shape.global_batch % max(chips // tp, 1) != 0:
+        tp *= 2
+    return tp
+
+
+# ---------------------------------------------------------------------------
+# lowering one cell
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    *,
+    opt_overrides: dict | None = None,
+    baseline: bool = False,
+):
+    """Returns (lowered, compiled, meta) for one (arch, shape, mesh)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return None, None, {"skipped": True, "reason": reason}
+    cfg = runtime_config(cfg, shape, baseline=baseline)
+
+    dp = shd.axis_size(mesh, shd.dp_axes(mesh))
+    hook = shd.activation_hook(mesh)
+
+    with activation_sharding(hook):
+        params_shape = S.params_specs(cfg)
+        p_shard = shd.make_param_shardings(mesh, params_shape, cfg)
+
+        if shape.kind == "train":
+            ga = pick_grad_accum(cfg, shape, dp)
+            overrides = dict(opt_overrides or {})
+            # ≥30B params: int8 second moments (halves resident optimizer
+            # bytes; jamba-398B needs it to fit beside bf16 params)
+            if not baseline and count_params(cfg) > 30e9:
+                overrides.setdefault("quantize_moments", True)
+            opt_cfg = adamw.AdamWConfig(**overrides)
+            step = ST.make_train_step(cfg, opt_cfg, grad_accum=ga)
+            batch = S.train_input_specs(cfg, shape)
+            b_shard = shd.make_batch_shardings(mesh, batch)
+            opt_shape = jax.eval_shape(
+                lambda p: adamw.init(p, opt_cfg), params_shape
+            )
+            o_shard = shd.make_opt_shardings(mesh, opt_shape, p_shard)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),
+            )
+            with mesh:
+                lowered = jitted.lower(params_shape, opt_shape, batch)
+            meta = {"entry": "train_step", "grad_accum": ga}
+
+        elif shape.kind == "prefill":
+            step = ST.make_prefill_step(cfg)
+            batch = S.prefill_input_specs(cfg, shape)
+            b_shard = shd.make_batch_shardings(mesh, batch)
+            cache_shape = jax.eval_shape(
+                lambda p, b: step(p, b), params_shape, batch
+            )[1]
+            c_shard = shd.make_cache_shardings(mesh, cache_shape)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, b_shard),
+                out_shardings=(None, c_shard),
+            )
+            with mesh:
+                lowered = jitted.lower(params_shape, batch)
+            meta = {"entry": "prefill_step"}
+
+        else:  # decode
+            step = ST.make_decode_step(cfg)
+            d = S.decode_input_specs(cfg, shape)
+            c_shard = shd.make_cache_shardings(mesh, d["cache"])
+            t_shard = shd.make_batch_shardings(mesh, {"token": d["token"]})[
+                "token"
+            ]
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, c_shard, t_shard, None),
+                out_shardings=(None, c_shard),
+                donate_argnums=(1,),
+            )
+            with mesh:
+                lowered = jitted.lower(
+                    params_shape, d["cache"], d["token"], d["pos"]
+                )
+            meta = {"entry": "decode_step"}
+
+    compiled = lowered.compile()
+    return lowered, compiled, meta
+
+
+# ---------------------------------------------------------------------------
+# roofline terms from the compiled artifact
+# ---------------------------------------------------------------------------
+
+
+def roofline_report(
+    arch: str, shape_name: str, compiled, meta: dict, chips: int
+) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_report = {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_report = {"error": str(e)}
+
+    hlo = analyze_hlo(compiled.as_text())
+
+    # --- the three roofline terms (per-device seconds) ----------------------
+    # HLO FLOPs: trip-scaled dot+conv FLOPs over the whole program; that is
+    # the global count, so divide by chips for per-device work (GSPMD SPMD:
+    # the HLO is already per-device — dims are the sharded local sizes —
+    # so NO division is applied; see EXPERIMENTS.md §Roofline method).
+    flops = hlo.flops
+    hbm_bytes = hlo.memory_bytes
+    coll_bytes = hlo.total_collective_bytes
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+
+    # model FLOPs (useful work): 6·N·D train / 2·N·D inference per token.
+    # Enc-dec: the encoder stack sees seq_len frames but the decoder only
+    # seq_len/4 targets — weight each stack by its own token count.
+    n_active = count_params(cfg, active_only=cfg.moe is not None)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    if cfg.family == "encdec":
+        from repro.launch.specs import ENCDEC_DEC_FRAC
+
+        frac = cfg.enc_layers / (cfg.enc_layers + cfg.dec_layers)
+        if shape.kind == "train":
+            dec_tokens = shape.global_batch * max(
+                shape.seq_len // ENCDEC_DEC_FRAC, 16
+            )
+            enc_tokens = shape.global_batch * shape.seq_len
+        elif shape.kind == "prefill":
+            enc_tokens = shape.global_batch * shape.seq_len
+            dec_tokens = shape.global_batch
+        else:
+            enc_tokens = 0
+            dec_tokens = shape.global_batch
+        model_flops = mult * n_active * (
+            frac * enc_tokens + (1 - frac) * dec_tokens
+        )
+        tokens = enc_tokens + dec_tokens
+    elif shape.kind in ("train", "prefill"):
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = mult * n_active * tokens
+    else:
+        tokens = shape.global_batch  # one token per sequence
+        model_flops = mult * n_active * tokens
+    model_flops_per_chip = model_flops / chips
+
+    cache_bytes = 0
+    if shape.kind == "decode":
+        cache_shape = jax.eval_shape(
+            lambda: ST.model_init_cache(cfg, shape.global_batch, shape.seq_len)
+        )
+        cache_bytes = sum(
+            math.prod(x.shape) * x.dtype.itemsize
+            for x in jax.tree.leaves(cache_shape)
+        )
+
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    mfu = model_flops_per_chip / PEAK_FLOPS / bound_s if bound_s > 0 else 0.0
+
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "chips": chips,
+        "entry": meta.get("entry"),
+        "grad_accum": meta.get("grad_accum"),
+        "params_total": count_params(cfg),
+        "params_active": n_active,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": hbm_bytes,
+        "collective_bytes_per_device": coll_bytes,
+        "collective_by_kind": dict(hlo.collective_bytes),
+        "collective_counts": dict(hlo.collective_counts),
+        "traffic_by_shape": {
+            f"{dt}[{','.join(map(str, dims))}]": b
+            for (dt, dims), b in sorted(
+                hlo.traffic_by_shape.items(), key=lambda kv: -kv[1]
+            )[:24]
+        },
+        "collective_by_shape": {
+            f"{kind} {dt}[{','.join(map(str, dims))}]": b
+            for (kind, dt, dims), b in sorted(
+                hlo.collective_by_shape.items(), key=lambda kv: -kv[1]
+            )[:16]
+        },
+        **terms,
+        "dominant": dominant,
+        "bound_s": bound_s,
+        "model_flops_total": model_flops,
+        "model_flops_per_chip": model_flops_per_chip,
+        "cache_bytes": cache_bytes,
+        "useful_flops_ratio": (model_flops_per_chip / flops) if flops else 0.0,
+        "roofline_mfu": mfu,
+        "xla_cost_analysis": {
+            k: float(v)
+            for k, v in cost.items()
+            if k in ("flops", "bytes accessed", "transcendentals")
+        },
+        "memory_analysis": mem_report,
+    }
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             *, baseline: bool = False) -> dict:
+    multi = mesh_kind == "multi"
+    if baseline or os.environ.get("REPRO_MESH_SHAPE"):
+        tp = 0  # baseline mesh / explicit test meshes
+    else:
+        chips = 512 if multi else 256
+        tp = pick_tp(get_config(arch), SHAPES[shape_name], chips)
+        tp = 0 if tp == 16 else tp
+    mesh = make_production_mesh(multi_pod=multi, tp=tp)
+    chips = math.prod(mesh.devices.shape)
+    t0 = time.time()
+    try:
+        lowered, compiled, meta = lower_cell(arch, shape_name, mesh,
+                                             baseline=baseline)
+    except Exception as e:
+        rec = {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": mesh_kind,
+            "ok": False,
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-2000:],
+        }
+        _write(out_dir, arch, shape_name, mesh_kind, rec)
+        return rec
+    if compiled is None:  # recorded skip
+        rec = {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": mesh_kind,
+            "ok": True,
+            **meta,
+        }
+        _write(out_dir, arch, shape_name, mesh_kind, rec)
+        return rec
+    rec = roofline_report(arch, shape_name, compiled, meta, chips)
+    rec.update(
+        {
+            "mesh": mesh_kind,
+            "mesh_shape": list(mesh.devices.shape),
+            "ok": True,
+            "skipped": False,
+            "compile_s": time.time() - t0,
+        }
+    )
+    _write(out_dir, arch, shape_name, mesh_kind, rec)
+    return rec
+
+
+def _write(out_dir: str, arch: str, shape: str, mesh_kind: str, rec: dict):
+    os.makedirs(out_dir, exist_ok=True)
+    safe = arch.replace(".", "_").replace("/", "_")
+    path = os.path.join(out_dir, f"{safe}__{shape}__{mesh_kind}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[*SHAPES, None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--baseline", action="store_true",
+                    help="strip beyond-paper optimizations (per-arch TP, "
+                         "vocab padding) for §Perf before/after pairs")
+    args = ap.parse_args(argv)
+
+    archs = all_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape_name, mesh_kind, args.out,
+                               baseline=args.baseline)
+                if rec.get("skipped"):
+                    status = f"SKIP ({rec['reason'][:48]}...)"
+                elif rec["ok"]:
+                    status = (
+                        f"ok {rec['compile_s']:6.1f}s dom={rec['dominant']}"
+                        f" mfu={rec['roofline_mfu']:.3f}"
+                    )
+                else:
+                    status = f"FAIL {rec['error'][:90]}"
+                    n_fail += 1
+                print(f"[dryrun] {arch:22s} {shape_name:12s} {mesh_kind:6s} {status}",
+                      flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

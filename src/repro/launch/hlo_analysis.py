@@ -1,0 +1,435 @@
+"""HLO-text analysis for the roofline (EXPERIMENTS.md §Roofline).
+
+``compiled.cost_analysis()`` counts a ``while`` body **once**, so with
+scan-over-layers every per-layer cost is undercounted by the trip count
+(verified empirically in this repo: a 24-step scanned matmul reports
+1/24 of the analytic FLOPs).  This module parses ``compiled.as_text()``
+directly and:
+
+  1. splits the module into computations,
+  2. recovers every while loop's trip count from its condition
+     computation (the ``s32[] constant(N)`` feeding the LT compare —
+     the canonical lax.scan lowering),
+  3. propagates multipliers through the call graph
+     (while bodies ×trip, call/fusion/conditional ×1),
+  4. sums trip-scaled **dot/convolution FLOPs** and trip-scaled
+     **collective bytes** per collective kind.
+
+Collective byte convention (per-device bytes moved, ring algorithms):
+  all-reduce ≈ 2×size, all-gather ≈ result size, reduce-scatter ≈
+  operand size, all-to-all ≈ size, collective-permute ≈ size.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(.*)?\{?\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+#: opcodes treated as HBM-materialization boundaries for the memory-term
+#: proxy: XLA keeps fusion-internal values in registers/VMEM; data crosses
+#: HBM at fusion/dot/conv/copy/collective/cache-update boundaries.  This
+#: mirrors how TPU cost models charge bytes (operands + results of
+#: top-level ops); CPU fusion granularity differs from TPU — documented
+#: approximation (EXPERIMENTS.md §Roofline method).
+MEM_OPS = frozenset({
+    "fusion", "dot", "convolution", "copy", "copy-start",
+    "dynamic-update-slice", "dynamic-slice", "gather", "scatter",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "reduce", "sort", "transpose",
+    "concatenate", "slice", "pad", "reverse", "select-and-scatter",
+})
+# Deliberately excluded: elementwise ops (add/mul/exp/...), broadcast,
+# iota, convert, reshape, bitcast — on TPU these fuse into neighbours, so
+# their traffic is already charged at the producer/consumer boundaries;
+# counting them separately would double-charge relative to a TPU build.
+
+_OPCODE_RE = re.compile(r"^(?:\([^)]*\)|\S+)\s+([a-z][a-z0-9\-]*)\(")
+
+
+def _opcode(rhs: str) -> str | None:
+    m = _OPCODE_RE.match(rhs)
+    return m.group(1) if m else None
+
+
+def _operand_names(rhs: str) -> list[str]:
+    """Operand tokens inside the first balanced paren group."""
+    i = rhs.find("(")
+    if i < 0:
+        return []
+    depth = 0
+    j = i
+    for j in range(i, len(rhs)):
+        if rhs[j] == "(":
+            depth += 1
+        elif rhs[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    inner = rhs[i + 1 : j]
+    return [t.lstrip("%") for t in re.findall(r"%?[\w\.\-]+", inner)]
+
+
+def _result_bytes(rhs: str) -> int:
+    """Bytes of the instruction's result (the type prefix of the rhs)."""
+    i = rhs.find("(")
+    m = _OPCODE_RE.match(rhs)
+    if m:
+        prefix = rhs[: m.start(1)]
+    elif i >= 0:
+        prefix = rhs[:i]
+    else:
+        prefix = rhs
+    return _shape_bytes(prefix)
+
+_COLLECTIVE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of all arrays in an HLO type string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> tuple[str, list[int]] | None:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dtype, dims = m.groups()
+    return dtype, [int(d) for d in dims.split(",") if d]
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: list[str] = field(default_factory=list)
+    # instruction name -> full rhs text
+    instrs: dict = field(default_factory=dict)
+
+
+def split_computations(hlo_text: str) -> dict[str, Computation]:
+    """Header heuristic robust to the post-2024 dump format: signatures
+    carry ``/*index=N*/`` comments (so '=' may precede the '{'), and the
+    module prolog has FileNames/FunctionNames metadata sections whose
+    numbered lines start at column 0 (they end with '}' not '{')."""
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped:
+            continue
+        # computation header: "%name (params...) -> type {" or "ENTRY ..."
+        if (
+            not line.startswith(" ")
+            and stripped.endswith("{")
+            and not stripped.startswith("HloModule")
+        ):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            cur.lines.append(stripped)
+            mi = _INSTR_RE.match(stripped)
+            if mi:
+                cur.instrs[mi.group(1)] = mi.group(2)
+    return comps
+
+
+def _find_trip_count(cond_name: str, comps: dict[str, Computation]) -> int:
+    """Max s32 constant in the condition computation subtree (the scan
+    bound).  Falls back to 1 when nothing is found."""
+    seen: set[str] = set()
+    stack = [cond_name]
+    best = 1
+    while stack:
+        name = stack.pop()
+        if name in seen or name not in comps:
+            continue
+        seen.add(name)
+        comp = comps[name]
+        for line in comp.lines:
+            for m in re.finditer(r"s32\[\]\s+constant\((\d+)\)", line):
+                best = max(best, int(m.group(1)))
+            for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", line):
+                stack.append(m.group(1))
+    return best
+
+
+def _call_edges(comp: Computation) -> list[tuple[str, int]]:
+    """(callee, multiplier) pairs for one computation."""
+    edges: list[tuple[str, int]] = []
+    for line in comp.lines:
+        if " while(" in line:
+            body = re.search(r"body=%?([\w\.\-]+)", line)
+            cond = re.search(r"condition=%?([\w\.\-]+)", line)
+            if body:
+                edges.append((body.group(1), -1))  # -1 → resolve via cond
+                if cond:
+                    edges[-1] = (body.group(1), ("COND", cond.group(1)))
+            continue
+        for m in re.finditer(r"(?:calls|to_apply|branch_computations)=\{?%?([\w\.\-,% ]+)\}?", line):
+            for callee in re.split(r"[,\s]+", m.group(1)):
+                callee = callee.strip().lstrip("%")
+                if callee:
+                    edges.append((callee, 1))
+    return edges
+
+
+def computation_multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    """Multiplier per computation = product of enclosing loop trip counts."""
+    entry = None
+    for name in comps:
+        if name in ("main", "main.0") or name.startswith("main"):
+            entry = name
+            break
+    if entry is None:  # fall back: computation not called by anyone
+        called = set()
+        for c in comps.values():
+            for callee, _ in _call_edges(c):
+                if isinstance(callee, str):
+                    called.add(callee)
+        roots = [n for n in comps if n not in called]
+        entry = roots[0] if roots else next(iter(comps))
+
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # BFS through call graph (acyclic in HLO)
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for callee, kind in _call_edges(comp):
+            m = mult[name]
+            if isinstance(kind, tuple) and kind[0] == "COND":
+                trip = _find_trip_count(kind[1], comps)
+                m = m * trip
+                # also mark the cond computation itself (cheap, but visit)
+                if kind[1] not in seen:
+                    mult[kind[1]] = max(mult[kind[1]], mult[name])
+                    seen.add(kind[1])
+                    order.append(kind[1])
+            mult[callee] = max(mult[callee], m)
+            if callee not in seen:
+                seen.add(callee)
+                order.append(callee)
+    return dict(mult)
+
+
+# ---------------------------------------------------------------------------
+# FLOPs from dot / convolution instructions
+# ---------------------------------------------------------------------------
+
+
+def _dot_flops(rhs: str, comp: Computation) -> float:
+    """2 × prod(result_dims) × prod(contracted lhs dims)."""
+    res = _shape_dims(rhs)
+    if res is None:
+        return 0.0
+    _, out_dims = res
+    # operand names
+    m = re.search(r"dot\(\s*%?([\w\.\-]+)", rhs)
+    if not m:
+        return 0.0
+    lhs_name = m.group(1)
+    lhs_rhs = comp.instrs.get(lhs_name, "")
+    # the instruction rhs begins with its result type, e.g.
+    # "bf16[128,256]{1,0} get-tuple-element(...), index=1"
+    lhs_shape = _shape_dims(lhs_rhs)
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+    contracted = 1
+    if lhs_shape and cdims and cdims.group(1):
+        _, ldims = lhs_shape
+        for ci in cdims.group(1).split(","):
+            ci = int(ci)
+            if ci < len(ldims):
+                contracted *= ldims[ci]
+    out = 1
+    for d in out_dims:
+        out *= d
+    return 2.0 * out * contracted
+
+
+def _conv_flops(rhs: str) -> float:
+    res = _shape_dims(rhs)
+    if res is None:
+        return 0.0
+    _, out_dims = res
+    m = re.search(r"window=\{size=([\dx]+)", rhs)
+    win = 1
+    if m:
+        for d in m.group(1).split("x"):
+            win *= int(d)
+    # feature contraction dim not in text reliably; approximate with
+    # operand parse
+    mm = re.search(r"convolution\(\s*%?([\w\.\-]+)\s*,\s*%?([\w\.\-]+)", rhs)
+    cin = 1
+    return 2.0 * math.prod(out_dims) * win * cin
+
+
+@dataclass
+class HloStats:
+    dot_flops: float = 0.0
+    conv_flops: float = 0.0
+    memory_bytes: float = 0.0
+    collective_bytes: dict = field(default_factory=lambda: defaultdict(float))
+    collective_counts: dict = field(default_factory=lambda: defaultdict(int))
+    loop_trips: dict = field(default_factory=dict)
+    # traffic attribution: (dtype, last-two result dims) -> bytes.  Lets
+    # the roofline slice e.g. the (512, 512) f32 attention score tiles
+    # that a VMEM-resident Pallas kernel would never send to HBM.
+    traffic_by_shape: dict = field(default_factory=lambda: defaultdict(float))
+    # collective attribution: (kind, dtype, full dims) -> bytes
+    collective_by_shape: dict = field(
+        default_factory=lambda: defaultdict(float)
+    )
+
+    @property
+    def flops(self) -> float:
+        return self.dot_flops + self.conv_flops
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def summary(self) -> dict:
+        return {
+            "dot_flops": self.dot_flops,
+            "conv_flops": self.conv_flops,
+            "memory_bytes": self.memory_bytes,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_counts": dict(self.collective_counts),
+            "total_collective_bytes": self.total_collective_bytes,
+            "loop_trips": self.loop_trips,
+        }
+
+
+def _fusion_bodies(comps: dict[str, Computation]) -> set[str]:
+    """Computations called via ``calls=`` (fusion bodies) or ``to_apply=``
+    (reduce/map/collective reducers): their internal instructions are not
+    HBM boundaries — only the calling op is."""
+    out: set[str] = set()
+    for comp in comps.values():
+        for rhs in comp.instrs.values():
+            for m in re.finditer(r"(?:calls|to_apply)=\{?%?([\w\.\-]+)", rhs):
+                out.add(m.group(1))
+    return out
+
+
+def _instr_memory_bytes(op: str, rhs: str, comp: Computation) -> float:
+    """HBM traffic of one boundary instruction.
+
+    dynamic-update-slice (and fusions rooted in one) alias their big
+    operand in place — XLA writes only the update region, so charging the
+    full buffer would overcount by orders of magnitude.  Charge
+    2 × (operands − largest operand) ≈ read update + write region.
+    dynamic-slice reads the sliced region and writes the result: 2×result.
+    """
+    res = _result_bytes(rhs)
+    operands = []
+    for operand in _operand_names(rhs):
+        src = comp.instrs.get(operand)
+        if src is not None:
+            operands.append(_result_bytes(src))
+    # jax-lowered in-place cache/accumulator updates keep the marker in
+    # the XLA-generated fusion name (…dynamic-update-slice_fusion.N)
+    in_place = op == "dynamic-update-slice" or (
+        op == "fusion" and "dynamic-update-slice" in rhs
+    )
+    if in_place and operands:
+        small = sum(operands) - max(operands)
+        return 2.0 * small
+    if op == "dynamic-slice":
+        return 2.0 * res
+    return res + sum(operands)
+
+
+def analyze_hlo(hlo_text: str) -> HloStats:
+    comps = split_computations(hlo_text)
+    mult = computation_multipliers(comps)
+    bodies = _fusion_bodies(comps)
+    stats = HloStats()
+    for name, comp in comps.items():
+        m = mult.get(name, 1.0)
+        inside_fusion = name in bodies
+        for iname, rhs in comp.instrs.items():
+            op = _opcode(rhs)
+            if op == "dot":
+                stats.dot_flops += m * _dot_flops(rhs, comp)
+            elif op == "convolution":
+                stats.conv_flops += m * _conv_flops(rhs)
+            else:
+                for kind in COLLECTIVE_KINDS:
+                    # match "all-reduce(" and "all-reduce-start("
+                    if op == kind or op == f"{kind}-start":
+                        prefix = rhs.split(kind)[0]
+                        size = _shape_bytes(prefix)
+                        b = m * size * _COLLECTIVE_FACTOR[kind]
+                        stats.collective_bytes[kind] += b
+                        stats.collective_counts[kind] += 1
+                        sd = _shape_dims(prefix)
+                        if sd is not None:
+                            stats.collective_by_shape[
+                                (kind, sd[0], tuple(sd[1]))
+                            ] += b
+                        break
+            # memory-traffic proxy: operands + result of HBM-boundary ops
+            if op in MEM_OPS and not op.endswith("-start") and not inside_fusion:
+                b = _instr_memory_bytes(op, rhs, comp)
+                stats.memory_bytes += m * b
+                sd = _shape_dims(rhs)
+                if sd is not None:
+                    dtype, dims = sd
+                    key = (dtype, tuple(dims[-2:]))
+                    stats.traffic_by_shape[key] += m * b
+    # record recovered trip counts for the report
+    for name, comp in comps.items():
+        for line in comp.lines:
+            if " while(" in line:
+                cond = re.search(r"condition=%?([\w\.\-]+)", line)
+                if cond:
+                    stats.loop_trips[cond.group(1)] = _find_trip_count(
+                        cond.group(1), comps
+                    )
+    return stats

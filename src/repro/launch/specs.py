@@ -1,0 +1,100 @@
+"""ShapeDtypeStruct input specs for every (architecture × shape) cell.
+
+The dry-run lowers against these — weak-type-correct, shardable, zero
+device allocation.  The same specs shape the real batches produced by
+``repro.data.pipeline`` (asserted in tests/test_dryrun_smoke.py), so a
+dry-run-validated cell is guaranteed to accept real data.
+
+Shape semantics (assignment + DESIGN.md §4):
+  train_4k     — train_step on (global_batch, seq_len)
+  prefill_32k  — prefill_step on (global_batch, seq_len)
+  decode_32k   — decode_step: ONE new token against a seq_len KV cache
+  long_500k    — decode_step at 524,288 (sub-quadratic archs only)
+
+Encoder–decoder mapping: train = enc seq_len frames + seq_len/4 decoder
+targets; prefill = encode seq_len frames + first token; decode = one
+decoder token against a seq_len cross memory + seq_len self cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, lm
+from . import steps
+
+SDS = jax.ShapeDtypeStruct
+
+#: decoder targets per encoder frame (seamless: text tokens much shorter
+#: than audio frames)
+ENCDEC_DEC_FRAC = 4
+
+
+def _i32(shape):
+    return SDS(shape, jnp.int32)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Batch pytree for ``train_step`` (tokens or stub embeddings)."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        s_dec = max(s // ENCDEC_DEC_FRAC, 16)
+        return {
+            "frames": SDS((b, s, cfg.d_model), cfg.param_dtype),
+            "tokens": _i32((b, s_dec)),
+            "labels": _i32((b, s_dec)),
+        }
+    out: dict = {"labels": _i32((b, s))}
+    if cfg.embeds_input:
+        out["embeds"] = SDS((b, s, cfg.d_model), cfg.param_dtype)
+        if cfg.mrope_sections:
+            out["mrope_positions"] = _i32((3, b, s))
+    else:
+        out["tokens"] = _i32((b, s))
+    return out
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return {"frames": SDS((b, s, cfg.d_model), cfg.param_dtype)}
+    out: dict = {}
+    if cfg.embeds_input:
+        out["embeds"] = SDS((b, s, cfg.d_model), cfg.param_dtype)
+        if cfg.mrope_sections:
+            out["mrope_positions"] = _i32((3, b, s))
+    else:
+        out["tokens"] = _i32((b, s))
+    return out
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """{"cache", "token", "pos"} — one-token step against a seq_len cache."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        lambda: steps.model_init_cache(cfg, b, s)
+    )
+    if cfg.embeds_input and cfg.family != "encdec":
+        token = SDS((b, 1, cfg.d_model), cfg.param_dtype)
+    else:
+        token = _i32((b,))
+    return {"cache": cache, "token": token, "pos": SDS((), jnp.int32)}
+
+
+def params_specs(cfg: ModelConfig, key=None) -> dict:
+    """Abstract params pytree (no allocation)."""
+    k = jax.random.key(0) if key is None else key
+    return jax.eval_shape(lambda: steps.model_init(k, cfg))
+
+
+def entry_for(cfg: ModelConfig, shape: ShapeConfig):
+    """(kind, step_factory, input_spec_fn) for one cell."""
+    if shape.kind == "train":
+        return "train"
+    if shape.kind == "prefill":
+        return "prefill"
+    return "decode"

@@ -1,0 +1,151 @@
+"""Step functions (pure, jit-able) shared by the trainer, the server and
+the multi-pod dry-run.
+
+Every entry point is a pure function of explicit state — the contract
+that makes them shardable with ``jax.jit(in_shardings=..., donate=...)``
+and checkpoint/restart-safe:
+
+  ``train_step(params, opt_state, batch) -> (params, opt_state, metrics)``
+  ``prefill_step(params, batch)          -> (logits, caches)``
+  ``decode_step(params, cache, token, pos) -> (logits, cache)``
+
+Model-family dispatch (decoder-only LM vs encoder–decoder) happens here,
+so the launchers stay family-agnostic.  Gradient accumulation is a
+``lax.scan`` over microbatches — the standard way to keep per-device
+activation memory bounded at large (batch × seq) without touching the
+model code (used by jamba-398B train_4k in the dry-run; see
+EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, lm
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# family dispatch
+# ---------------------------------------------------------------------------
+
+
+def model_loss(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    if cfg.family == "encdec":
+        return encdec.encdec_loss(params, cfg, batch)
+    return lm.lm_loss(params, cfg, batch)
+
+
+def model_init(key, cfg: ModelConfig) -> dict:
+    if cfg.family == "encdec":
+        return encdec.init_params(key, cfg)
+    return lm.init_params(key, cfg)
+
+
+def model_prefill(params: dict, cfg: ModelConfig, batch: dict):
+    if cfg.family == "encdec":
+        return encdec.encdec_prefill(params, cfg, batch)
+    return lm.lm_prefill(params, cfg, batch)
+
+
+def model_decode(params: dict, cfg: ModelConfig, cache, token, pos):
+    if cfg.family == "encdec":
+        return encdec.encdec_decode(params, cfg, cache, token, pos)
+    return lm.lm_decode(params, cfg, cache, token, pos)
+
+
+def model_init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family == "encdec":
+        return encdec.init_cache(cfg, batch, mem_len=max_len, max_len=max_len)
+    return lm.init_cache(cfg, batch, max_len)
+
+
+# ---------------------------------------------------------------------------
+# gradient accumulation helpers
+# ---------------------------------------------------------------------------
+
+#: batch leaves whose microbatch split axis is not 0
+_SPLIT_AXIS = {"mrope_positions": 1}
+
+
+def _split_microbatches(batch: dict, accum: int) -> dict:
+    def re(path, x):
+        name = str(getattr(path[-1], "key", path[-1]))
+        ax = _SPLIT_AXIS.get(name, 0)
+        b = x.shape[ax]
+        assert b % accum == 0, (name, b, accum)
+        new = x.shape[:ax] + (accum, b // accum) + x.shape[ax + 1 :]
+        x = x.reshape(new)
+        return jnp.moveaxis(x, ax, 0)  # accum leading for lax.scan
+
+    return jax.tree_util.tree_map_with_path(re, batch)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.AdamWConfig,
+    *,
+    grad_accum: int = 1,
+) -> Callable:
+    """Forward + backward + AdamW update, optionally microbatched."""
+
+    def loss_fn(params, mb):
+        return model_loss(params, cfg, mb)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = _split_microbatches(batch, grad_accum)
+
+            def mb_step(carry, mb):
+                acc_loss, acc_g = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc_g = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc_g, g
+                )
+                return (acc_loss + l, acc_g), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = lax.scan(
+                mb_step, (jnp.zeros((), jnp.float32), zeros), mbs
+            )
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+
+        params, opt_state, metrics = adamw.apply(params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        return model_prefill(params, cfg, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, cache, token, pos):
+        return model_decode(params, cfg, cache, token, pos)
+
+    return decode_step

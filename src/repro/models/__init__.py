@@ -1,0 +1,1 @@
+"""Model zoo: decoder-only LM families + encoder-decoder backbone."""

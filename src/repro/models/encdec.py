@@ -1,0 +1,214 @@
+"""Encoder–decoder backbone (seamless-m4t style; frontend stubbed).
+
+The speech/text frontend is a stub per the assignment: ``input_specs``
+supplies precomputed frame embeddings (B, T, D).  The transformer
+backbone is real: a bidirectional encoder stack + a causal decoder stack
+with cross-attention over the encoder memory.  Cross-attention streams
+the (fixed) memory exactly like a line buffer — K/V computed once at
+prefill and reused each decode step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.ctx import shard_activation
+from . import layers as L
+from .lm import chunked_ce_loss
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_enc_block(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    d, dt = cfg.d_model, cfg.param_dtype
+    return {
+        "ln1": jnp.ones((d,), dt),
+        "attn": L.init_attention(k1, cfg),
+        "ln2": jnp.ones((d,), dt),
+        "mlp": L.init_mlp(k2, cfg),
+    }
+
+
+def _init_dec_block(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, dt = cfg.d_model, cfg.param_dtype
+    return {
+        "ln1": jnp.ones((d,), dt),
+        "self_attn": L.init_attention(k1, cfg),
+        "ln_x": jnp.ones((d,), dt),
+        "cross_attn": L.init_attention(k2, cfg),
+        "ln2": jnp.ones((d,), dt),
+        "mlp": L.init_mlp(k3, cfg),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ke, kd, kemb, kh = jax.random.split(key, 4)
+    d, v, dt = cfg.d_model, cfg.vocab_size, cfg.param_dtype
+    enc = jax.vmap(lambda k: _init_enc_block(k, cfg))(
+        jax.random.split(ke, cfg.enc_layers)
+    )
+    dec = jax.vmap(lambda k: _init_dec_block(k, cfg))(
+        jax.random.split(kd, cfg.dec_layers)
+    )
+    return {
+        "encoder": {"blocks": enc, "final_norm": jnp.ones((d,), dt)},
+        "decoder": {"blocks": dec, "final_norm": jnp.ones((d,), dt)},
+        "embed": L.dense_init(kemb, (v, d), dt, scale=0.02),
+        "lm_head": L.dense_init(kh, (d, v), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, T, D) stub embeddings → encoder memory (B, T, D)."""
+    h = shard_activation(frames.astype(cfg.param_dtype), "hidden")
+    bsz, t = h.shape[0], h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (bsz, t))
+
+    def body(hh, p):
+        a, _ = L.attention_layer(
+            p["attn"], cfg, L.rmsnorm(hh, p["ln1"], cfg.norm_eps), positions,
+            causal=False,
+        )
+        hh = hh + a
+        hh = hh + L.mlp_layer(p["mlp"], cfg,
+                              L.rmsnorm(hh, p["ln2"], cfg.norm_eps))
+        return shard_activation(hh, "hidden"), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = lax.scan(body, h, params["encoder"]["blocks"])
+    return L.rmsnorm(h, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+
+
+def _cross_kv(p: dict, cfg: ModelConfig, memory: jax.Array):
+    hd = cfg.resolved_head_dim
+    k = memory @ p["wk"]
+    v = memory @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(*memory.shape[:2], cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(*memory.shape[:2], cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def decode_train(
+    params: dict, cfg: ModelConfig, memory: jax.Array, tokens: jax.Array
+) -> jax.Array:
+    """Teacher-forced decoder forward: (B, S) tokens → hidden (B, S, D)."""
+    h = shard_activation(params["embed"][tokens], "hidden")
+    bsz, s = h.shape[0], h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (bsz, s))
+
+    def body(hh, p):
+        a, _ = L.attention_layer(
+            p["self_attn"], cfg, L.rmsnorm(hh, p["ln1"], cfg.norm_eps),
+            positions, causal=True,
+        )
+        hh = hh + a
+        ck, cv = _cross_kv(p["cross_attn"], cfg, memory)
+        c, _ = L.attention_layer(
+            p["cross_attn"], cfg, L.rmsnorm(hh, p["ln_x"], cfg.norm_eps),
+            positions, causal=False, kv_override=(ck, cv),
+        )
+        hh = hh + c
+        hh = hh + L.mlp_layer(p["mlp"], cfg,
+                              L.rmsnorm(hh, p["ln2"], cfg.norm_eps))
+        return shard_activation(hh, "hidden"), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = lax.scan(body, h, params["decoder"]["blocks"])
+    return L.rmsnorm(h, params["decoder"]["final_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def encdec_loss(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    memory = encode(params, cfg, batch["frames"])
+    h = decode_train(params, cfg, memory, batch["tokens"])
+    return chunked_ce_loss(h, params["lm_head"], batch["labels"],
+                           cfg.loss_chunk,
+                           streaming_bwd=cfg.loss_streaming_bwd)
+
+
+def encdec_prefill(params: dict, cfg: ModelConfig, batch: dict):
+    """Encode + cache cross-K/V per decoder layer + first-token logits."""
+    memory = encode(params, cfg, batch["frames"])
+
+    def per_layer(p):
+        return _cross_kv(p["cross_attn"], cfg, memory)
+
+    ck, cv = jax.vmap(per_layer)(params["decoder"]["blocks"])
+    bsz = memory.shape[0]
+    bos = jnp.zeros((bsz,), jnp.int32)
+    hd = cfg.resolved_head_dim
+    self_k = jnp.zeros(
+        (cfg.dec_layers, bsz, cfg.num_kv_heads, 1, hd), cfg.param_dtype
+    )
+    cache = {"ck": ck, "cv": cv, "k": self_k, "v": self_k}
+    logits, cache = encdec_decode(params, cfg, cache, bos,
+                                  jnp.zeros((), jnp.int32))
+    return logits, cache
+
+
+def encdec_decode(
+    params: dict,
+    cfg: ModelConfig,
+    cache: dict,     # {"ck","cv": (Ld,B,Hkv,T,hd), "k","v": (Ld,B,Hkv,S,hd)}
+    token: jax.Array,    # (B,)
+    pos: jax.Array,      # ()
+):
+    h = params["embed"][token][:, None, :]
+
+    def body(hh, xs):
+        p, ck, cv, sk, sv = xs
+        a, nk, nv = L.attention_decode(
+            p["self_attn"], cfg, L.rmsnorm(hh, p["ln1"], cfg.norm_eps),
+            pos, sk, sv,
+        )
+        hh = hh + a
+        c, _, _ = L.attention_decode(
+            p["cross_attn"], cfg, L.rmsnorm(hh, p["ln_x"], cfg.norm_eps),
+            pos, ck, cv, cross=True,
+        )
+        hh = hh + c
+        hh = hh + L.mlp_layer(p["mlp"], cfg,
+                              L.rmsnorm(hh, p["ln2"], cfg.norm_eps))
+        return hh, (nk, nv)
+
+    h, (nk, nv) = lax.scan(
+        body, h,
+        (params["decoder"]["blocks"], cache["ck"], cache["cv"],
+         cache["k"], cache["v"]),
+    )
+    h = L.rmsnorm(h, params["decoder"]["final_norm"], cfg.norm_eps)
+    logits = (h[:, 0] @ params["lm_head"]).astype(jnp.float32)
+    return logits, {"ck": cache["ck"], "cv": cache["cv"], "k": nk, "v": nv}
+
+
+def init_cache(cfg: ModelConfig, batch: int, mem_len: int, max_len: int):
+    hd = cfg.resolved_head_dim
+    dt = cfg.param_dtype
+    kv = jnp.zeros((cfg.dec_layers, batch, cfg.num_kv_heads, max_len, hd), dt)
+    ckv = jnp.zeros((cfg.dec_layers, batch, cfg.num_kv_heads, mem_len, hd), dt)
+    return {"ck": ckv, "cv": ckv, "k": kv, "v": kv}

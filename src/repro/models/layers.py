@@ -1,0 +1,554 @@
+"""Transformer building blocks (pure JAX, shardable, scan-friendly).
+
+Attention ships three interchangeable implementations:
+
+* ``blockwise`` — KV tiles stream through a ``lax.scan`` with running
+  (m, l, acc) state: flash attention expressed in XLA.  This is MING's
+  streaming architecture at the graph level — the (Sq, Sk) score matrix
+  (the "intermediate tensor") is never materialized in HBM.  Used for
+  training and prefill, and it is what the dry-run lowers, so the
+  roofline memory term reflects streaming behaviour.
+* ``reference`` — dense einsum softmax (oracle; small shapes only).
+* ``pallas`` — the ``repro.kernels.flash_attention`` TPU kernel (fast
+  path on real hardware; validated in interpret mode).
+
+Decode (Sq == 1) always uses the bounded-KV-cache einsum path: one new
+token against a position-masked cache — HBM-bound by design, which is
+the correct roofline profile for decode.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def _rope_inv_freq(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def rope_cos_sin(
+    positions: jax.Array,     # (B, S) int32
+    head_dim: int,
+    theta: float,
+    mrope_sections: tuple[int, ...] = (),
+    mrope_positions: jax.Array | None = None,   # (3, B, S) for M-RoPE
+) -> tuple[jax.Array, jax.Array]:
+    """Returns cos/sin of shape (B, S, head_dim/2), fp32.
+
+    M-RoPE (Qwen2-VL, arXiv:2409.12191): the head_dim/2 frequency slots
+    are split into (t, h, w) sections; each section rotates by its own
+    position stream.  Text-only tokens pass identical streams.
+    """
+    inv = _rope_inv_freq(head_dim, theta)                 # (hd/2,)
+    if mrope_sections:
+        assert mrope_positions is not None
+        assert sum(mrope_sections) == head_dim // 2, (
+            mrope_sections, head_dim)
+        pieces = []
+        off = 0
+        for axis, sec in enumerate(mrope_sections):
+            p = mrope_positions[axis].astype(jnp.float32)  # (B, S)
+            pieces.append(p[..., None] * inv[off : off + sec][None, None])
+            off += sec
+        ang = jnp.concatenate(pieces, axis=-1)             # (B, S, hd/2)
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * inv[None, None]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, H, S, hd); cos/sin: (B, S, hd/2). Rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, None].astype(jnp.float32)
+    s = sin[:, None].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention implementations
+# ---------------------------------------------------------------------------
+
+
+def attention_reference(
+    q, k, v, *, causal: bool = True, q_offset: int = 0
+) -> jax.Array:
+    from repro.kernels import ref
+
+    return ref.attention(q, k, v, causal=causal, q_offset=q_offset)
+
+
+def _divisor_block(size: int, target: int) -> int:
+    b = max(min(target, size), 1)
+    while size % b:
+        b -= 1
+    return b
+
+
+def _flash_forward_blocks(qb, kb, vb, *, causal, q_offset, block_q, block_k):
+    """Shared forward: qb (B,Hkv,g,nq,bq,D) pre-scaled; kb/vb
+    (B,Hkv,nk,bk,D).  Returns (out (B,Hkv,g,nq,bq,D) f32,
+    lse (B,Hkv,g,nq,bq) f32)."""
+    b, hkv, g, nq, bq, d = qb.shape
+    nk = kb.shape[2]
+
+    def one_q_block(qi):
+        qc = qb[:, :, :, qi].astype(jnp.float32)              # (B,Hkv,g,bq,D)
+        qpos = qi * block_q + jnp.arange(block_q) + q_offset  # (bq,)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc = kb[:, :, ki].astype(jnp.float32)             # (B,Hkv,bk,D)
+            vc = vb[:, :, ki].astype(jnp.float32)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kc)
+            if causal:
+                # additive (bq, bk) bias used ONCE — a boolean mask used
+                # twice (where on s and on p) gets loop-hoisted by XLA as
+                # a stacked, batch-broadcast pred tensor (measured: 9.7 GB
+                # at 4k/512 blocks; EXPERIMENTS.md §Perf iteration 2)
+                kpos = ki * block_k + jnp.arange(block_k)
+                bias = jnp.where(
+                    qpos[:, None] >= kpos[None, :], 0.0, NEG_INF
+                )                                              # (bq, bk) f32
+                s = s + bias[None, None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])                  # masked → 0
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vc
+            )
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hkv, g, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, block_q), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, block_q, d), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        safe_l = jnp.where(l > 0, l, 1.0)
+        lse = m + jnp.log(safe_l)                              # (B,Hkv,g,bq)
+        return acc / safe_l[..., None], lse
+
+    if nq == 1:
+        o, lse = one_q_block(0)
+        return o[:, :, :, None], lse[:, :, :, None]
+    o, lse = lax.map(one_q_block, jnp.arange(nq))
+    return jnp.moveaxis(o, 0, 3), jnp.moveaxis(lse, 0, 3)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _blockwise_attention_core(q, k, v, causal, q_offset, block_q, block_k):
+    """Flash attention with a *streaming backward* (MING C1 applied to
+    training): the default scan VJP would stash every (bq, bk) score
+    block — the full O(Sq·Sk) attention matrix — for the backward pass.
+    This custom VJP saves only (q, k, v, out, lse) and recomputes score
+    blocks on the fly, keeping train-time memory O(S·D).  Measured
+    before/after in EXPERIMENTS.md §Perf (llama train_4k)."""
+    out, _ = _blockwise_attention_fwd(
+        q, k, v, causal, q_offset, block_q, block_k
+    )
+    return out
+
+
+def _blockwise_attention_fwd(q, k, v, causal, q_offset, block_q, block_k):
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    nq, nk = sq // block_q, sk // block_k
+    scale = d ** -0.5
+    qb = (q * scale).reshape(b, hkv, g, nq, block_q, d)
+    kb = k.reshape(b, hkv, nk, block_k, d)
+    vb = v.reshape(b, hkv, nk, block_k, d)
+    o, lse = _flash_forward_blocks(
+        qb, kb, vb, causal=causal, q_offset=q_offset,
+        block_q=block_q, block_k=block_k,
+    )
+    out = o.reshape(b, hq, sq, d).astype(q.dtype)
+    return out, (q, k, v, out, lse)
+
+
+def _blockwise_attention_bwd(causal, q_offset, block_q, block_k, res, dout):
+    q, k, v, out, lse = res
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    nq, nk = sq // block_q, sk // block_k
+    scale = d ** -0.5
+
+    qb = (q * scale).reshape(b, hkv, g, nq, block_q, d)
+    kb = k.reshape(b, hkv, nk, block_k, d)
+    vb = v.reshape(b, hkv, nk, block_k, d)
+    dob = dout.reshape(b, hkv, g, nq, block_q, d)
+    ob = out.reshape(b, hkv, g, nq, block_q, d)
+    # D_i = rowsum(dout ⊙ out) — the softmax-jacobian diagonal term
+    delta = jnp.sum(
+        dob.astype(jnp.float32) * ob.astype(jnp.float32), axis=-1
+    )                                                          # (B,Hkv,g,nq,bq)
+
+    dk0 = jnp.zeros((b, hkv, sk, d), jnp.float32)
+    dv0 = jnp.zeros((b, hkv, sk, d), jnp.float32)
+
+    def q_block_step(carry, qi):
+        dk_acc, dv_acc = carry
+        qc = qb[:, :, :, qi].astype(jnp.float32)               # (B,Hkv,g,bq,D)
+        doc = dob[:, :, :, qi].astype(jnp.float32)
+        lsec = lse[:, :, :, qi]                                # (B,Hkv,g,bq)
+        dc = delta[:, :, :, qi]
+        qpos = qi * block_q + jnp.arange(block_q) + q_offset
+
+        def kv_step(carry2, ki):
+            dq_acc, dk_a, dv_a = carry2
+            kc = kb[:, :, ki].astype(jnp.float32)              # (B,Hkv,bk,D)
+            vc = vb[:, :, ki].astype(jnp.float32)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kc)
+            if causal:
+                kpos = ki * block_k + jnp.arange(block_k)
+                bias = jnp.where(
+                    qpos[:, None] >= kpos[None, :], 0.0, NEG_INF
+                )
+                s = s + bias[None, None, None]
+            p = jnp.exp(s - lsec[..., None])                   # masked → 0
+            # dv_k += Σ_g p^T do ; dp = do v^T ; ds = p (dp - D)
+            dv_blk = jnp.einsum("bhgqk,bhgqd->bhkd", p, doc)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", doc, vc)
+            ds = p * (dp - dc[..., None])
+            dq_acc = dq_acc + jnp.einsum("bhgqk,bhkd->bhgqd", ds, kc)
+            dk_blk = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qc)
+            dk_a = lax.dynamic_update_slice_in_dim(
+                dk_a, lax.dynamic_slice_in_dim(dk_a, ki * block_k, block_k, 2)
+                + dk_blk, ki * block_k, axis=2,
+            )
+            dv_a = lax.dynamic_update_slice_in_dim(
+                dv_a, lax.dynamic_slice_in_dim(dv_a, ki * block_k, block_k, 2)
+                + dv_blk, ki * block_k, axis=2,
+            )
+            return (dq_acc, dk_a, dv_a), None
+
+        dq0 = jnp.zeros((b, hkv, g, block_q, d), jnp.float32)
+        (dq_blk, dk_acc, dv_acc), _ = lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), jnp.arange(nk)
+        )
+        return (dk_acc, dv_acc), dq_blk
+
+    (dk, dv), dq_blocks = lax.scan(q_block_step, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dq_blocks, 0, 3)                         # (B,Hkv,g,nq,bq,D)
+    dq = (dq * scale).reshape(b, hq, sq, d).astype(q.dtype)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_blockwise_attention_core.defvjp(
+    lambda q, k, v, causal, q_offset, block_q, block_k: _blockwise_attention_fwd(
+        q, k, v, causal, q_offset, block_q, block_k
+    ),
+    _blockwise_attention_bwd,
+)
+
+
+def blockwise_attention(
+    q: jax.Array,      # (B, Hq, Sq, D)
+    k: jax.Array,      # (B, Hkv, Sk, D)
+    v: jax.Array,      # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    streaming_bwd: bool = True,
+) -> jax.Array:
+    """Streaming flash attention in XLA (see module docstring).
+
+    ``streaming_bwd=False`` falls back to the default scan VJP (which
+    materializes every score block in the backward) — kept selectable for
+    the §Perf before/after measurement.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    # largest divisors ≤ requested block (production shapes divide exactly;
+    # odd serving lengths degrade gracefully instead of asserting)
+    block_q = _divisor_block(sq, block_q)
+    block_k = _divisor_block(sk, block_k)
+    if streaming_bwd:
+        return _blockwise_attention_core(
+            q, k, v, causal, q_offset, block_q, block_k
+        )
+    g = hq // hkv
+    nq = sq // block_q
+    scale = d ** -0.5
+    qb = (q * scale).reshape(b, hkv, g, nq, block_q, d)
+    kb = k.reshape(b, hkv, sk // block_k, block_k, d)
+    vb = v.reshape(b, hkv, sk // block_k, block_k, d)
+    o, _ = _flash_forward_blocks(
+        qb, kb, vb, causal=causal, q_offset=q_offset,
+        block_q=block_q, block_k=block_k,
+    )
+    return o.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,        # (B, Hq, 1, D)
+    k_cache: jax.Array,  # (B, Hkv, S, D)
+    v_cache: jax.Array,  # (B, Hkv, S, D)
+    length: jax.Array,   # () int32 — number of valid cache positions
+) -> jax.Array:
+    """One-token attention against a bounded, position-masked KV cache."""
+    b, hq, _, d = q.shape
+    _, hkv, s, _ = k_cache.shape
+    g = hq // hkv
+    scale = d ** -0.5
+    qg = (q.reshape(b, hkv, g, d) * scale).astype(jnp.float32)
+    logits = jnp.einsum(
+        "bhgd,bhkd->bhgk", qg, k_cache.astype(jnp.float32)
+    )
+    valid = jnp.arange(s)[None, None, None] < length
+    logits = jnp.where(valid, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+def attention_pallas(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                     block_q: int = 512, block_k: int = 512) -> jax.Array:
+    from repro.kernels import ops
+
+    return ops.flash_attention(
+        q, k, v, causal=causal, q_offset=q_offset,
+        block_q=min(block_q, q.shape[2]), block_k=min(block_k, k.shape[2]),
+    )
+
+
+ATTN_IMPLS = {
+    "blockwise": blockwise_attention,
+    "reference": lambda q, k, v, causal=True, q_offset=0, **_: attention_reference(
+        q, k, v, causal=causal, q_offset=q_offset
+    ),
+    "pallas": attention_pallas,
+}
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (projections + rope + impl dispatch + cache)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.num_heads * hd), dt),
+        "wk": dense_init(ks[1], (d, cfg.num_kv_heads * hd), dt),
+        "wv": dense_init(ks[2], (d, cfg.num_kv_heads * hd), dt),
+        "wo": dense_init(ks[3], (cfg.num_heads * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dt)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dt)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dt)
+    return p
+
+
+def _split_heads(x, n_heads, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def attention_layer(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,                   # (B, S, D)
+    positions: jax.Array,           # (B, S) int32
+    *,
+    causal: bool = True,
+    mrope_positions: jax.Array | None = None,
+    kv_override: tuple[jax.Array, jax.Array] | None = None,  # cross-attn
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Returns (output, (k, v)) — k/v in (B, Hkv, S, hd) layout for caching."""
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = _split_heads(q, cfg.num_heads, hd)
+
+    if kv_override is None:
+        k = x @ p["wk"]
+        v = x @ p["wv"]
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        k = _split_heads(k, cfg.num_kv_heads, hd)
+        v = _split_heads(v, cfg.num_kv_heads, hd)
+        cos, sin = rope_cos_sin(
+            positions, hd, cfg.rope_theta,
+            mrope_sections=cfg.mrope_sections,
+            mrope_positions=mrope_positions,
+        )
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    else:
+        # cross-attention: encoder memory, no RoPE (positions are unrelated)
+        k, v = kv_override
+
+    if cfg.attn_impl == "blockwise":
+        out = blockwise_attention(
+            q, k, v, causal=causal, q_offset=0,
+            block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+            streaming_bwd=cfg.attn_streaming_bwd,
+        )
+    else:
+        impl = ATTN_IMPLS[cfg.attn_impl]
+        out = impl(
+            q, k, v, causal=causal, q_offset=0,
+            block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+        )
+    return _merge_heads(out) @ p["wo"], (k, v)
+
+
+def attention_decode(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,                   # (B, 1, D)
+    pos: jax.Array,                 # () int32 — absolute position of the token
+    k_cache: jax.Array,             # (B, Hkv, S, hd)
+    v_cache: jax.Array,
+    *,
+    cross: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step; returns (out, new_k_cache, new_v_cache)."""
+    hd = cfg.resolved_head_dim
+    b = x.shape[0]
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = _split_heads(q, cfg.num_heads, hd)
+
+    if cross:
+        # cross-attention: cache is the (fixed) encoder memory — no RoPE
+        out = decode_attention(q, k_cache, v_cache, k_cache.shape[2])
+        return _merge_heads(out) @ p["wo"], k_cache, v_cache
+
+    pos_arr = jnp.full((b, 1), pos, jnp.int32)
+    cos, sin = rope_cos_sin(pos_arr, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+
+    k_new = x @ p["wk"]
+    v_new = x @ p["wv"]
+    if "bk" in p:
+        k_new, v_new = k_new + p["bk"], v_new + p["bv"]
+    k_new = _split_heads(k_new, cfg.num_kv_heads, hd)
+    k_new = apply_rope(k_new, cos, sin)
+    v_new = _split_heads(v_new, cfg.num_kv_heads, hd)
+    k_cache = lax.dynamic_update_slice(k_cache, k_new, (0, 0, pos, 0))
+    v_cache = lax.dynamic_update_slice(v_cache, v_new, (0, 0, pos, 0))
+    out = decode_attention(q, k_cache, v_cache, pos + 1)
+    return _merge_heads(out) @ p["wo"], k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense and streamed)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig) -> dict:
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.param_dtype
+    ks = jax.random.split(key, 3)
+    p = {
+        "wu": dense_init(ks[0], (d, f), dt),
+        "wd": dense_init(ks[1], (f, d), dt),
+    }
+    if cfg.gated_mlp:
+        p["wg"] = dense_init(ks[2], (d, f), dt)
+    return p
+
+
+def _act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    if name == "squared_relu":
+        r = jnp.maximum(x, 0.0)
+        return r * r
+    raise ValueError(name)
+
+
+def mlp_layer(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.mlp_impl == "streamed":
+        return _mlp_streamed(p, cfg, x)
+    up = x @ p["wu"]
+    if cfg.gated_mlp:
+        h = _act(cfg.act, x @ p["wg"]) * up
+    else:
+        h = _act(cfg.act, up)
+    return h @ p["wd"]
+
+
+def _mlp_streamed(p: dict, cfg: ModelConfig, x: jax.Array,
+                  block_f: int = 2048) -> jax.Array:
+    """MING streaming applied at graph level: scan over d_ff tiles so the
+    (tokens, d_ff) hidden never materializes in HBM."""
+    f = cfg.d_ff
+    bf = min(block_f, f)
+    assert f % bf == 0
+    nf = f // bf
+
+    def step(acc, t):
+        sl = (0, t * bf)
+        wu = lax.dynamic_slice(p["wu"], sl, (x.shape[-1], bf))
+        up = x @ wu
+        if cfg.gated_mlp:
+            wg = lax.dynamic_slice(p["wg"], sl, (x.shape[-1], bf))
+            h = _act(cfg.act, x @ wg) * up
+        else:
+            h = _act(cfg.act, up)
+        wd = lax.dynamic_slice(p["wd"], (t * bf, 0), (bf, x.shape[-1]))
+        return acc + h @ wd, None
+
+    acc0 = jnp.zeros(x.shape, jnp.float32)
+    acc, _ = lax.scan(step, acc0, jnp.arange(nf))
+    return acc.astype(x.dtype)

@@ -1,0 +1,453 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid families.
+
+Layer stacks are *scanned* (``lax.scan`` over stacked parameters) so the
+HLO stays O(1) in depth — essential for compiling 16–80-layer models at
+512 host devices in the dry-run, and the standard production structure
+for remat.  Heterogeneous stacks (Jamba's 1-attn-per-8 with alternating
+MoE) scan over *super-blocks*: the smallest repeating layer pattern.
+
+Three entry points per arch (all pure functions of (params, inputs)):
+  ``lm_loss``      — training forward + chunked CE loss
+  ``lm_prefill``   — full-sequence forward, returns last-token logits +
+                     the caches (KV / conv+SSM state) for decode
+  ``lm_decode``    — one-token step against the bounded caches
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.ctx import shard_activation
+from . import layers as L
+from . import mamba2 as M
+from . import moe as MOE
+
+
+# ---------------------------------------------------------------------------
+# layer pattern
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: str            # "attn" | "mamba"
+    ffn: Optional[str]    # "mlp" | "moe" | None
+
+
+def superblock_pattern(cfg: ModelConfig) -> list[LayerSpec]:
+    if cfg.family in ("dense", "vlm", "audio"):
+        return [LayerSpec("attn", "mlp")]
+    if cfg.family == "moe":
+        return [LayerSpec("attn", "moe")]
+    if cfg.family == "ssm":
+        return [LayerSpec("mamba", None)]
+    if cfg.family == "hybrid":
+        assert cfg.attn_period > 0 and cfg.moe is not None
+        pat = []
+        for i in range(cfg.attn_period):
+            mixer = "attn" if i == cfg.attn_period // 2 else "mamba"
+            is_moe = (i % cfg.moe.moe_period) == (cfg.moe.moe_period - 1)
+            pat.append(LayerSpec(mixer, "moe" if is_moe else "mlp"))
+        return pat
+    raise ValueError(cfg.family)
+
+
+def num_superblocks(cfg: ModelConfig) -> int:
+    pat = superblock_pattern(cfg)
+    assert cfg.num_layers % len(pat) == 0, (cfg.num_layers, len(pat))
+    return cfg.num_layers // len(pat)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, spec: LayerSpec) -> dict:
+    ks = jax.random.split(key, 4)
+    d, dt = cfg.d_model, cfg.param_dtype
+    p: dict = {"ln1": jnp.ones((d,), dt)}
+    if spec.mixer == "attn":
+        p["attn"] = L.init_attention(ks[0], cfg)
+    else:
+        p["mamba"] = M.init_mamba(ks[0], cfg)
+    if spec.ffn is not None:
+        p["ln2"] = jnp.ones((d,), dt)
+        if spec.ffn == "mlp":
+            p["mlp"] = L.init_mlp(ks[1], cfg)
+        else:
+            p["moe"] = MOE.init_moe(ks[1], cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    pat = superblock_pattern(cfg)
+    nsb = num_superblocks(cfg)
+    d, v, dt = cfg.d_model, cfg.padded_vocab, cfg.param_dtype
+    k_embed, k_head, k_blocks = jax.random.split(key, 3)
+
+    def one_superblock(k):
+        kk = jax.random.split(k, len(pat))
+        return {f"b{i}": _init_block(kk[i], cfg, s) for i, s in enumerate(pat)}
+
+    blocks = jax.vmap(one_superblock)(jax.random.split(k_blocks, nsb))
+    params = {
+        "blocks": blocks,
+        "final_norm": jnp.ones((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, (d, v), dt)
+    if not cfg.embeds_input:
+        params["embed"] = L.dense_init(k_embed, (v, d), dt, scale=0.02)
+    return params
+
+
+def _head_matrix(params: dict) -> jax.Array:
+    """(D, V) output projection — the transposed embedding when tied."""
+    if "lm_head" in params:
+        return params["lm_head"]
+    return params["embed"].T
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(
+    p: dict,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    h: jax.Array,
+    positions: jax.Array,
+    mrope_positions,
+    collect_cache: bool,
+):
+    cache = None
+    if spec.mixer == "attn":
+        a, (k, v) = L.attention_layer(
+            p["attn"], cfg, L.rmsnorm(h, p["ln1"], cfg.norm_eps), positions,
+            causal=True, mrope_positions=mrope_positions,
+        )
+        if collect_cache:
+            cache = {"k": k, "v": v}
+    else:
+        a, st = _mamba_forward(p["mamba"], cfg, L.rmsnorm(h, p["ln1"],
+                                                          cfg.norm_eps),
+                               collect_cache)
+        cache = st
+    h = h + a
+    if spec.ffn is not None:
+        x = L.rmsnorm(h, p["ln2"], cfg.norm_eps)
+        if spec.ffn == "mlp":
+            f = L.mlp_layer(p["mlp"], cfg, x)
+        else:
+            f = MOE.moe_layer(p["moe"], cfg, x)
+        h = h + f
+    h = shard_activation(h, "hidden")
+    return h, cache
+
+
+def _mamba_forward(p, cfg, x, collect_cache):
+    if not collect_cache:
+        return M.mamba_layer(p, cfg, x), None
+    # prefill: also produce (conv line buffer, SSM state) for decode
+    s = cfg.ssm
+    b, l, d = x.shape
+    di = s.d_inner(d)
+    n = s.state_dim
+    z, xbc, dt = M._split_proj(cfg, x @ p["in_proj"])
+    conv_cache = xbc[:, -(s.conv_kernel - 1):, :]            # (B, K-1, CD)
+    xbc_c = jax.nn.silu(M._causal_depthwise_conv(xbc, p["conv_w"]))
+    xs = xbc_c[..., :di].reshape(b, l, s.num_heads(d), s.head_dim)
+    b_mat = xbc_c[..., di : di + n]
+    c_mat = xbc_c[..., di + n :]
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    from repro.kernels import ref as kref
+
+    y, ssm_state = kref.ssd_chunked(xs, dtf, a, b_mat, c_mat,
+                                    chunk=M.pick_chunk(l, s.chunk))
+    y = y + xs.astype(jnp.float32) * p["skip_d"][None, None, :, None]
+    y = y.reshape(b, l, di).astype(x.dtype)
+    y = L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                  p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], {"conv": conv_cache, "ssm": ssm_state}
+
+
+def _apply_block_decode(
+    p: dict,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    h: jax.Array,            # (B, 1, D)
+    pos: jax.Array,          # () int32
+    cache: dict,
+):
+    if spec.mixer == "attn":
+        a, k_new, v_new = L.attention_decode(
+            p["attn"], cfg, L.rmsnorm(h, p["ln1"], cfg.norm_eps), pos,
+            cache["k"], cache["v"],
+        )
+        new_cache = {"k": k_new, "v": v_new}
+    else:
+        a, conv, ssm = M.mamba_decode(
+            p["mamba"], cfg, L.rmsnorm(h, p["ln1"], cfg.norm_eps),
+            cache["conv"], cache["ssm"],
+        )
+        new_cache = {"conv": conv, "ssm": ssm}
+    h = h + a
+    if spec.ffn is not None:
+        x = L.rmsnorm(h, p["ln2"], cfg.norm_eps)
+        if spec.ffn == "mlp":
+            f = L.mlp_layer(p["mlp"], cfg, x)
+        else:
+            f = MOE.moe_layer(p["moe"], cfg, x)
+        h = h + f
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# backbone (scan over superblocks)
+# ---------------------------------------------------------------------------
+
+
+def backbone(
+    params: dict,
+    cfg: ModelConfig,
+    h: jax.Array,
+    positions: jax.Array,
+    mrope_positions=None,
+    collect_cache: bool = False,
+):
+    pat = superblock_pattern(cfg)
+
+    def body(hh, block_p):
+        caches = {}
+        for i, spec in enumerate(pat):
+            hh, c = _apply_block(
+                block_p[f"b{i}"], cfg, spec, hh, positions,
+                mrope_positions, collect_cache,
+            )
+            if collect_cache:
+                caches[f"b{i}"] = c
+        return hh, (caches if collect_cache else None)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, caches = lax.scan(body, h, params["blocks"])
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return h, caches
+
+
+# ---------------------------------------------------------------------------
+# losses / entry points
+# ---------------------------------------------------------------------------
+
+
+def _ce_chunk_terms(h, lm_head, labels, t, chunk, valid_vocab=None):
+    """(Σ(logz - gold), logz) for chunk t — shared by fwd and bwd."""
+    hs = lax.dynamic_slice_in_dim(h, t * chunk, chunk, axis=1)
+    ls = lax.dynamic_slice_in_dim(labels, t * chunk, chunk, axis=1)
+    logits = (hs @ lm_head).astype(jnp.float32)              # (B, c, V)
+    logits = shard_activation(logits, "logits")
+    if valid_vocab is not None and valid_vocab < logits.shape[-1]:
+        # vocab-padding (§Perf): padded columns never win the softmax
+        pad_mask = jnp.arange(logits.shape[-1]) < valid_vocab
+        logits = jnp.where(pad_mask[None, None], logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+    return jnp.sum(logz - gold), (hs, ls, logits, logz)
+
+
+def _chunked_ce_scan(h, lm_head, labels, chunk, valid_vocab=None):
+    nc = h.shape[1] // chunk
+
+    def step(acc, t):
+        term, _ = _ce_chunk_terms(h, lm_head, labels, t, chunk, valid_vocab)
+        return acc + term, None
+
+    total, _ = lax.scan(step, jnp.zeros((), jnp.float32), jnp.arange(nc))
+    return total / (h.shape[0] * h.shape[1])
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _chunked_ce_streaming(h, lm_head, labels, chunk, valid_vocab=None):
+    """Chunked CE with a *streaming backward*: the default scan VJP would
+    stash every (B, c, V) logits chunk — the full (B, S, V) tensor — for
+    the backward.  This VJP saves only (h, lm_head, labels) and
+    recomputes per-chunk logits, emitting dh and a running dW (the
+    Liger-style fused cross-entropy, i.e. MING C1 at the loss layer)."""
+    return _chunked_ce_scan(h, lm_head, labels, chunk, valid_vocab)
+
+
+def _chunked_ce_fwd(h, lm_head, labels, chunk, valid_vocab=None):
+    return (_chunked_ce_scan(h, lm_head, labels, chunk, valid_vocab),
+            (h, lm_head, labels))
+
+
+def _chunked_ce_bwd(chunk, valid_vocab, res, ct):
+    h, lm_head, labels = res
+    b, s, d = h.shape
+    nc = s // chunk
+    scale = ct / (b * s)                                      # dloss/dlogit pre-softmax
+
+    def step(carry, t):
+        dh_acc, dw_acc = carry
+        _, (hs, ls, logits, logz) = _ce_chunk_terms(h, lm_head, labels,
+                                                     t, chunk, valid_vocab)
+        p = jnp.exp(logits - logz[..., None])                 # softmax (B,c,V)
+        onehot = jax.nn.one_hot(ls, logits.shape[-1], dtype=jnp.float32)
+        dlogits = (p - onehot) * scale                        # (B,c,V)
+        dh_chunk = jnp.einsum(
+            "bcv,dv->bcd", dlogits, lm_head.astype(jnp.float32)
+        )
+        dw_acc = dw_acc + jnp.einsum(
+            "bcd,bcv->dv", hs.astype(jnp.float32), dlogits
+        )
+        dh_acc = lax.dynamic_update_slice_in_dim(
+            dh_acc, dh_chunk.astype(h.dtype), t * chunk, axis=1
+        )
+        return (dh_acc, dw_acc), None
+
+    dh0 = jnp.zeros_like(h)
+    dw0 = jnp.zeros((d, lm_head.shape[1]), jnp.float32)
+    (dh, dw), _ = lax.scan(step, (dh0, dw0), jnp.arange(nc))
+    return dh, dw.astype(lm_head.dtype), None
+
+
+_chunked_ce_streaming.defvjp(_chunked_ce_fwd, _chunked_ce_bwd)
+
+
+def chunked_ce_loss(
+    h: jax.Array,            # (B, S, D)
+    lm_head: jax.Array,      # (D, V)
+    labels: jax.Array,       # (B, S) int32
+    chunk: int,
+    streaming_bwd: bool = True,
+    valid_vocab: int | None = None,
+) -> jax.Array:
+    """Cross-entropy streamed over sequence chunks: the (B, S, V) logits
+    tensor — by far the largest train-time intermediate at 128–256k
+    vocabs — is never materialized (MING C1 at the loss layer), in the
+    backward pass either (``streaming_bwd``)."""
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    if streaming_bwd:
+        return _chunked_ce_streaming(h, lm_head, labels, chunk, valid_vocab)
+    return _chunked_ce_scan(h, lm_head, labels, chunk, valid_vocab)
+
+
+def _embed_in(params, cfg, tokens_or_embeds):
+    if cfg.embeds_input:
+        h = tokens_or_embeds.astype(cfg.param_dtype)
+    else:
+        h = params["embed"][tokens_or_embeds]
+    return shard_activation(h, "hidden")
+
+
+def lm_loss(
+    params: dict,
+    cfg: ModelConfig,
+    batch: dict,
+) -> jax.Array:
+    """batch: {"tokens" | "embeds", "labels", optional "mrope_positions"}."""
+    x = batch["embeds"] if cfg.embeds_input else batch["tokens"]
+    h = _embed_in(params, cfg, x)
+    bsz, s = h.shape[0], h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (bsz, s))
+    h, _ = backbone(
+        params, cfg, h, positions,
+        mrope_positions=batch.get("mrope_positions"), collect_cache=False,
+    )
+    return chunked_ce_loss(h, _head_matrix(params), batch["labels"],
+                           cfg.loss_chunk,
+                           streaming_bwd=cfg.loss_streaming_bwd,
+                           valid_vocab=cfg.vocab_size
+                           if cfg.padded_vocab != cfg.vocab_size else None)
+
+
+def lm_prefill(params: dict, cfg: ModelConfig, batch: dict):
+    """Returns (last-token logits (B, V), caches) — serving prefill."""
+    x = batch["embeds"] if cfg.embeds_input else batch["tokens"]
+    h = _embed_in(params, cfg, x)
+    bsz, s = h.shape[0], h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (bsz, s))
+    h, caches = backbone(
+        params, cfg, h, positions,
+        mrope_positions=batch.get("mrope_positions"), collect_cache=True,
+    )
+    logits = (h[:, -1] @ _head_matrix(params)).astype(jnp.float32)
+    return logits[..., : cfg.vocab_size], caches
+
+
+def lm_decode(
+    params: dict,
+    cfg: ModelConfig,
+    cache: dict,             # stacked (n_super, ...) cache pytree
+    token: jax.Array,        # (B,) int32 — or (B, 1, D) embeds
+    pos: jax.Array,          # () int32 absolute position
+):
+    """One decode step. Returns (logits (B, V), new_cache)."""
+    pat = superblock_pattern(cfg)
+    if cfg.embeds_input:
+        h = token.astype(cfg.param_dtype)
+        if h.ndim == 2:
+            h = h[:, None, :]
+    else:
+        h = params["embed"][token][:, None, :]               # (B, 1, D)
+
+    def body(hh, xs):
+        block_p, cache_slice = xs
+        new_slices = {}
+        for i, spec in enumerate(pat):
+            hh, nc = _apply_block_decode(
+                block_p[f"b{i}"], cfg, spec, hh, pos, cache_slice[f"b{i}"]
+            )
+            new_slices[f"b{i}"] = nc
+        return hh, new_slices
+
+    h, new_cache = lax.scan(body, h, (params["blocks"], cache))
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h[:, 0] @ _head_matrix(params)).astype(jnp.float32)
+    return logits[..., : cfg.vocab_size], new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache allocation (decode entry without a real prefill — dry-run shapes)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Zeroed caches shaped exactly as lm_prefill would produce them."""
+    pat = superblock_pattern(cfg)
+    nsb = num_superblocks(cfg)
+    hd = cfg.resolved_head_dim
+    dt = cfg.param_dtype
+    out = {}
+    for i, spec in enumerate(pat):
+        if spec.mixer == "attn":
+            kv = jnp.zeros((nsb, batch, cfg.num_kv_heads, max_len, hd), dt)
+            out[f"b{i}"] = {"k": kv, "v": kv}
+        else:
+            s = cfg.ssm
+            out[f"b{i}"] = {
+                "conv": jnp.zeros(
+                    (nsb, batch, s.conv_kernel - 1, s.conv_dim(cfg.d_model)),
+                    dt,
+                ),
+                "ssm": jnp.zeros(
+                    (nsb, batch, s.num_heads(cfg.d_model), s.head_dim,
+                     s.state_dim),
+                    jnp.float32,
+                ),
+            }
+    return out

@@ -1,0 +1,144 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+The SSM family is the strongest match to the paper's thesis (DESIGN.md
+§4): both the depthwise causal conv (a literal K-1 line buffer over
+time) and the SSD recurrent state (an O(1)-per-step carry replacing the
+O(L²) attention intermediate) are streaming structures.  Decode carries
+exactly (conv window, SSM state) — the whole "KV cache" is a line buffer.
+
+Train/prefill use the chunked SSD scan (``repro.kernels.ref.ssd_chunked``,
+the same algorithm the Pallas kernel implements); decode uses the O(1)
+recurrent step.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ref as kref
+from .layers import dense_init, rmsnorm
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    assert s is not None
+    d, dt_ = cfg.d_model, cfg.param_dtype
+    di = s.d_inner(d)
+    h = s.num_heads(d)
+    cd = s.conv_dim(d)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * s.state_dim + h), dt_),
+        "conv_w": dense_init(ks[1], (s.conv_kernel, cd), dt_, scale=0.5),
+        "a_log": jnp.zeros((h,), jnp.float32),          # A = -exp(a_log) = -1
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "skip_d": jnp.ones((h,), jnp.float32),
+        "norm_w": jnp.ones((di,), dt_),
+        "out_proj": dense_init(ks[2], (di, d), dt_),
+    }
+
+
+def pick_chunk(l: int, target: int) -> int:
+    """Largest divisor of ``l`` that is ≤ target (SSD needs chunk | L)."""
+    c = max(min(target, l), 1)
+    while l % c:
+        c -= 1
+    return c
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, L, C); w: (K, C). Left-padded causal depthwise conv —
+    K-1 rows of history: the 1-D line buffer."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    l = x.shape[1]
+    for i in range(k):
+        out = out + xp[:, i : i + l].astype(jnp.float32) * w[i].astype(
+            jnp.float32
+        )
+    return out.astype(x.dtype)
+
+
+def _conv_decode_step(
+    x_t: jax.Array,          # (B, C) new element
+    conv_cache: jax.Array,   # (B, K-1, C) line buffer
+    w: jax.Array,            # (K, C)
+) -> tuple[jax.Array, jax.Array]:
+    window = jnp.concatenate([conv_cache, x_t[:, None]], axis=1)   # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return out.astype(x_t.dtype), window[:, 1:]
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    h = s.num_heads(cfg.d_model)
+    n = s.state_dim
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def mamba_layer(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence forward: (B, L, D) → (B, L, D)."""
+    s = cfg.ssm
+    b, l, d = x.shape
+    di = s.d_inner(d)
+    h = s.num_heads(d)
+    n = s.state_dim
+
+    z, xbc, dt = _split_proj(cfg, x @ p["in_proj"])
+    xbc = jax.nn.silu(_causal_depthwise_conv(xbc, p["conv_w"]))
+    xs = xbc[..., :di].reshape(b, l, h, s.head_dim)
+    b_mat = xbc[..., di : di + n]
+    c_mat = xbc[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    a = -jnp.exp(p["a_log"])
+    chunk = pick_chunk(l, s.chunk)
+    y, _ = kref.ssd_chunked(xs, dt, a, b_mat, c_mat, chunk=chunk)
+    y = y + xs.astype(jnp.float32) * p["skip_d"][None, None, :, None]
+    y = y.reshape(b, l, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def mamba_decode(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,            # (B, 1, D)
+    conv_cache: jax.Array,   # (B, K-1, conv_dim)
+    ssm_state: jax.Array,    # (B, H, P, N) f32
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """O(1) recurrent step; returns (out, new_conv_cache, new_ssm_state)."""
+    s = cfg.ssm
+    b = x.shape[0]
+    d = cfg.d_model
+    di = s.d_inner(d)
+    h = s.num_heads(d)
+    n = s.state_dim
+
+    z, xbc, dt = _split_proj(cfg, x[:, 0] @ p["in_proj"])
+    xbc, conv_cache = _conv_decode_step(xbc, conv_cache, p["conv_w"])
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di].reshape(b, h, s.head_dim)
+    b_t = xbc[..., di : di + n]
+    c_t = xbc[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, H)
+
+    a = -jnp.exp(p["a_log"])
+    y, ssm_state = kref.ssd_decode_step(ssm_state, xs, dt, a, b_t, c_t)
+    y = y + xs.astype(jnp.float32) * p["skip_d"][None, :, None]
+    y = y.reshape(b, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["norm_w"], cfg.norm_eps)
+    return (y @ p["out_proj"])[:, None], conv_cache, ssm_state

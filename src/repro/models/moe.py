@@ -1,0 +1,106 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded
+scatter dispatch (GShard-style, no (tokens × E × C) dispatch tensor).
+
+Sharding: the expert axis E shards over ``model`` (expert parallelism);
+tokens shard over ``data``.  The scatter/gather crossing the two axes is
+where GSPMD inserts the all-to-all — visible in the dry-run collective
+schedule (EXPERIMENTS.md §Dry-run).
+
+MING applicability (DESIGN.md §4): the router is a pure-parallel node,
+each expert FFN a regular-reduction node; capacity C is the stream-depth
+analogue (tokens beyond capacity are dropped, like back-pressured FIFO
+writes — standard MoE token dropping, error carried by the residual).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from .layers import _act, dense_init
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    assert cfg.moe is not None
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.param_dtype
+    e = cfg.moe.num_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "wu": dense_init(ks[1], (e, d, f), dt, scale=1.0 / math.sqrt(d)),
+        "wd": dense_init(ks[2], (e, f, d), dt, scale=1.0 / math.sqrt(f)),
+    }
+    if cfg.gated_mlp:
+        p["wg"] = dense_init(ks[3], (e, d, f), dt, scale=1.0 / math.sqrt(d))
+    return p
+
+
+def expert_capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(math.ceil(num_tokens * m.top_k * m.capacity_factor / m.num_experts))
+    return max(8, ((c + 7) // 8) * 8)   # pad to a lane-friendly multiple
+
+
+def moe_layer(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """x: (B, S, D) → (B, S, D).
+
+    Dispatch/combine are streamed as a ``lax.scan`` over the k routing
+    choices: the naive formulation materializes (N·k, D) gather/scatter
+    tensors — 17 GiB per layer at train_4k on granite (measured; §Perf
+    MoE iteration) — while the per-choice stream peaks at one (N, D).
+    This is MING C1 applied to the MoE dispatch: the "intermediate
+    tensor" between router and experts is never built.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    e, k = m.num_experts, m.top_k
+    cap = expert_capacity(n, cfg)
+
+    xf = x.reshape(n, d)
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (N, E)
+    gate_w, gate_i = lax.top_k(logits, k)                    # (N, k)
+    gate_w = jax.nn.softmax(gate_w, axis=-1)
+
+    # position of each (token, choice) within its expert's capacity
+    # buffer — index bookkeeping only (int32, no D-sized tensors)
+    flat_i = gate_i.reshape(-1)                              # (N*k,)
+    onehot = jax.nn.one_hot(flat_i, e, dtype=jnp.int32)      # (N*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                # exclusive
+    flat_pos = jnp.take_along_axis(pos, flat_i[:, None], axis=1)[:, 0]
+    keep = flat_pos < cap                                    # (N*k,)
+    pos_k = flat_pos.reshape(n, k)
+    keep_k = keep.reshape(n, k)
+    safe_pos = jnp.where(keep_k, pos_k, cap - 1)             # (N, k)
+
+    # dispatch: one (N, D) scatter per routing choice
+    def dispatch(buf, kk):
+        contrib = jnp.where(keep_k[:, kk][:, None], xf, 0)
+        return buf.at[gate_i[:, kk], safe_pos[:, kk]].add(
+            contrib, mode="drop"
+        ), None
+
+    buf0 = jnp.zeros((e, cap, d), x.dtype)
+    buf, _ = lax.scan(dispatch, buf0, jnp.arange(k))
+
+    # expert FFNs (batched over E; E shards over `model`)
+    up = jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    if cfg.gated_mlp:
+        gate = _act(cfg.act, jnp.einsum("ecd,edf->ecf", buf, p["wg"]))
+        h = gate * up
+    else:
+        h = _act(cfg.act, up)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wd"])         # (E, C, D)
+
+    # combine: one (N, D) gather per choice, f32 accumulator
+    def combine(acc, kk):
+        picked = out_buf[gate_i[:, kk], safe_pos[:, kk]]     # (N, D)
+        w = jnp.where(keep_k[:, kk], gate_w[:, kk], 0.0)
+        return acc + picked.astype(jnp.float32) * w[:, None], None
+
+    y0 = jnp.zeros((n, d), jnp.float32)
+    y, _ = lax.scan(combine, y0, jnp.arange(k))
+    return y.reshape(b, s, d).astype(x.dtype)

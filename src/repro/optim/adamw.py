@@ -1,0 +1,133 @@
+"""AdamW with fully-sharded states, global-norm clipping and schedules.
+
+Built from scratch (no optax in this environment).  Optimizer state is a
+pytree congruent with params, so the same sharding rules apply — the
+FSDP axis shards both moments (the dominant memory term at 398B params;
+see EXPERIMENTS.md §Dry-run).
+
+Optional int8 second-moment quantization (``quantize_moments=True``)
+halves optimizer memory — one of the knobs that decides whether
+jamba-398B training fits a single v5e pod (it does not; §Dry-run) or
+needs the multi-pod mesh (it does).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array            # () int32
+    mu: dict                   # first moment  (params dtype or f32)
+    nu: dict                   # second moment (f32 or int8-quantized)
+    nu_scale: Optional[dict]   # per-leaf scales when quantized
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    quantize_moments: bool = False
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to min_lr_frac·lr."""
+    s = step.astype(jnp.float32)
+    warm = s / max(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (s - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog)
+    )
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+# -- int8 moment quantization (per-leaf absmax) ------------------------------
+
+
+def _quant(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init(params: dict, cfg: AdamWConfig) -> AdamWState:
+    mu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    if cfg.quantize_moments:
+        nu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.int8), params)
+        scale = jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params)
+    else:
+        nu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        scale = None
+    return AdamWState(jnp.zeros((), jnp.int32), mu, nu, scale)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree))
+    )
+
+
+def apply(
+    params: dict,
+    grads: dict,
+    state: AdamWState,
+    cfg: AdamWConfig,
+) -> tuple[dict, AdamWState, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, vs):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v_f = _dequant(v, vs) if cfg.quantize_moments else v
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        upd_ = (m / b1c) / (jnp.sqrt(v_f / b2c) + cfg.eps)
+        upd_ = upd_ + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd_).astype(p.dtype)
+        if cfg.quantize_moments:
+            vq, vs_new = _quant(v_f)
+            return new_p, m, vq, vs_new
+        return new_p, m, v_f, jnp.zeros((), jnp.float32)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_vs = (
+        jax.tree.leaves(state.nu_scale)
+        if cfg.quantize_moments
+        else [jnp.zeros((), jnp.float32)] * len(flat_p)
+    )
+    out = [upd(*args) for args in zip(flat_p, flat_g, flat_m, flat_v, flat_vs)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_vs = treedef.unflatten([o[3] for o in out]) if cfg.quantize_moments else None
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v, new_vs), metrics

@@ -1,0 +1,1 @@
+from .ptq import dequantize_params, quantize_params  # noqa: F401

@@ -1,0 +1,116 @@
+"""Weight-only int8 post-training quantization (the paper's regime).
+
+The paper evaluates int8-PTQ CNN kernels (Sec. V-A); this module applies
+the same regime to the LM serving path: every ≥2-D weight matrix is
+stored as int8 with a per-output-channel f32 scale (absmax), halving the
+weight bytes HBM must stream at decode — the term that dominates the
+decode_* roofline cells.  Activations stay bf16; matmuls dequantize on
+use (XLA fuses convert·scale into the consumer on TPU, so HBM sees int8).
+
+Norms / biases / scalar leaves stay in their original dtype (quantizing
+them saves nothing and hurts accuracy).
+
+Usage::
+
+    qparams = quantize_params(params)                  # pytree of QTensor
+    params_hat = dequantize_params(qparams)            # lazy, inside jit
+    logits, cache = lm.lm_decode(params_hat, cfg, ...)
+
+``ServeEngine(..., int8_weights=True)`` wires this in.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QTensor(NamedTuple):
+    """int8 weight + per-output-channel scale (last axis = out channels)."""
+
+    q: jax.Array          # int8, same shape as the original
+    scale: jax.Array      # f32, shape = (..., 1, out) broadcastable
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def dtype(self):
+        return jnp.int8
+
+
+jax.tree_util.register_pytree_node(
+    QTensor,
+    lambda t: ((t.q, t.scale), None),
+    lambda _, xs: QTensor(*xs),
+)
+
+
+def _quantize_leaf(x: jax.Array) -> QTensor | jax.Array:
+    # quantize matrices only; keep vectors/scalars (norms, biases) exact
+    if x.ndim < 2 or not jnp.issubdtype(x.dtype, jnp.floating):
+        return x
+    xf = x.astype(jnp.float32)
+    # per-output-channel absmax over the contraction axis (-2)
+    amax = jnp.max(jnp.abs(xf), axis=-2, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale)
+
+
+def _dequantize_leaf(x, dtype):
+    if isinstance(x, QTensor):
+        return (x.q.astype(jnp.float32) * x.scale).astype(dtype)
+    return x
+
+
+def quantize_params(params: Any) -> Any:
+    """Pytree map: every ≥2-D float leaf becomes a QTensor."""
+    return jax.tree.map(_quantize_leaf, params)
+
+
+def dequantize_params(qparams: Any, dtype=jnp.bfloat16) -> Any:
+    """Inverse map — call *inside* jit so XLA streams int8 from HBM and
+    dequantizes in VMEM (weight bytes halve; the convert fuses)."""
+    return jax.tree.map(
+        lambda x: _dequantize_leaf(x, dtype),
+        qparams,
+        is_leaf=lambda x: isinstance(x, QTensor),
+    )
+
+
+def quantized_param_shardings(p_shard: Any, params_shape: Any) -> Any:
+    """Shardings for the quantized pytree: ``q`` inherits the weight's
+    sharding; the (…, 1, out) ``scale`` drops the contraction axis."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def one(sh, leaf):
+        if not (hasattr(leaf, "ndim") and leaf.ndim >= 2
+                and jnp.issubdtype(leaf.dtype, jnp.floating)):
+            return sh
+        spec = list(sh.spec) + [None] * (leaf.ndim - len(sh.spec))
+        scale_spec = list(spec)
+        scale_spec[-2] = None
+        return QTensor(
+            sh, NamedSharding(sh.mesh, P(*scale_spec))
+        )
+
+    return jax.tree.map(one, p_shard, params_shape)
+
+
+def quantization_error(params: Any, qparams: Any) -> dict:
+    """Max relative weight error per quantized leaf (diagnostics)."""
+    out = {}
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    deq = dequantize_params(qparams, jnp.float32)
+    flat_d = jax.tree.leaves(deq)
+    for (kp, p), d in zip(flat_p, flat_d):
+        if p.ndim >= 2:
+            pf = p.astype(jnp.float32)
+            denom = jnp.maximum(jnp.max(jnp.abs(pf)), 1e-12)
+            out[jax.tree_util.keystr(kp)] = float(
+                jnp.max(jnp.abs(pf - d)) / denom
+            )
+    return out

@@ -1,0 +1,30 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
+single real CPU device; multi-device tests spawn subprocesses that set
+their own --xla_force_host_platform_device_count."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_subprocess(code: str, *, devices: int = 0, env: dict | None = None,
+                   timeout: int = 600) -> subprocess.CompletedProcess:
+    """Run python code in a subprocess with its own device count."""
+    e = dict(os.environ)
+    e["PYTHONPATH"] = SRC + os.pathsep + e.get("PYTHONPATH", "")
+    if devices:
+        e["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    e.update(env or {})
+    return subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, env=e, timeout=timeout,
+    )
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_subprocess

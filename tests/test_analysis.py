@@ -1,0 +1,206 @@
+"""Paper Algorithms 1 & 2 (kernel classification) — unit + property tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analysis import (
+    KernelClass,
+    classify_iterators,
+    classify_kernel,
+    detect_sliding_window,
+    window_geometry,
+)
+from repro.core.ir import (
+    AffineExpr,
+    AffineMap,
+    GenericOp,
+    IteratorType,
+    PayloadKind,
+    make_conv2d_op,
+    make_elementwise_op,
+    make_matmul_op,
+    make_pool2d_op,
+)
+
+P, R = IteratorType.PARALLEL, IteratorType.REDUCTION
+
+
+class TestAlgorithm1:
+    """Sliding-window detection: E = s·i_p + δ·i_r."""
+
+    def test_conv_detected(self):
+        op = make_conv2d_op("c", "x", "w", "y", n=1, h_out=8, w_out=8,
+                            c_out=4, kh=3, kw=3, c_in=2)
+        info = detect_sliding_window(op)
+        assert info.is_sliding_window
+        assert info.stride == 1 and info.dilation == 1
+
+    @pytest.mark.parametrize("stride,dilation", [(1, 1), (2, 1), (1, 2), (2, 3)])
+    def test_stride_dilation_extracted(self, stride, dilation):
+        op = make_conv2d_op("c", "x", "w", "y", n=1, h_out=4, w_out=4,
+                            c_out=2, kh=3, kw=3, c_in=2,
+                            stride=stride, dilation=dilation)
+        info = detect_sliding_window(op)
+        assert (info.is_sliding_window, info.stride, info.dilation) == (
+            True, stride, dilation)
+
+    def test_matmul_not_sliding(self):
+        op = make_matmul_op("m", "a", "b", "c", m=4, k=4, n_out=4)
+        assert not detect_sliding_window(op).is_sliding_window
+
+    def test_elementwise_not_sliding(self):
+        op = make_elementwise_op("e", ["a"], "b", (4, 4), PayloadKind.RELU)
+        assert not detect_sliding_window(op).is_sliding_window
+
+    def test_pool_detected(self):
+        op = make_pool2d_op("p", "x", "y", n=1, h_out=4, w_out=4, c=2,
+                            kh=2, kw=2, stride=2)
+        info = detect_sliding_window(op)
+        assert info.is_sliding_window and info.stride == 2
+
+    def test_all_parallel_early_exit(self):
+        """Line 1 of Alg. 1: pure-parallel ops return immediately even if
+        an input map had a composite expression."""
+        m = AffineMap.of(2, [AffineExpr.dim(0) + AffineExpr.dim(1)])
+        op = GenericOp(
+            name="odd", inputs=("a",), output="b",
+            indexing_maps=(m, AffineMap.of(2, [AffineExpr.dim(0),
+                                               AffineExpr.dim(1)])),
+            iterator_types=(P, P), dim_sizes=(4, 4),
+        )
+        assert not detect_sliding_window(op).is_sliding_window
+
+    def test_two_reduction_terms_not_sliding(self):
+        """i_r1 + i_r2 (no parallel term) must not match."""
+        imap = AffineMap.of(3, [AffineExpr.dim(1) + AffineExpr.dim(2)])
+        omap = AffineMap.of(3, [AffineExpr.dim(0)])
+        op = GenericOp(
+            name="rr", inputs=("a",), output="b",
+            indexing_maps=(imap, omap),
+            iterator_types=(P, R, R), dim_sizes=(4, 2, 2),
+        )
+        assert not detect_sliding_window(op).is_sliding_window
+
+
+class TestAlgorithm2:
+    def test_conv_classes(self):
+        op = make_conv2d_op("c", "x", "w", "y", n=1, h_out=8, w_out=8,
+                            c_out=4, kh=3, kw=3, c_in=2)
+        cls = classify_iterators(op)
+        # parallel single-dim input subscripts: n (d0), c_out (d3)
+        assert set(cls.parallel) == {0, 3}
+        # reduction single-dim subscripts: r (d4), s (d5), c_in (d6)
+        assert set(cls.reduction) == {4, 5, 6}
+        # composite exprs: the two sliding spatial subscripts
+        assert len(cls.original_input) == 2
+        # window dims: output parallel dims not already in P: h (d1), w (d2)
+        assert set(cls.window) == {1, 2}
+
+    def test_matmul_classes(self):
+        op = make_matmul_op("m", "a", "b", "c", m=4, k=8, n_out=2)
+        cls = classify_iterators(op)
+        assert set(cls.parallel) == {0, 1}
+        assert set(cls.reduction) == {2}
+        assert cls.original_input == () and cls.window == ()
+
+    def test_elementwise_classes(self):
+        op = make_elementwise_op("e", ["a", "b"], "c", (4, 4), PayloadKind.ADD)
+        cls = classify_iterators(op)
+        assert set(cls.parallel) == {0, 1}
+        assert cls.reduction == () and cls.window == ()
+
+
+class TestClassification:
+    def test_three_way(self):
+        conv = make_conv2d_op("c", "x", "w", "y", n=1, h_out=8, w_out=8,
+                              c_out=4, kh=3, kw=3, c_in=2)
+        mm = make_matmul_op("m", "a", "b", "c", m=4, k=8, n_out=2)
+        ew = make_elementwise_op("e", ["a"], "b", (4,), PayloadKind.RELU)
+        assert classify_kernel(conv).kernel_class == KernelClass.SLIDING_WINDOW
+        assert classify_kernel(mm).kernel_class == KernelClass.REGULAR_REDUCTION
+        assert classify_kernel(ew).kernel_class == KernelClass.PURE_PARALLEL
+
+    def test_window_geometry_conv(self):
+        op = make_conv2d_op("c", "x", "w", "y", n=1, h_out=32, w_out=32,
+                            c_out=4, kh=3, kw=3, c_in=2)
+        geo = window_geometry(op)
+        assert geo.window_dims == (1, 2)
+        assert geo.window_extents == (3, 3)
+        # input extent: s*(P-1) + δ*(R-1) + 1 = 31 + 2 + 1 = 34 (padded frame)
+        assert geo.input_extents == (34, 34)
+
+    def test_window_geometry_rejects_non_sliding(self):
+        mm = make_matmul_op("m", "a", "b", "c", m=4, k=8, n_out=2)
+        with pytest.raises(ValueError):
+            window_geometry(mm)
+
+
+# ---------------------------------------------------------------------------
+# property tests: classification is total, deterministic, and O(|maps|)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def generic_ops(draw):
+    n_dims = draw(st.integers(1, 5))
+    its = draw(
+        st.lists(st.sampled_from([P, R]), min_size=n_dims, max_size=n_dims)
+    )
+    dim_sizes = tuple(
+        draw(st.lists(st.integers(1, 8), min_size=n_dims, max_size=n_dims))
+    )
+
+    def expr():
+        kind = draw(st.integers(0, 2))
+        d0 = draw(st.integers(0, n_dims - 1))
+        if kind == 0:
+            return AffineExpr.dim(d0)
+        if kind == 1:
+            return AffineExpr.dim(d0, draw(st.integers(1, 3)))
+        d1 = draw(st.integers(0, n_dims - 1))
+        if d1 == d0:
+            d1 = (d0 + 1) % n_dims
+        if n_dims == 1:
+            return AffineExpr.dim(d0)
+        return AffineExpr.dim(d0, draw(st.integers(1, 3))) + AffineExpr.dim(
+            d1, draw(st.integers(1, 3))
+        )
+
+    n_in = draw(st.integers(1, 3))
+    n_res = draw(st.integers(1, 3))
+    maps = tuple(
+        AffineMap.of(n_dims, [expr() for _ in range(n_res)])
+        for _ in range(n_in + 1)
+    )
+    return GenericOp(
+        name="rand", inputs=tuple(f"i{j}" for j in range(n_in)), output="o",
+        indexing_maps=maps, iterator_types=tuple(its), dim_sizes=dim_sizes,
+    )
+
+
+class TestProperties:
+    @given(generic_ops())
+    @settings(max_examples=200, deadline=None)
+    def test_classification_total_and_consistent(self, op):
+        info = classify_kernel(op)
+        sw = detect_sliding_window(op)
+        # invariant 1: sliding-window implies a reduction iterator exists
+        if sw.is_sliding_window:
+            assert any(t == R for t in op.iterator_types)
+            assert sw.stride > 0 and sw.dilation > 0
+            assert info.kernel_class == KernelClass.SLIDING_WINDOW
+        # invariant 2: no reduction iterators → pure parallel
+        if all(t == P for t in op.iterator_types):
+            assert info.kernel_class == KernelClass.PURE_PARALLEL
+        # invariant 3: the four sets partition cleanly
+        cls = info.classes
+        assert set(cls.parallel).isdisjoint(cls.reduction)
+        for d in cls.parallel:
+            assert op.is_parallel_dim(d)
+        for d in cls.reduction:
+            assert op.is_reduction_dim(d)
+        for d in cls.window:
+            assert op.is_parallel_dim(d) and d not in cls.parallel
+
+    @given(generic_ops())
+    @settings(max_examples=100, deadline=None)
+    def test_deterministic(self, op):
+        assert classify_kernel(op) == classify_kernel(op)

@@ -1,0 +1,117 @@
+"""Checkpointing: atomicity, GC, async, elastic re-mesh restore."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree(x=0.0):
+    return {
+        "params": {"w": jnp.full((4, 4), 1.0 + x), "b": jnp.zeros(4)},
+        "opt": {"mu": jnp.full((4, 4), 2.0 + x)},
+    }
+
+
+class TestRoundtrip:
+    def test_save_restore_bitexact(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        tree = _tree(0.5)
+        mgr.save(7, tree, extra={"note": "x"})
+        restored, extra = mgr.restore(7, tree)
+        assert extra == {"note": "x"}
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_latest_step(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        assert mgr.latest_step() is None
+        mgr.save(1, _tree())
+        mgr.save(5, _tree())
+        assert mgr.latest_step() == 5
+
+    def test_structure_mismatch_caught(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _tree())
+        with pytest.raises(AssertionError):
+            mgr.restore(1, {"params": {"w": jnp.zeros((4, 4))}})
+
+
+class TestAtomicity:
+    def test_tmp_dirs_invisible(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(3, _tree())
+        # simulate a crash mid-write: stray .tmp with garbage
+        os.makedirs(tmp_path / "step_000000009.tmp")
+        assert mgr.latest_step() == 3
+
+    def test_manifest_required(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        os.makedirs(tmp_path / "step_000000004")  # no manifest → not committed
+        assert mgr.latest_step() is None
+
+    def test_gc_keeps_newest(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, _tree())
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(tmp_path)
+            if d.startswith("step_")
+        )
+        assert steps == [3, 4]
+
+
+class TestAsync:
+    def test_async_write_then_wait(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save_async(11, _tree(1.0))
+        mgr.wait()
+        restored, _ = mgr.restore(11, _tree())
+        assert float(jax.tree.leaves(restored)[0][0, 0]) == pytest.approx(3.0)
+
+    def test_async_snapshot_semantics(self, tmp_path):
+        """Mutating the live tree after save_async must not corrupt the
+        checkpoint (snapshot is taken synchronously)."""
+        mgr = CheckpointManager(str(tmp_path))
+        import numpy as onp
+
+        live = {"w": onp.ones(4)}
+        mgr.save_async(1, live)
+        live["w"][:] = 99.0
+        mgr.wait()
+        restored, _ = mgr.restore(1, {"w": jnp.zeros(4)})
+        np.testing.assert_array_equal(np.asarray(restored["w"]), np.ones(4))
+
+
+class TestElasticRemesh:
+    def test_restore_onto_different_mesh(self, subproc, tmp_path):
+        """Save on a (4,2) mesh, restore onto (2,2,2) and a single device —
+        checkpoints are mesh-agnostic logical arrays."""
+        code = f"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint.manager import CheckpointManager
+from repro.launch.mesh import make_host_mesh
+
+mgr = CheckpointManager({str(tmp_path)!r})
+mesh1 = make_host_mesh((4, 2), ("data", "model"))
+w = jnp.arange(64.0).reshape(8, 8)
+sharded = jax.device_put(w, NamedSharding(mesh1, P("data", "model")))
+mgr.save(1, {{"w": sharded}})
+
+mesh2 = make_host_mesh((2, 2, 2), ("pod", "data", "model"))
+tgt = NamedSharding(mesh2, P(("pod", "data"), "model"))
+restored, _ = mgr.restore(1, {{"w": w}}, {{"w": tgt}})
+np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(w))
+assert restored["w"].sharding == tgt
+single, _ = mgr.restore(1, {{"w": w}})
+np.testing.assert_array_equal(np.asarray(single["w"]), np.asarray(w))
+print("OK")
+"""
+        r = subproc(code, devices=8)
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert "OK" in r.stdout

@@ -1,0 +1,81 @@
+"""Gradient compression: quantization error bound + error feedback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.compress import (
+    compress_with_feedback,
+    dequantize_int8,
+    init_error_feedback,
+    quantize_int8,
+)
+
+
+class TestQuantization:
+    def test_roundtrip_error_bound(self):
+        x = jax.random.normal(jax.random.key(0), (1024,))
+        q, scale = quantize_int8(x)
+        err = np.abs(np.asarray(dequantize_int8(q, scale) - x))
+        assert err.max() <= float(scale) / 2 + 1e-7
+
+    def test_extremes_preserved(self):
+        x = jnp.asarray([-3.0, 0.0, 3.0])
+        q, scale = quantize_int8(x)
+        y = dequantize_int8(q, scale)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=0.02)
+
+    def test_zero_input(self):
+        q, scale = quantize_int8(jnp.zeros(8))
+        assert np.all(np.asarray(q) == 0)
+
+
+class TestErrorFeedback:
+    def test_error_accumulates_to_zero_bias(self):
+        """With error feedback, the long-run mean of the compressed signal
+        equals the true gradient (Seide et al. property)."""
+        g = jax.random.normal(jax.random.key(1), (256,)) * 0.01
+        err = jnp.zeros_like(g)
+        total = jnp.zeros_like(g)
+        n = 200
+        for _ in range(n):
+            q, scale, err = compress_with_feedback(g, err)
+            total = total + dequantize_int8(q, scale)
+        np.testing.assert_allclose(
+            np.asarray(total / n), np.asarray(g), atol=1e-4
+        )
+
+    def test_residual_bounded(self):
+        g = jax.random.normal(jax.random.key(2), (128,))
+        err = jnp.zeros_like(g)
+        for _ in range(50):
+            _, scale, err = compress_with_feedback(g, err)
+            assert float(jnp.max(jnp.abs(err))) <= float(scale) / 2 + 1e-6
+
+    def test_init_congruent(self):
+        grads = {"a": jnp.ones((2, 3)), "b": {"c": jnp.ones(4)}}
+        st = init_error_feedback(grads)
+        assert jax.tree.structure(st.err) == jax.tree.structure(grads)
+
+
+class TestPodAllReduce:
+    def test_compressed_psum_two_pods(self, subproc):
+        """int8 cross-pod all-reduce ≈ fp32 all-reduce (within quant err)."""
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.launch.mesh import make_host_mesh
+from repro.optim.compress import compressed_psum_pod, init_error_feedback
+mesh = make_host_mesh((2, 2, 1), ("pod", "data", "model"))
+g = {"w": jax.random.normal(jax.random.key(0), (16,)) * 0.1}
+st = init_error_feedback(g)
+with mesh:
+    out, st2 = compressed_psum_pod(g, st, mesh)
+# expected: mean over 2 pods of identical replicas = g itself
+np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(g["w"]) * 2 / 2,
+                           atol=2e-3)
+print("OK")
+"""
+        r = subproc(code, devices=4)
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert "OK" in r.stdout

@@ -1,0 +1,92 @@
+"""Dry-run machinery smoke tests (reduced 8-device meshes in subprocesses).
+
+The production 256/512-chip runs are executed by ``benchmarks`` /
+EXPERIMENTS.md; these tests prove the *machinery* — lowering, sharding,
+compile, artifact schema — on every step kind cheaply.
+"""
+import json
+import os
+
+import pytest
+
+CELLS = [
+    ("llama3.2-1b", "train_4k", "single"),
+    ("qwen2-0.5b", "prefill_32k", "single"),
+    ("qwen2-0.5b", "decode_32k", "single"),
+    ("mamba2-1.3b", "long_500k", "single"),
+    ("granite-moe-1b-a400m", "train_4k", "multi"),
+    ("seamless-m4t-medium", "decode_32k", "single"),
+]
+
+
+@pytest.mark.parametrize("arch,shape,mesh", CELLS)
+def test_cell_compiles(arch, shape, mesh, subproc, tmp_path):
+    code = f"""
+import sys
+from repro.launch.dryrun import main
+sys.exit(main(["--arch", {arch!r}, "--shape", {shape!r},
+               "--mesh", {mesh!r}, "--out", {str(tmp_path)!r}]))
+"""
+    r = subproc(
+        code, env={
+            "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+            "REPRO_MESH_SHAPE": "4,2",
+            "REPRO_MESH_SHAPE_MULTI": "2,2,2",
+        }, timeout=1200,
+    )
+    assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-2000:])
+    safe = arch.replace(".", "_")
+    rec = json.load(open(tmp_path / f"{safe}__{shape}__{mesh}.json"))
+    assert rec["ok"], rec
+    assert rec["entry"] in ("train_step", "prefill_step", "decode_step")
+    # roofline terms present and positive
+    for term in ("compute_s", "memory_s", "collective_s"):
+        assert rec[term] >= 0
+    assert rec["dominant"] in ("compute_s", "memory_s", "collective_s")
+    assert rec["hlo_flops_per_device"] > 0
+    if mesh == "multi":
+        assert rec["chips"] == 8
+
+
+def test_skip_recorded_for_full_attention_long(subproc, tmp_path):
+    """long_500k on a full-attention arch must be a recorded skip."""
+    code = f"""
+import sys
+from repro.launch.dryrun import main
+sys.exit(main(["--arch", "yi-9b", "--shape", "long_500k",
+               "--mesh", "single", "--out", {str(tmp_path)!r}]))
+"""
+    r = subproc(code, env={
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+        "REPRO_MESH_SHAPE": "4,2",
+    })
+    assert r.returncode == 0, r.stderr[-2000:]
+    rec = json.load(open(tmp_path / "yi-9b__long_500k__single.json"))
+    assert rec["skipped"] and "edge-infeasible" in rec["reason"]
+
+
+def test_input_specs_match_real_batches():
+    """A dry-run-validated cell must accept real pipeline data: the spec
+    shapes/dtypes equal the generated batch's."""
+    import jax
+
+    from repro.configs.base import SHAPES, ShapeConfig
+    from repro.configs.registry import get_config
+    from repro.data.pipeline import DataConfig, batch_for_model
+    from repro.launch import specs as S
+
+    for arch in ("llama3.2-1b", "qwen2-vl-72b"):
+        cfg = get_config(arch, smoke=True)
+        shape = ShapeConfig("t", 64, 2, "train")
+        spec = S.train_input_specs(cfg, shape)
+        batch = batch_for_model(cfg, shape, DataConfig(), 0)
+        spec_flat = jax.tree_util.tree_flatten_with_path(spec)[0]
+        batch_flat = dict(
+            (jax.tree_util.keystr(k), v)
+            for k, v in jax.tree_util.tree_flatten_with_path(batch)[0]
+        )
+        for k, v in spec_flat:
+            key = jax.tree_util.keystr(k)
+            assert key in batch_flat, key
+            got = batch_flat[key]
+            assert tuple(got.shape) == tuple(v.shape), (key, got.shape, v.shape)

@@ -1,0 +1,149 @@
+"""IR layer: affine algebra, GenericOp validation, DFG topology."""
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.ir import (
+    DFG,
+    AffineExpr,
+    AffineMap,
+    GenericOp,
+    IteratorType,
+    PayloadKind,
+    Value,
+    make_conv2d_op,
+    make_elementwise_op,
+    make_matmul_op,
+)
+
+
+class TestAffineExpr:
+    def test_single_dim(self):
+        e = AffineExpr.dim(2)
+        assert e.is_single_dim()
+        assert e.dims() == (2,)
+        assert e.coeff(2) == 1 and e.coeff(0) == 0
+
+    def test_combination_not_single(self):
+        e = AffineExpr.dim(0, 2) + AffineExpr.dim(1, 3)
+        assert not e.is_single_dim()
+        assert e.coeff(0) == 2 and e.coeff(1) == 3
+
+    def test_scaled_dim_not_single(self):
+        assert not AffineExpr.dim(0, 2).is_single_dim()
+
+    def test_offset_not_single(self):
+        assert not (AffineExpr.dim(0) + AffineExpr.constant(1)).is_single_dim()
+
+    def test_add_cancels(self):
+        e = AffineExpr.dim(0) + AffineExpr.dim(0, -1)
+        assert e.terms == () and e.const == 0
+
+    def test_mul(self):
+        e = AffineExpr.dim(1) * 3
+        assert e.coeff(1) == 3
+        assert (e * 0).terms == ()
+
+    @given(st.integers(-5, 5), st.integers(-5, 5), st.integers(0, 3),
+           st.integers(0, 3))
+    def test_evaluate_linear(self, c0, c1, d0, d1):
+        e = AffineExpr.dim(0, c0) + AffineExpr.dim(1, c1) + AffineExpr.constant(7)
+        point = [d0, d1]
+        assert e.evaluate(point) == c0 * d0 + c1 * d1 + 7
+
+
+class TestAffineMap:
+    def test_identity(self):
+        m = AffineMap.identity(3)
+        assert m.is_identity()
+        assert all(e.is_single_dim() for e in m.results)
+
+    def test_non_identity(self):
+        m = AffineMap.of(2, [AffineExpr.dim(1), AffineExpr.dim(0)])
+        assert not m.is_identity()
+
+
+class TestGenericOp:
+    def test_conv_builder_shape(self):
+        op = make_conv2d_op(
+            "c", "x", "w", "y", n=1, h_out=8, w_out=8, c_out=4, kh=3, kw=3,
+            c_in=2,
+        )
+        assert op.n_dims == 7
+        assert op.parallel_dims == (0, 1, 2, 3)
+        assert op.reduction_dims == (4, 5, 6)
+        assert op.total_trip_count == 8 * 8 * 4 * 3 * 3 * 2
+
+    def test_map_arity_validated(self):
+        with pytest.raises(ValueError):
+            GenericOp(
+                name="bad", inputs=("a",), output="b",
+                indexing_maps=(AffineMap.identity(2),),  # needs 2
+                iterator_types=(IteratorType.PARALLEL,) * 2,
+                dim_sizes=(2, 2),
+            )
+
+    def test_dim_size_mismatch(self):
+        with pytest.raises(ValueError):
+            GenericOp(
+                name="bad", inputs=(), output="b",
+                indexing_maps=(AffineMap.identity(2),),
+                iterator_types=(IteratorType.PARALLEL,) * 2,
+                dim_sizes=(2,),
+            )
+
+    def test_macs(self):
+        op = make_matmul_op("m", "a", "b", "c", m=4, k=8, n_out=2)
+        assert op.macs() == 4 * 8 * 2
+
+
+class TestDFG:
+    def _simple(self) -> DFG:
+        dfg = DFG("g")
+        dfg.add_value(Value("x", (4, 4)))
+        dfg.add_value(Value("w", (4, 4), is_constant=True))
+        dfg.add_value(Value("y", (4, 4)))
+        dfg.add_value(Value("z", (4, 4)))
+        dfg.graph_inputs.append("x")
+        dfg.add_node(make_matmul_op("mm", "x", "w", "y", m=4, k=4, n_out=4))
+        dfg.add_node(
+            make_elementwise_op("relu", ["y"], "z", (4, 4), PayloadKind.RELU)
+        )
+        dfg.graph_outputs.append("z")
+        return dfg
+
+    def test_topo_order(self):
+        dfg = self._simple()
+        order = [n.name for n in dfg.topo_order()]
+        assert order == ["mm", "relu"]
+
+    def test_producer_consumer(self):
+        dfg = self._simple()
+        assert dfg.producer_of("y").name == "mm"
+        assert [n.name for n in dfg.consumers_of("y")] == ["relu"]
+
+    def test_intermediates(self):
+        dfg = self._simple()
+        assert [v.name for v in dfg.intermediate_values()] == ["y"]
+
+    def test_duplicate_value_rejected(self):
+        dfg = self._simple()
+        with pytest.raises(ValueError):
+            dfg.add_value(Value("x", (1,)))
+
+    def test_unknown_value_rejected(self):
+        dfg = self._simple()
+        with pytest.raises(ValueError):
+            dfg.add_node(make_matmul_op("m2", "nope", "w", "y", m=4, k=4, n_out=4))
+
+    def test_cycle_detected(self):
+        dfg = DFG("cyc")
+        dfg.add_value(Value("a", (2,)))
+        dfg.add_value(Value("b", (2,)))
+        dfg.add_node(
+            make_elementwise_op("n1", ["a"], "b", (2,), PayloadKind.IDENTITY)
+        )
+        dfg.add_node(
+            make_elementwise_op("n2", ["b"], "a", (2,), PayloadKind.IDENTITY)
+        )
+        with pytest.raises(ValueError, match="cycle"):
+            dfg.topo_order()

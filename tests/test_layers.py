@@ -1,0 +1,192 @@
+"""Layer-level: attention impl parity, streaming-backward VJPs, RoPE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.models import layers as L
+from repro.models.lm import chunked_ce_loss
+
+
+def _qkv(key, b=2, hq=8, hkv=2, s=64, d=16):
+    ks = jax.random.split(key, 3)
+    return (
+        jax.random.normal(ks[0], (b, hq, s, d), jnp.float32),
+        jax.random.normal(ks[1], (b, hkv, s, d), jnp.float32),
+        jax.random.normal(ks[2], (b, hkv, s, d), jnp.float32),
+    )
+
+
+class TestAttentionParity:
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_blockwise_vs_reference(self, causal):
+        q, k, v = _qkv(jax.random.key(0))
+        out = L.blockwise_attention(q, k, v, causal=causal,
+                                    block_q=16, block_k=16)
+        exp = ref.attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_pallas_vs_reference(self):
+        q, k, v = _qkv(jax.random.key(1))
+        out = L.attention_pallas(q, k, v, causal=True, block_q=16, block_k=16)
+        exp = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_decode_attention_matches_masked_full(self):
+        q, k, v = _qkv(jax.random.key(2), s=32)
+        q1 = q[:, :, -1:, :]
+        out = L.decode_attention(q1, k, v, jnp.asarray(32))
+        exp = ref.attention(q1, k, v, causal=True, q_offset=31)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_block_size_invariance(self):
+        q, k, v = _qkv(jax.random.key(3))
+        o1 = L.blockwise_attention(q, k, v, block_q=16, block_k=16)
+        o2 = L.blockwise_attention(q, k, v, block_q=64, block_k=32)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   atol=2e-5, rtol=2e-5)
+
+
+class TestStreamingBackward:
+    """The custom VJPs must be gradient-exact vs the default scan VJP."""
+
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_attention_grads_match(self, causal):
+        q, k, v = _qkv(jax.random.key(4))
+
+        def loss(impl):
+            def f(q, k, v):
+                o = L.blockwise_attention(
+                    q, k, v, causal=causal, block_q=16, block_k=16,
+                    streaming_bwd=impl,
+                )
+                return jnp.sum(jnp.sin(o))
+            return f
+
+        g1 = jax.grad(loss(True), argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(loss(False), argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-4, rtol=2e-4)
+
+    def test_attention_grads_vs_dense(self):
+        q, k, v = _qkv(jax.random.key(5), s=32)
+        g1 = jax.grad(
+            lambda *a: jnp.sum(L.blockwise_attention(
+                *a, causal=True, block_q=16, block_k=16) ** 2),
+            argnums=(0, 1, 2),
+        )(q, k, v)
+        g2 = jax.grad(
+            lambda *a: jnp.sum(ref.attention(*a, causal=True) ** 2),
+            argnums=(0, 1, 2),
+        )(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-4, rtol=2e-4)
+
+    def test_ce_loss_grads_match(self):
+        ks = jax.random.split(jax.random.key(6), 3)
+        h = jax.random.normal(ks[0], (2, 32, 16))
+        w = jax.random.normal(ks[1], (16, 50)) * 0.3
+        labels = jax.random.randint(ks[2], (2, 32), 0, 50)
+        for chunk in (8, 16, 32):
+            l1, g1 = jax.value_and_grad(
+                lambda h, w: chunked_ce_loss(h, w, labels, chunk, True),
+                argnums=(0, 1),
+            )(h, w)
+            l2, g2 = jax.value_and_grad(
+                lambda h, w: chunked_ce_loss(h, w, labels, chunk, False),
+                argnums=(0, 1),
+            )(h, w)
+            np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+            for a, b in zip(g1, g2):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           atol=1e-5, rtol=1e-5)
+
+    def test_ce_loss_vs_dense_softmax(self):
+        ks = jax.random.split(jax.random.key(7), 3)
+        h = jax.random.normal(ks[0], (2, 16, 8))
+        w = jax.random.normal(ks[1], (8, 20)) * 0.5
+        labels = jax.random.randint(ks[2], (2, 16), 0, 20)
+
+        def dense(h, w):
+            logits = (h @ w).astype(jnp.float32)
+            lp = jax.nn.log_softmax(logits)
+            gold = jnp.take_along_axis(lp, labels[..., None], -1)[..., 0]
+            return -jnp.mean(gold)
+
+        l1, g1 = jax.value_and_grad(
+            lambda h, w: chunked_ce_loss(h, w, labels, 8), argnums=(0, 1)
+        )(h, w)
+        l2, g2 = jax.value_and_grad(dense, argnums=(0, 1))(h, w)
+        np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-5)
+
+
+class TestRope:
+    def test_rope_rotation_preserves_norm(self):
+        pos = jnp.arange(16, dtype=jnp.int32)[None]
+        cos, sin = L.rope_cos_sin(pos, 32, 10_000.0)
+        x = jax.random.normal(jax.random.key(0), (1, 2, 16, 32))
+        y = L.apply_rope(x, cos, sin)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(y), axis=-1),
+            np.linalg.norm(np.asarray(x), axis=-1),
+            rtol=1e-5,
+        )
+
+    def test_rope_relative_property(self):
+        """q·k after RoPE depends only on relative distance."""
+        hd = 32
+        q = jax.random.normal(jax.random.key(1), (1, 1, 1, hd))
+        k = jax.random.normal(jax.random.key(2), (1, 1, 1, hd))
+
+        def dot_at(pq, pk):
+            cq, sq_ = L.rope_cos_sin(jnp.asarray([[pq]], jnp.int32), hd, 1e4)
+            ck, sk_ = L.rope_cos_sin(jnp.asarray([[pk]], jnp.int32), hd, 1e4)
+            qr = L.apply_rope(q, cq, sq_)
+            kr = L.apply_rope(k, ck, sk_)
+            return float(jnp.sum(qr * kr))
+
+        assert dot_at(5, 3) == pytest.approx(dot_at(105, 103), rel=1e-4)
+
+    def test_mrope_text_equals_rope(self):
+        """Identical (t,h,w) streams == plain RoPE (text tokens)."""
+        hd = 32
+        pos = jnp.arange(8, dtype=jnp.int32)[None]
+        c1, s1 = L.rope_cos_sin(pos, hd, 1e4)
+        streams = jnp.broadcast_to(pos, (3, 1, 8))
+        c2, s2 = L.rope_cos_sin(
+            pos, hd, 1e4, mrope_sections=(8, 4, 4), mrope_positions=streams
+        )
+        np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+class TestMlp:
+    def test_streamed_matches_dense(self):
+        from repro.configs.registry import get_config
+
+        cfg = get_config("llama3.2-1b", smoke=True)
+        p = L.init_mlp(jax.random.key(0), cfg)
+        x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model),
+                              jnp.float32).astype(cfg.param_dtype)
+        dense = L.mlp_layer(p, cfg.with_(mlp_impl="dense"), x)
+        streamed = L.mlp_layer(p, cfg.with_(mlp_impl="streamed"), x)
+        np.testing.assert_allclose(
+            np.asarray(dense, np.float32), np.asarray(streamed, np.float32),
+            atol=2e-2, rtol=2e-2,
+        )
+
+    def test_rmsnorm(self):
+        x = jax.random.normal(jax.random.key(0), (2, 8)) * 10
+        w = jnp.ones((8,))
+        y = L.rmsnorm(x, w)
+        rms = np.sqrt(np.mean(np.asarray(y) ** 2, -1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-3)

@@ -1,0 +1,81 @@
+"""Regression tests pinning the paper's qualitative claims to the
+calibrated models (EXPERIMENTS.md §Paper-validation)."""
+import pytest
+
+from benchmarks.paper_tables import PAPER_TABLE2, _modes_for, fig3, table4
+from repro.core import cnn_graphs
+from repro.core.dse import solve_ilp
+from repro.core.resource_model import KV260_BRAM18K, KV260_DSP
+from repro.core.streaming import plan_streams
+
+
+class TestTable2Claims:
+    @pytest.fixture(scope="class")
+    def modes(self):
+        return {
+            name: _modes_for(make())
+            for name, make in cnn_graphs.PAPER_SUITE.items()
+        }
+
+    def test_ming_fastest_everywhere(self, modes):
+        for name, m in modes.items():
+            cycles = {k: v[0] for k, v in m.items()}
+            assert cycles["ming"] == min(cycles.values()), name
+
+    def test_ming_bram_constant_in_input_size(self, modes):
+        """Table II: MING BRAM identical for 32² and 224² inputs."""
+        for a, b in (("conv_relu_32", "conv_relu_224"),
+                     ("cascade_conv_32", "cascade_conv_224"),
+                     ("residual_block_32", "residual_block_224")):
+            assert modes[a]["ming"][1] == modes[b]["ming"][1]
+
+    def test_ming_single_conv_bram_matches_paper_exactly(self, modes):
+        assert modes["conv_relu_32"]["ming"][1] == 16  # paper: 16
+
+    def test_streamhls_infeasible_at_224(self, modes):
+        """Paper: StreamHLS exceeds the KV260 BRAM at 224² inputs."""
+        for name in ("conv_relu_224", "cascade_conv_224",
+                     "residual_block_224"):
+            feasible = modes[name]["streamhls"][3]
+            assert not feasible, name
+
+    def test_ming_always_feasible(self, modes):
+        for name, m in modes.items():
+            assert m["ming"][3], name
+
+    def test_ming_speedup_order_of_magnitude(self, modes):
+        """Paper: single-layer ≈ 504-582×; ours must land in [100, 2000]."""
+        for name in ("conv_relu_32", "conv_relu_224"):
+            v = modes[name]["vanilla"][0]
+            g = modes[name]["ming"][0]
+            assert 100 <= v / g <= 2000, (name, v / g)
+
+    def test_ming_best_dsp_efficiency(self, modes):
+        """Paper: MING has the highest E_DSP on every kernel."""
+        for name, m in modes.items():
+            v_cyc, _, v_dsp, _ = m["vanilla"]
+
+            def edsp(mode):
+                cyc, _, dsp, _ = m[mode]
+                return (v_cyc / max(cyc, 1)) / max(dsp / max(v_dsp, 1), 1e-9)
+
+            scores = {mode: edsp(mode) for mode in m}
+            assert scores["ming"] == max(scores.values()), (name, scores)
+
+
+class TestFig3Claim:
+    def test_materialized_grows_streaming_flat(self):
+        data = fig3(emit=lambda *_: None, sizes=(32, 128, 224))
+        mat, stream = data["materialized"], data["streaming"]
+        assert mat[-1] > mat[0] * 10          # ~N² growth
+        assert stream[-1] == stream[0]        # constant
+
+
+class TestTable4Claim:
+    def test_feasible_under_extreme_dsp_scarcity(self):
+        rows = table4(emit=lambda *_: None, budgets=(1248, 250, 50))
+        assert all(r["feasible"] for r in rows)
+        # monotone: less DSP -> no more speedup
+        speeds = [r["speedup"] for r in rows]
+        assert speeds[0] >= speeds[1] >= speeds[2]
+        assert all(r["dsp"] <= r["budget"] for r in rows)

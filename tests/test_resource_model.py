@@ -1,0 +1,122 @@
+"""Resource model (paper C3): BRAM granularity, int8 DSP packing, modes."""
+import pytest
+
+from repro.core import cnn_graphs
+from repro.core.resource_model import (
+    BRAM18K_BITS,
+    ExecMode,
+    FpgaResourceModel,
+    LUTRAM_THRESHOLD_BITS,
+    TpuResourceModel,
+    TPU_V5E,
+    bram_blocks,
+    dsp_per_mult,
+)
+from repro.core.streaming import plan_streams
+
+
+class TestBramBlocks:
+    def test_zero(self):
+        assert bram_blocks(0) == 0
+
+    def test_lutram_threshold(self):
+        assert bram_blocks(LUTRAM_THRESHOLD_BITS) == 0
+        assert bram_blocks(LUTRAM_THRESHOLD_BITS + 1) == 1
+
+    def test_rounding(self):
+        assert bram_blocks(BRAM18K_BITS) == 1
+        assert bram_blocks(BRAM18K_BITS + 1) == 2
+
+    def test_partition_granularity_loss(self):
+        """Partitioning a 2-block array into 4 slices costs 4 blocks when
+        slices exceed the LUTRAM threshold — the paper's explanation of
+        StreamHLS's unroll-driven BRAM growth."""
+        bits = 2 * BRAM18K_BITS
+        assert bram_blocks(bits, partitions=1) == 2
+        assert bram_blocks(bits, partitions=4) == 4
+
+    def test_partition_into_lutram(self):
+        bits = 4 * LUTRAM_THRESHOLD_BITS
+        assert bram_blocks(bits, partitions=4) == 0
+
+
+class TestDspPacking:
+    def test_int8_packs_two_per_dsp(self):
+        assert dsp_per_mult(8) == 0.5
+
+    def test_int16_one(self):
+        assert dsp_per_mult(16) == 1.0
+
+    def test_wide_cascades(self):
+        assert dsp_per_mult(27) == 2.0
+        assert dsp_per_mult(32) == 4.0
+
+
+class TestModes:
+    def _plans(self, n=32):
+        plan = plan_streams(cnn_graphs.conv_relu(n))
+        model = FpgaResourceModel()
+        return plan, model
+
+    def test_streaming_bram_constant_in_input_size(self):
+        """MING's BRAM is line-buffer-only: grows ~linearly in N (line
+        length), not N² (tensor area)."""
+        model = FpgaResourceModel()
+        brams = []
+        for n in (32, 224):
+            plan = plan_streams(cnn_graphs.conv_relu(n))
+            est = model.estimate(plan, ExecMode.STREAMING, {})
+            brams.append(est.bram)
+        assert brams[1] <= brams[0] * (224 / 32) * 1.5
+
+    def test_vanilla_bram_grows_quadratically(self):
+        """Fig. 3: materialized BRAM scales with tensor area."""
+        model = FpgaResourceModel()
+        brams = []
+        for n in (32, 224):
+            plan = plan_streams(cnn_graphs.conv_relu(n))
+            est = model.estimate(plan, ExecMode.VANILLA, {})
+            brams.append(est.bram)
+        assert brams[1] >= brams[0] * 20  # paper: 19 → 707 (~37×)
+
+    def test_war_ii_slows_materialized(self):
+        plan, model = self._plans()
+        s = model.estimate(plan, ExecMode.STREAMING, {})
+        m = model.estimate(plan, ExecMode.MATERIALIZED_DATAFLOW, {})
+        assert m.cycles > s.cycles  # II=2 vs II=1 at equal unroll
+
+    def test_pipeline_cycles_less_than_sum(self):
+        plan, model = self._plans()
+        est = model.estimate(plan, ExecMode.STREAMING, {})
+        assert est.pipeline_cycles <= est.cycles
+
+    def test_relu_contributes_no_dsp(self):
+        plan, model = self._plans()
+        est = model.estimate(plan, ExecMode.STREAMING, {})
+        relu = [n for n in est.nodes if n.name == "relu0"][0]
+        assert relu.dsp == 0
+
+
+class TestTpuModel:
+    def test_matmul_aligned_full_util(self):
+        m = TpuResourceModel()
+        e = m.matmul_block(128, 512, 128)
+        assert e.mxu_util == 1.0
+        assert e.cycles == pytest.approx(512.0)
+
+    def test_matmul_misaligned_wastes_lanes(self):
+        m = TpuResourceModel()
+        e = m.matmul_block(64, 512, 128)
+        assert e.mxu_util == pytest.approx(0.5)
+
+    def test_attention_vmem_scales_with_blocks(self):
+        m = TpuResourceModel()
+        small = m.attention_blocks(block_q=128, block_k=128, head_dim=128)
+        big = m.attention_blocks(block_q=512, block_k=512, head_dim=128)
+        assert big.vmem_bytes > small.vmem_bytes
+
+    def test_roofline_time(self):
+        m = TpuResourceModel()
+        c, h = m.roofline_time(197e12, 819e9, chips=1)
+        assert c == pytest.approx(1.0)
+        assert h == pytest.approx(1.0)

@@ -1,0 +1,148 @@
+"""Distribution layer: sharding rules, multi-device parity (subprocess)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import get_config
+from repro.distributed import sharding as shd
+from repro.launch import steps as ST
+from repro.launch.mesh import make_host_mesh, single_device_mesh
+
+
+class TestParamRules:
+    def test_llama_specs(self):
+        mesh = single_device_mesh()
+        cfg = get_config("llama3.2-1b", smoke=True)
+        shape = jax.eval_shape(lambda: ST.model_init(jax.random.key(0), cfg))
+        sh = shd.make_param_shardings(mesh, shape)
+        flat = {
+            jax.tree_util.keystr(k): v.spec
+            for k, v in jax.tree_util.tree_flatten_with_path(sh)[0]
+        }
+        # stacked block leaves replicate the layer axis and shard TP/FSDP
+        wq = [v for k, v in flat.items() if "wq" in k][0]
+        assert wq[0] is None            # layer-stack axis never sharded
+        assert "model" in wq            # TP somewhere
+        embed = [v for k, v in flat.items() if "embed" in k][0]
+        assert "model" in embed
+
+    def test_divisibility_fallback(self):
+        """mamba2's vocab (50280) does not divide model=16 → replicated."""
+        mesh = make_host_mesh((1, 1), ("data", "model"))  # trivially divides
+        # emulate a 16-way model axis by asking the spec logic directly
+        import numpy as np
+        from jax.sharding import Mesh
+
+        devs = np.array(jax.devices() * 1)
+        cfg = get_config("mamba2-1.3b")
+        shape = jax.eval_shape(lambda: ST.model_init(jax.random.key(0), cfg))
+        # fake mesh with 16 model "devices" is impossible with 1 real device;
+        # check the predicate directly instead
+        assert cfg.vocab_size % 16 != 0
+
+    def test_batch_fallback_b1(self):
+        mesh = make_host_mesh((1, 1), ("data", "model"))
+        b = {"tokens": jax.ShapeDtypeStruct((1, 64), jnp.int32)}
+        sh = shd.make_batch_shardings(mesh, b)
+        assert sh["tokens"].spec == P(None, None) or sh["tokens"].spec == P("data", None)
+
+
+class TestMultiDeviceParity:
+    def test_train_step_matches_single_device(self, subproc):
+        """One train step on a (2,2) mesh must equal the single-device
+        result bit-for-bit-ish (fp32 tolerance) — proves the sharding
+        rules don't change the math."""
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.registry import get_config
+from repro.distributed import sharding as shd
+from repro.distributed.ctx import activation_sharding
+from repro.launch import steps as ST
+from repro.launch.mesh import make_host_mesh, single_device_mesh
+from repro.optim import adamw
+from repro.data.pipeline import DataConfig, batch_for_model
+from repro.configs.base import ShapeConfig
+
+cfg = get_config("llama3.2-1b", smoke=True).with_(dtype="float32")
+opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+shape = ShapeConfig("t", 32, 4, "train")
+batch = batch_for_model(cfg, shape, DataConfig(seed=0), 0)
+
+def run(mesh):
+    hook = shd.activation_hook(mesh)
+    with mesh, activation_sharding(hook):
+        params = ST.model_init(jax.random.key(0), cfg)
+        p_sh = shd.make_param_shardings(mesh, jax.eval_shape(lambda: params))
+        params = jax.device_put(params, p_sh)
+        opt = adamw.init(params, opt_cfg)
+        step = jax.jit(ST.make_train_step(cfg, opt_cfg),
+                       in_shardings=(p_sh, None, None))
+        new_p, _, m = step(params, opt, batch)
+        return float(m["loss"]), np.asarray(jax.tree.leaves(new_p)[0],
+                                            np.float32)
+
+l1, p1 = run(make_host_mesh((2, 2), ("data", "model")))
+l2, p2 = run(single_device_mesh())
+np.testing.assert_allclose(l1, l2, rtol=1e-5)
+# params pass through Adam's rsqrt: fp32 reduction-order noise ~1e-4
+np.testing.assert_allclose(p1, p2, atol=3e-4, rtol=1e-3)
+print("OK", l1)
+"""
+        r = subproc(code, devices=4)
+        assert r.returncode == 0, r.stderr[-2500:]
+        assert "OK" in r.stdout
+
+    def test_grad_accum_invariance(self, subproc):
+        """grad_accum=2 must produce the same update as grad_accum=1."""
+        code = """
+import jax, numpy as np
+from repro.configs.registry import get_config
+from repro.launch import steps as ST
+from repro.optim import adamw
+from repro.data.pipeline import DataConfig, batch_for_model
+from repro.configs.base import ShapeConfig
+
+cfg = get_config("qwen2-0.5b", smoke=True).with_(dtype="float32")
+opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+batch = batch_for_model(cfg, ShapeConfig("t", 32, 4, "train"),
+                        DataConfig(seed=1), 0)
+params = ST.model_init(jax.random.key(0), cfg)
+opt = adamw.init(params, opt_cfg)
+outs = {}
+for ga in (1, 2):
+    step = jax.jit(ST.make_train_step(cfg, opt_cfg, grad_accum=ga))
+    new_p, _, m = step(params, opt, batch)
+    outs[ga] = (float(m["loss"]), np.asarray(jax.tree.leaves(new_p)[0],
+                                             np.float32))
+np.testing.assert_allclose(outs[1][0], outs[2][0], rtol=1e-5)
+np.testing.assert_allclose(outs[1][1], outs[2][1], atol=2e-5, rtol=2e-5)
+print("OK")
+"""
+        r = subproc(code, devices=1)
+        assert r.returncode == 0, r.stderr[-2500:]
+        assert "OK" in r.stdout
+
+    def test_cache_sharding_adapts(self, subproc):
+        """Hkv=2 cannot shard over model=4 → seq axis takes it."""
+        code = """
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh
+
+mesh = make_host_mesh((2, 4), ("data", "model"))
+cache = {"b0": {"k": jax.ShapeDtypeStruct((2, 4, 2, 64, 16), jnp.bfloat16),
+                "v": jax.ShapeDtypeStruct((2, 4, 2, 64, 16), jnp.bfloat16)}}
+sh = shd.make_cache_shardings(mesh, cache)
+spec = sh["b0"]["k"].spec
+assert spec == P(None, "data", None, "model", None), spec
+# Hkv divisible: heads take it
+cache2 = {"b0": {"k": jax.ShapeDtypeStruct((2, 4, 8, 64, 16), jnp.bfloat16)}}
+spec2 = shd.make_cache_shardings(mesh, cache2)["b0"]["k"].spec
+assert spec2 == P(None, "data", "model", None, None), spec2
+print("OK")
+"""
+        r = subproc(code, devices=8)
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert "OK" in r.stdout

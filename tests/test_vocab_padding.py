@@ -1,0 +1,77 @@
+"""Vocab padding (§Perf optimization): numerically exact vs unpadded."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig, count_params
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig, batch_for_model
+from repro.models import lm
+
+
+def _pad_params(params, v_old, v_new):
+    """Zero-pad the vocab rows/cols so padded params == unpadded math."""
+    out = dict(params)
+    if "embed" in out:
+        out["embed"] = jnp.pad(out["embed"], ((0, v_new - v_old), (0, 0)))
+    if "lm_head" in out:
+        out["lm_head"] = jnp.pad(out["lm_head"], ((0, 0), (0, v_new - v_old)))
+    return out
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg0 = get_config("mamba2-1.3b", smoke=True)     # vocab 256
+    cfg1 = cfg0.with_(pad_vocab_to=96)               # → 288
+    batch = batch_for_model(cfg0, ShapeConfig("t", 32, 2, "train"),
+                            DataConfig(), 0)
+    p0 = lm.init_params(jax.random.key(0), cfg0)
+    p1 = _pad_params(p0, cfg0.vocab_size, cfg1.padded_vocab)
+    return cfg0, cfg1, p0, p1, batch
+
+
+class TestPaddedEquivalence:
+    def test_padded_shapes(self, setup):
+        cfg0, cfg1, p0, p1, _ = setup
+        assert cfg1.padded_vocab == 288
+        assert p1["embed"].shape[0] == 288
+        assert count_params(cfg1) == sum(
+            x.size for x in jax.tree.leaves(
+                lm.init_params(jax.random.key(0), cfg1))
+        )
+
+    def test_loss_identical(self, setup):
+        cfg0, cfg1, p0, p1, batch = setup
+        l0 = float(lm.lm_loss(p0, cfg0, batch))
+        l1 = float(lm.lm_loss(p1, cfg1, batch))
+        assert l0 == pytest.approx(l1, rel=1e-6)
+
+    def test_grads_identical_on_real_rows(self, setup):
+        cfg0, cfg1, p0, p1, batch = setup
+        g0 = jax.grad(lambda p: lm.lm_loss(p, cfg0, batch))(p0)
+        g1 = jax.grad(lambda p: lm.lm_loss(p, cfg1, batch))(p1)
+        v = cfg0.vocab_size
+        np.testing.assert_allclose(
+            np.asarray(g1["embed"][:v], np.float32),
+            np.asarray(g0["embed"], np.float32), atol=1e-3, rtol=1e-2,
+        )
+        # padded embed rows get zero grad (never indexed, masked in loss)
+        assert float(jnp.abs(g1["embed"][v:].astype(jnp.float32)).max()) == 0.0
+
+    def test_prefill_decode_logits_sliced(self, setup):
+        cfg0, cfg1, p0, p1, batch = setup
+        logits0, _ = lm.lm_prefill(p0, cfg0, {"tokens": batch["tokens"]})
+        logits1, _ = lm.lm_prefill(p1, cfg1, {"tokens": batch["tokens"]})
+        assert logits1.shape == (2, cfg0.vocab_size)
+        np.testing.assert_allclose(
+            np.asarray(logits0), np.asarray(logits1), atol=1e-3, rtol=1e-3
+        )
+
+    def test_sharding_unlocked(self):
+        """The point of the exercise: padded vocab divides the model axis."""
+        cfg = get_config("mamba2-1.3b")             # 50280
+        assert cfg.vocab_size % 16 != 0
+        padded = cfg.with_(pad_vocab_to=256)
+        assert padded.padded_vocab % 256 == 0       # 16 model × 16 sublanes
+        assert padded.padded_vocab - cfg.vocab_size < 256
