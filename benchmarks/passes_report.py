@@ -1,0 +1,92 @@
+"""Pass-pipeline benchmark report (ISSUE 1 acceptance artifacts).
+
+Two sections:
+
+  1. **Fusion report** — pre/post-fusion node count, stream-edge count,
+     and modeled BRAM (solve_ilp under KV260 budgets) per suite kernel,
+     plus the per-pass statistics trail.
+  2. **Partition report** — ``deep_cascade`` at 32²/64²/224²: does the
+     whole (fused) graph fit, and if not, the layer-group schedule that
+     does — group count, per-group BRAM/DSP, DRAM spill bytes — next to
+     the vanilla/whole-graph verdict.
+"""
+from __future__ import annotations
+
+from repro.core import cnn_graphs
+from repro.core.dse import solve_ilp
+from repro.core.resource_model import KV260_BRAM18K, KV260_DSP
+from repro.core.streaming import plan_streams
+from repro.passes import partition_layer_groups, run_default_pipeline
+
+
+def _internal_streams(plan) -> int:
+    return sum(
+        1 for s in plan.streams.values() if s.producer and s.consumer
+    )
+
+
+def fusion_report(emit=print) -> list[dict]:
+    emit("# Pass pipeline — pre/post-fusion footprint per kernel")
+    emit("kernel,nodes_pre,nodes_post,streams_pre,streams_post,"
+         "bram_pre,bram_post,ops_fused")
+    rows = []
+    for name, make in cnn_graphs.PAPER_SUITE.items():
+        dfg = make()
+        result = run_default_pipeline(dfg)
+        pre_plan, post_plan = plan_streams(dfg), plan_streams(result.dfg)
+        pre = solve_ilp(pre_plan)
+        post = solve_ilp(post_plan)
+        row = {
+            "kernel": name,
+            "nodes_pre": len(dfg.nodes),
+            "nodes_post": len(result.dfg.nodes),
+            "streams_pre": _internal_streams(pre_plan),
+            "streams_post": _internal_streams(post_plan),
+            "bram_pre": pre.bram_used,
+            "bram_post": post.bram_used,
+            "ops_fused": result.stat("ops_fused"),
+        }
+        rows.append(row)
+        emit(",".join(str(row[k]) for k in row))
+    return rows
+
+
+def partition_report(emit=print, sizes=(32, 64, 224)) -> list[dict]:
+    emit("# Layer-group partitioning — deep_cascade (4×Conv3x3+ReLU, "
+         f"c_mid=136) vs KV260 (BRAM {KV260_BRAM18K}, DSP {KV260_DSP})")
+    emit("input_size,whole_graph_fits,groups,group_brams,group_dsps,"
+         "spill_KiB,total_mcycles")
+    rows = []
+    for n in sizes:
+        fused = run_default_pipeline(cnn_graphs.deep_cascade(n)).dfg
+        pp = partition_layer_groups(fused)
+        row = {
+            "input_size": n,
+            "whole_graph_fits": pp.whole_graph_feasible,
+            "groups": len(pp.groups),
+            "group_brams": "|".join(str(g.bram) for g in pp.groups),
+            "group_dsps": "|".join(str(g.dsp) for g in pp.groups),
+            "spill_KiB": round(sum(s.bytes for s in pp.spills()) / 1024, 1),
+            "total_mcycles": round(pp.total_cycles / 1e6, 3),
+        }
+        rows.append(row)
+        emit(",".join(str(row[k]) for k in row))
+        assert pp.feasible, f"deep_cascade({n}) has an over-budget group"
+    return rows
+
+
+def pass_statistics(emit=print) -> None:
+    emit("# Per-pass statistics (cascade_conv_32)")
+    emit(run_default_pipeline(cnn_graphs.cascade_conv(32)).report())
+
+
+def run_all(emit=print) -> None:
+    fusion_report(emit)
+    emit("")
+    partition_report(emit)
+    emit("")
+    pass_statistics(emit)
+
+
+if __name__ == "__main__":
+    run_all()

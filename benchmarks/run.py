@@ -3,13 +3,18 @@
 Sections:
   1. Paper tables (Table II, Fig. 3, Table IV) from the calibrated
      FPGA resource model — one harness per paper artifact.
-  2. Kernel micro-validation: every Pallas kernel vs its ref.py oracle
+  2. Pass-pipeline report: pre/post-fusion footprint + layer-group
+     partitioning of deep_cascade at 32²/64²/224².
+  3. Kernel micro-validation: every Pallas kernel vs its ref.py oracle
      (interpret mode) with wall-times (CPU emulation — correctness
      gates, not TPU performance).
-  3. MING DSE micro-bench: ILP solve times + explored nodes (the paper's
+  4. MING DSE micro-bench: ILP solve times + explored nodes (the paper's
      "lightweight DSE" claim).
-  4. Roofline summary from dry-run artifacts (if present) + the three
+  5. Roofline summary from dry-run artifacts (if present) + the three
      hillclimb cells.
+
+``--smoke`` runs the model-only sections (1, 2, 4) as a fast CI sanity
+gate — no Pallas interpret-mode execution, no roofline artifacts.
 
 Writes everything it prints; exit code 0 iff all validations pass.
 """
@@ -29,6 +34,14 @@ def paper_tables() -> bool:
 
     _section("Paper tables (Table II / Fig. 3 / Table IV)")
     pt.run_all()
+    return True
+
+
+def passes_section() -> bool:
+    from benchmarks import passes_report
+
+    _section("Pass pipeline (fusion + layer-group partitioning)")
+    passes_report.run_all()
     return True
 
 
@@ -135,13 +148,17 @@ def roofline_summary() -> bool:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-kernels", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast model-only sanity pass (CI gate)")
     args = ap.parse_args(argv)
     ok = True
     ok &= paper_tables()
-    if not args.skip_kernels:
+    ok &= passes_section()
+    if not (args.skip_kernels or args.smoke):
         ok &= kernel_validation()
     ok &= dse_bench()
-    ok &= roofline_summary()
+    if not args.smoke:
+        ok &= roofline_summary()
     _section(f"RESULT: {'PASS' if ok else 'FAIL'}")
     return 0 if ok else 1
 

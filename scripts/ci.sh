@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: unit tests + model-only benchmark smoke.
+# Usage: scripts/ci.sh  (from anywhere; cds to the repo root itself)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+python -m pytest -q
+python -m benchmarks.run --smoke

@@ -28,6 +28,7 @@ from .ir import (
     DFG,
     AffineExpr,
     AffineMap,
+    FusedEpilogue,
     GenericOp,
     IteratorType,
     PayloadKind,
@@ -49,4 +50,35 @@ from .resource_model import (
 )
 from .streaming import FusionRegion, NodePlan, StreamEdge, StreamingPlan, plan_streams
 
-__all__ = [k for k in dir() if not k.startswith("_")]
+#: pass-pipeline API re-exported lazily (PEP 562) — ``repro.passes``
+#: imports ``repro.core`` submodules, so an eager import here would cycle.
+_PASSES_EXPORTS = (
+    "Pass",
+    "PassManager",
+    "PassStats",
+    "PipelineResult",
+    "Canonicalize",
+    "DeadCodeElimination",
+    "ElementwiseChainFusion",
+    "ConvActivationFusion",
+    "LayerGroup",
+    "PartitionError",
+    "PartitionPlan",
+    "SpillBuffer",
+    "partition_layer_groups",
+    "VerificationError",
+    "verify_dfg",
+    "default_pipeline",
+    "run_default_pipeline",
+)
+
+
+def __getattr__(name: str):
+    if name in _PASSES_EXPORTS:
+        from repro import passes as _passes
+
+        return getattr(_passes, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [k for k in dir() if not k.startswith("_")] + list(_PASSES_EXPORTS)

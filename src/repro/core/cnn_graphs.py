@@ -139,6 +139,29 @@ def feed_forward(batch: int = 512, d_in: int = 128, d_hidden: int = 256) -> DFG:
     return dfg
 
 
+def deep_cascade(n_size: int = 32, c_in: int = 3, c_mid: int = 136,
+                 n_layers: int = 4) -> DFG:
+    """(Conv3×3+ReLU) × 4 with wide channels — the partitioning showcase.
+
+    ``c_mid=136`` is chosen so that at 224² the whole-graph streaming
+    plan *provably* exceeds the KV260 BRAM budget even at unroll=1
+    (per-conv weights ≈73 blocks + line buffer ≈27 blocks ⇒ ~3×101+3
+    blocks > 288) while every conv fits comfortably on its own — the
+    graph only maps via ``repro.passes.partition_layer_groups``.  At 32²
+    the line buffers shrink (~5 blocks each) and the whole graph fits.
+    """
+    dfg = DFG(f"deep_cascade_{n_size}")
+    dfg.add_value(Value("x", (1, n_size, n_size, c_in), INT8))
+    dfg.graph_inputs.append("x")
+    cur, c_prev = "x", c_in
+    for i in range(n_layers):
+        cur = _conv(dfg, i, cur, 1, n_size, n_size, c_prev, c_mid)
+        cur = _relu(dfg, i, cur, (1, n_size, n_size, c_mid))
+        c_prev = c_mid
+    dfg.graph_outputs.append(cur)
+    return dfg
+
+
 PAPER_SUITE = {
     "conv_relu_32": lambda: conv_relu(32),
     "conv_relu_224": lambda: conv_relu(224),
@@ -148,4 +171,6 @@ PAPER_SUITE = {
     "residual_block_224": lambda: residual_block(224),
     "linear": linear,
     "feed_forward": feed_forward,
+    "deep_cascade_32": lambda: deep_cascade(32),
+    "deep_cascade_224": lambda: deep_cascade(224),
 }

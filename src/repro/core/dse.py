@@ -159,13 +159,31 @@ def solve_ilp(
     model: FpgaResourceModel | None = None,
     max_unroll: int = 4096,
 ) -> DseResult:
-    """Solve Eq. (1) exactly for the STREAMING (MING) mode."""
+    """Solve Eq. (1) exactly for the STREAMING (MING) mode.
+
+    Inter-process FIFO BRAM (see
+    :meth:`FpgaResourceModel.stream_fifo_blocks`) is assignment-independent
+    and charged as a fixed overhead against ``b_total`` — fusing nodes
+    (``repro.passes``) shrinks it before the solver ever runs.
+    """
     model = model or FpgaResourceModel()
     nodes = plan.node_order()
+    fifo_bram = model.stream_fifo_blocks(plan)
+    b_nodes = b_total - fifo_bram
     cand: dict[str, list[UnrollChoice]] = {
         n.name: node_candidates(n, model, d_total, max_unroll)
         for n in nodes
     }
+
+    def _infeasible(explored: int = 0) -> DseResult:
+        unrolls = {n.name: 1 for n in nodes}
+        est = model.estimate(plan, ExecMode.STREAMING, unrolls)
+        return DseResult(unrolls, dict(unrolls), est, est.cycles,
+                         est.dsp, est.bram, feasible=False, explored=explored)
+
+    if any(not cs for cs in cand.values()) or b_nodes < 0:
+        return _infeasible()
+
     # stream adjacency: consumer -> producers already placed (topo order)
     producers_of: dict[str, list[str]] = {n.name: [] for n in nodes}
     for s in plan.streams.values():
@@ -174,17 +192,28 @@ def solve_ilp(
 
     order = [n.name for n in nodes]
     best: dict = {"cycles": math.inf, "assign": None, "explored": 0}
-    # optimistic per-node lower bounds for pruning
-    min_cycles = {name: min(c.cycles for c in cs) for name, cs in cand.items()}
-    suffix_bound = [0] * (len(order) + 1)
+    # optimistic per-node lower bounds for pruning: cycles drive the
+    # branch-and-bound incumbent check, bram/dsp prove infeasibility of a
+    # partial assignment without enumerating its subtree (this is what
+    # makes "the whole graph provably does not fit" cheap enough for the
+    # layer-group partitioner to probe prefixes with).
+    suffix_cycles = [0] * (len(order) + 1)
+    suffix_bram = [0] * (len(order) + 1)
+    suffix_dsp = [0] * (len(order) + 1)
     for i in range(len(order) - 1, -1, -1):
-        suffix_bound[i] = suffix_bound[i + 1] + min_cycles[order[i]]
+        cs = cand[order[i]]
+        suffix_cycles[i] = suffix_cycles[i + 1] + min(c.cycles for c in cs)
+        suffix_bram[i] = suffix_bram[i + 1] + min(c.bram for c in cs)
+        suffix_dsp[i] = suffix_dsp[i + 1] + min(c.dsp for c in cs)
+
+    if suffix_bram[0] > b_nodes or suffix_dsp[0] > d_total:
+        return _infeasible()
 
     def recurse(
         i: int, assign: dict[str, UnrollChoice], dsp: int, bram: int, cycles: int
     ) -> None:
         best["explored"] += 1
-        if cycles + suffix_bound[i] >= best["cycles"]:
+        if cycles + suffix_cycles[i] >= best["cycles"]:
             return
         if i == len(order):
             best["cycles"] = cycles
@@ -196,9 +225,9 @@ def solve_ilp(
         for choice in cand[name]:
             if widths and choice.stream_width not in widths:
                 continue
-            if dsp + choice.dsp > d_total:
+            if dsp + choice.dsp + suffix_dsp[i + 1] > d_total:
                 continue
-            if bram + choice.bram > b_total:
+            if bram + choice.bram + suffix_bram[i + 1] > b_nodes:
                 continue
             assign[name] = choice
             recurse(i + 1, assign, dsp + choice.dsp, bram + choice.bram,
@@ -209,11 +238,7 @@ def solve_ilp(
 
     if best["assign"] is None:
         # infeasible under the budgets — report unroll=1 estimate
-        unrolls = {n: 1 for n in order}
-        est = model.estimate(plan, ExecMode.STREAMING, unrolls)
-        return DseResult(unrolls, {n: 1 for n in order}, est, est.cycles,
-                         est.dsp, est.bram, feasible=False,
-                         explored=best["explored"])
+        return _infeasible(best["explored"])
 
     assign: dict[str, UnrollChoice] = best["assign"]
     unrolls = {n: c.unroll for n, c in assign.items()}
@@ -227,7 +252,7 @@ def solve_ilp(
         estimate=est,
         objective_cycles=sum(c.cycles for c in assign.values()),
         dsp_used=sum(c.dsp for c in assign.values()),
-        bram_used=sum(c.bram for c in assign.values()),
+        bram_used=sum(c.bram for c in assign.values()) + fifo_bram,
         feasible=True,
         explored=best["explored"],
     )

@@ -36,12 +36,39 @@ _PAYLOAD_EXPR = {
     PayloadKind.EXP: "out_v = hls::exp(in_v);",
 }
 
+#: fused-epilogue templates: {v} is the node's result variable (``acc``
+#: for MAC nodes, ``out_v`` otherwise), {k} the on-chip constant operand.
+_EPILOGUE_EXPR = {
+    PayloadKind.RELU: "{v} = ({v} > 0) ? {v} : 0;",
+    PayloadKind.SQUARED_RELU: "{v} = ({v} > 0) ? {v} * {v} : 0;",
+    PayloadKind.IDENTITY: "",
+    PayloadKind.EXP: "{v} = hls::exp({v});",
+    PayloadKind.ADD: "{v} += {k};",
+    PayloadKind.MUL: "{v} *= {k};",
+    PayloadKind.MAX: "{v} = ({v} > {k}) ? {v} : {k};",
+}
+
+
+def _emit_epilogue(op, indent: str) -> list[str]:
+    """Fused-epilogue lines applied to the result before stream write."""
+    var = "acc" if op.payload == PayloadKind.MAC else "out_v"
+    lines = []
+    for e in op.epilogue:
+        # `o` is the flat output-point index, same schematic convention
+        # as the payload's `win[i]`/`wgt[i]` accesses
+        k = f"k_{e.operand}[o]" if e.operand else ""
+        expr = _EPILOGUE_EXPR[e.kind].format(v=var, k=k)
+        if expr:
+            lines.append(f"{indent}{expr}  // fused {e.kind.value}")
+    return lines
+
 
 def _ctype(bits: int) -> str:
     return _CTYPE.get(bits, f"ap_int<{bits}>")
 
 
-def emit_node(plan: NodePlan, unroll: int, width: int) -> str:
+def emit_node(plan: NodePlan, unroll: int, width: int,
+              values: dict | None = None) -> str:
     """One dataflow process function for a node."""
     op = plan.op
     lines: list[str] = []
@@ -53,6 +80,13 @@ def emit_node(plan: NodePlan, unroll: int, width: int) -> str:
     )
     args = ", ".join(x for x in (ins, outs) if x)
     lines.append(f"void {op.name}({args}) {{")
+
+    # fused-epilogue constants (bias/scale) live on-chip next to the
+    # weights, one element per output point (identity-map fusion)
+    for e in op.epilogue:
+        if e.operand:
+            n = values[e.operand].num_elements if values else 1
+            lines.append(f"  static elem_t k_{e.operand}[{n}];  // fused-const")
 
     if plan.kernel_class == KernelClass.SLIDING_WINDOW:
         geo = window_geometry(op, plan.info)
@@ -81,7 +115,14 @@ def emit_node(plan: NodePlan, unroll: int, width: int) -> str:
             f"#pragma HLS ARRAY_PARTITION variable=line cyclic factor={part}"
         )
 
-    # loop nest
+    # loop nest.  The epilogue applies once per *output point*: for MAC
+    # nodes that is after the trailing window/reduction loops complete
+    # (the accumulator is final there); pure-parallel nodes produce one
+    # output per innermost iteration, so it stays next to the payload.
+    inner_acc = 0
+    if plan.kernel_class != KernelClass.PURE_PARALLEL:
+        # trailing loops of the nest (plan_node puts reductions innermost)
+        inner_acc = len(plan.info.classes.reduction)
     depth = 0
     for i, trip in enumerate(plan.loops.trip_counts):
         indent = "  " * (depth + 1)
@@ -94,14 +135,32 @@ def emit_node(plan: NodePlan, unroll: int, width: int) -> str:
                 lines.append(f"{indent}#pragma HLS UNROLL factor={unroll}")
             body = _PAYLOAD_EXPR[op.payload]
             lines.append(f"{indent}{body}")
-    for i in range(depth, 0, -1):
+            if inner_acc == 0:
+                lines.extend(_emit_epilogue(op, indent))
+    inner_acc = min(inner_acc, max(depth - 1, 0))
+    for j, i in enumerate(range(depth, 0, -1)):
         lines.append("  " * i + "}")
+        if op.epilogue and inner_acc and j + 1 == inner_acc:
+            # just closed the accumulation loops: acc is final here
+            lines.extend(_emit_epilogue(op, "  " * i))
     lines.append("}")
     return "\n".join(lines)
 
 
-def emit_cpp(plan: StreamingPlan, dse: DseResult, top_name: str | None = None) -> str:
-    """Emit the full Vitis-style C++ translation unit."""
+def emit_cpp(
+    plan: StreamingPlan,
+    dse: DseResult,
+    top_name: str | None = None,
+    *,
+    m_axi_wrapper: bool = False,
+) -> str:
+    """Emit the full Vitis-style C++ translation unit.
+
+    ``m_axi_wrapper=True`` additionally emits an ``extern "C"``
+    ``<top>_m_axi(elem_t *...)`` entry whose pointer arguments are the
+    graph's input/output *values* (DDR buffers) — the symbol the
+    host-side layer-group schedule links against.
+    """
     top = top_name or plan.dfg.name
     parts: list[str] = [
         "// Generated by MING-repro emithls backend",
@@ -116,7 +175,7 @@ def emit_cpp(plan: StreamingPlan, dse: DseResult, top_name: str | None = None) -
     for np_ in order:
         u = dse.unrolls.get(np_.name, 1)
         w = dse.stream_widths.get(np_.name, 1)
-        parts.append(emit_node(np_, u, w))
+        parts.append(emit_node(np_, u, w, values=plan.dfg.values))
         parts.append("")
 
     # top-level DATAFLOW region
@@ -139,4 +198,97 @@ def emit_cpp(plan: StreamingPlan, dse: DseResult, top_name: str | None = None) -
         parts.append(f"  {np_.op.name}({call_args});")
     parts.append("}")
     parts.append("")
+
+    if m_axi_wrapper:
+        io_values = list(plan.dfg.graph_inputs) + list(plan.dfg.graph_outputs)
+        wargs = ", ".join(f"elem_t *{v}" for v in io_values)
+        parts.append(f'extern "C" void {top}_m_axi({wargs}) {{')
+        for v in io_values:
+            parts.append(f"#pragma HLS INTERFACE m_axi port={v} offset=slave")
+        for s in gi + go:
+            parts.append(f"  hls::stream<elem_t> {s.name};")
+        parts.append("  // DMA: DDR -> input streams, run, output streams -> DDR")
+        parts.append(
+            f"  {top}(" + ", ".join(s.name for s in gi + go) + ");"
+        )
+        parts.append("}")
+        parts.append("")
     return "\n".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Multi-group emission (layer-group partitioning, repro.passes.partition)
+# ---------------------------------------------------------------------------
+
+
+def emit_partitioned(pp) -> dict[str, str]:
+    """Emit a partitioned design: one translation unit per layer group
+    plus the host-side schedule that runs them sequentially.
+
+    ``pp`` is a :class:`repro.passes.partition.PartitionPlan`.  Returns
+    ``{filename: contents}``: ``<group>.cpp`` per group (each a complete
+    DATAFLOW kernel, top function named after the group) and
+    ``host_schedule.cpp`` declaring the DRAM spill buffers and invoking
+    the group kernels in order.
+    """
+    files: dict[str, str] = {}
+    for g in pp.groups:
+        files[f"{g.name}.cpp"] = emit_cpp(
+            g.plan, g.dse, top_name=g.name, m_axi_wrapper=True
+        )
+    files["host_schedule.cpp"] = emit_host_schedule(pp)
+    return files
+
+
+def emit_host_schedule(pp) -> str:
+    """The host-side group schedule (the artifact a partitioned design
+    adds over a monolithic one)."""
+    src = pp.source
+    lines = [
+        "// Generated by MING-repro emithls backend — layer-group schedule",
+        f"// source graph: {src.name} | groups: {len(pp.groups)} | "
+        f"peak BRAM {pp.max_bram}/{pp.b_total} | peak DSP {pp.max_dsp}/{pp.d_total}",
+        "#include <cstddef>",
+        "",
+        "typedef signed char elem_t;",
+        "",
+    ]
+    for g in pp.groups:
+        args = ["elem_t *" + v for v in g.dfg.graph_inputs]
+        args += ["elem_t *" + v for v in g.dfg.graph_outputs]
+        lines.append(
+            f'extern "C" void {g.name}_m_axi({", ".join(args)});  // kernel'
+        )
+    lines.append("")
+    for s in pp.spills():
+        lines.append(
+            f"static elem_t spill_{s.value}[{s.bytes}];  "
+            f"// DRAM boundary buffer ({s.bytes / 1024:.1f} KiB)"
+        )
+    lines.append("")
+    io = ["elem_t *" + v for v in src.graph_inputs] + [
+        "elem_t *" + v for v in src.graph_outputs
+    ]
+    lines.append(f"void run_{src.name}({', '.join(io)}) {{")
+    lines.append(
+        "  // groups execute sequentially; one bitstream resident at a time"
+    )
+    spilled = {s.value for s in pp.spills()}
+
+    def ref(v: str) -> str:
+        return f"spill_{v}" if v in spilled else v
+
+    for g in pp.groups:
+        row = (
+            f"  {g.name}_m_axi("
+            + ", ".join(ref(v) for v in g.dfg.graph_inputs + g.dfg.graph_outputs)
+            + ");"
+        )
+        lines.append(
+            f"  // {g.name}: {', '.join(n.name for n in g.dfg.nodes)} "
+            f"(BRAM {g.bram}, DSP {g.dsp}, {g.cycles} cycles)"
+        )
+        lines.append(row)
+    lines.append("}")
+    lines.append("")
+    return "\n".join(lines)

@@ -178,6 +178,21 @@ PAYLOAD_COSTS: dict[PayloadKind, tuple[int, int]] = {
 }
 
 
+@dataclass(frozen=True)
+class FusedEpilogue:
+    """One elementwise op folded into a producer's payload by the fusion
+    passes (``repro.passes.fusion``).
+
+    Applies ``kind`` to the producer's output element once per output
+    point, *after* the main payload.  Binary kinds (ADD/MUL/MAX) read
+    their second operand from ``operand`` — a *constant* value (bias,
+    scale) held on-chip next to the weights; unary kinds leave it None.
+    """
+
+    kind: PayloadKind
+    operand: Optional[str] = None
+
+
 @dataclass
 class GenericOp:
     """A ``linalg.generic``-like op.
@@ -186,6 +201,10 @@ class GenericOp:
     output (same convention as MLIR).  ``dim_sizes`` gives the extent of
     every loop dimension (trip counts), known statically for inference
     workloads — the property MING's lightweight DSE relies on.
+
+    ``epilogue`` is the chain of fused elementwise ops applied to each
+    output element before it enters the output stream; it never changes
+    the loop structure, so every analysis (Alg. 1/2) ignores it.
     """
 
     name: str
@@ -196,6 +215,7 @@ class GenericOp:
     dim_sizes: tuple[int, ...]
     payload: PayloadKind = PayloadKind.MAC
     elem_bits: int = 8
+    epilogue: tuple[FusedEpilogue, ...] = ()
 
     def __post_init__(self) -> None:
         if len(self.indexing_maps) != len(self.inputs) + 1:
@@ -246,10 +266,23 @@ class GenericOp:
     def total_trip_count(self) -> int:
         return math.prod(self.dim_sizes) if self.dim_sizes else 1
 
+    @property
+    def output_elements(self) -> int:
+        """Number of output points = product of output-map dim extents."""
+        dims = set()
+        for expr in self.output_map.results:
+            dims.update(expr.dims())
+        return math.prod(self.dim_sizes[d] for d in dims) if dims else 1
+
     def macs(self) -> int:
-        """Multiply-accumulate-equivalents for the whole op."""
+        """Multiply-accumulate-equivalents for the whole op (epilogue
+        included: one application per output element)."""
         mults, adds = PAYLOAD_COSTS[self.payload]
-        return self.total_trip_count * max(mults, adds, 1) if (mults or adds) else 0
+        total = self.total_trip_count * max(mults, adds, 1) if (mults or adds) else 0
+        for ep in self.epilogue:
+            m, a = PAYLOAD_COSTS[ep.kind]
+            total += self.output_elements * max(m, a, 1) if (m or a) else 0
+        return total
 
     def dim_extent(self, d: int) -> int:
         return self.dim_sizes[d]
@@ -338,6 +371,102 @@ class DFG:
         tensors MING refuses to materialize (Fig. 2b)."""
         names = {n.output for n in self.nodes} - set(self.graph_outputs)
         return [self.values[v] for v in names]
+
+    # -- rewrite hooks (used by repro.passes) --------------------------------
+
+    def referenced_values(self) -> set[str]:
+        """Every value name reachable from a node, input, or output —
+        including epilogue operands (constants folded in by fusion)."""
+        refs = set(self.graph_inputs) | set(self.graph_outputs)
+        for n in self.nodes:
+            refs.update(n.inputs)
+            refs.add(n.output)
+            refs.update(e.operand for e in n.epilogue if e.operand)
+        return refs
+
+    def remove_node(self, name: str) -> GenericOp:
+        node = self.node(name)
+        self.nodes.remove(node)
+        return node
+
+    def remove_value(self, name: str) -> Value:
+        """Remove an *unreferenced* value (rewrites must detach it first)."""
+        if name in self.referenced_values():
+            raise ValueError(f"cannot remove {name}: still referenced")
+        return self.values.pop(name)
+
+    def replace_value_uses(self, old: str, new: str) -> int:
+        """Rewire every *use* of ``old`` (node inputs, epilogue operands,
+        graph outputs) to ``new``.  The producer of ``old`` is untouched."""
+        if new not in self.values:
+            raise ValueError(f"unknown replacement value {new}")
+        n_replaced = 0
+        for node in self.nodes:
+            if old in node.inputs:
+                node.inputs = tuple(new if i == old else i for i in node.inputs)
+                n_replaced += 1
+            if any(e.operand == old for e in node.epilogue):
+                node.epilogue = tuple(
+                    dataclasses.replace(e, operand=new) if e.operand == old else e
+                    for e in node.epilogue
+                )
+                n_replaced += 1
+        self.graph_outputs = [new if v == old else v for v in self.graph_outputs]
+        self.graph_inputs = [new if v == old else v for v in self.graph_inputs]
+        return n_replaced
+
+    def clone(self, name: Optional[str] = None) -> "DFG":
+        """Deep-enough copy for destructive rewrites: Value and GenericOp
+        instances are duplicated; their (immutable) fields are shared."""
+        out = DFG(name or self.name)
+        out.values = {k: dataclasses.replace(v) for k, v in self.values.items()}
+        out.nodes = [dataclasses.replace(n) for n in self.nodes]
+        out.graph_inputs = list(self.graph_inputs)
+        out.graph_outputs = list(self.graph_outputs)
+        return out
+
+    def subgraph(self, node_names: Sequence[str], name: Optional[str] = None) -> "DFG":
+        """Extract the induced subgraph over ``node_names`` as a standalone
+        DFG — the layer-group partitioner's cut primitive.
+
+        Values consumed but not produced inside the subgraph become graph
+        inputs (unless constant); values produced inside and consumed
+        outside (or listed in the parent's graph_outputs) become graph
+        outputs.
+        """
+        members = set(node_names)
+        sub = DFG(name or f"{self.name}_sub")
+        picked = [n for n in self.nodes if n.name in members]
+        if len(picked) != len(members):
+            missing = members - {n.name for n in picked}
+            raise KeyError(f"unknown nodes in subgraph: {sorted(missing)}")
+        produced = {n.output for n in picked}
+        for n in picked:
+            refs = list(n.inputs) + [n.output] + [
+                e.operand for e in n.epilogue if e.operand
+            ]
+            for v in refs:
+                if v not in sub.values:
+                    sub.values[v] = dataclasses.replace(self.values[v])
+        for n in picked:
+            for v in n.inputs:
+                if (
+                    v not in produced
+                    and not self.values[v].is_constant
+                    and v not in sub.graph_inputs
+                ):
+                    sub.graph_inputs.append(v)
+        for n in picked:
+            v = n.output
+            consumed_outside = any(
+                v in c.inputs for c in self.nodes if c.name not in members
+            )
+            if (v in self.graph_outputs or consumed_outside) and (
+                v not in sub.graph_outputs
+            ):
+                sub.graph_outputs.append(v)
+        sub.nodes = [dataclasses.replace(n) for n in picked]
+        return sub
 
 
 # ---------------------------------------------------------------------------

@@ -99,6 +99,9 @@ class NodeEstimate:
 class GraphEstimate:
     mode: ExecMode
     nodes: list[NodeEstimate]
+    #: BRAM18K blocks consumed by inter-process stream FIFOs (STREAMING
+    #: mode only — materialized modes pass arrays, not streams)
+    fifo_bram: int = 0
 
     @property
     def cycles(self) -> int:
@@ -123,7 +126,7 @@ class GraphEstimate:
 
     @property
     def bram(self) -> int:
-        return sum(n.bram for n in self.nodes)
+        return sum(n.bram for n in self.nodes) + self.fifo_bram
 
     @property
     def macs(self) -> int:
@@ -151,13 +154,36 @@ class FpgaResourceModel:
 
     def node_dsp(self, plan: NodePlan, unroll: int) -> int:
         mults, adds = PAYLOAD_COSTS[plan.op.payload]
+        # fused epilogue ops run once per output element on the stream-exit
+        # datapath: multiplies there need DSPs (one instance, not scaled by
+        # the reduction unroll), adds/compares go to LUT fabric.
+        epi = sum(PAYLOAD_COSTS[e.kind][0] for e in plan.op.epilogue)
+        epi_dsp = math.ceil(epi * dsp_per_mult(plan.op.elem_bits)) if epi else 0
         if mults == 0:
             # pure adds/max/relu synthesize to LUT fabric — no DSP, and no
             # DSP-based address arithmetic either (paper Vanilla column:
             # Conv+ReLU shows 5 DSP ⇒ the ReLU node contributes none).
-            return 0
+            return epi_dsp
         per_point = mults * dsp_per_mult(plan.op.elem_bits)
-        return math.ceil(per_point * unroll) + ADDR_DSP_OVERHEAD
+        return math.ceil(per_point * unroll) + ADDR_DSP_OVERHEAD + epi_dsp
+
+    def stream_fifo_blocks(self, plan: StreamingPlan) -> int:
+        """BRAM18K blocks for the inter-process FIFOs of a streaming plan.
+
+        Like the line buffers, dataflow FIFOs are explicitly BRAM-bound
+        (Vitis implements hls::stream channels between DATAFLOW processes
+        as BRAM FIFOs unless forced to SRL), so every internal channel
+        costs at least one RAM18K; deep diamond-absorbing FIFOs round up
+        by capacity.  Host-boundary streams are AXI-stream ports, not
+        on-fabric FIFOs — they are not charged.  This is the term operator
+        fusion attacks: a fused consumer's FIFO disappears outright.
+        """
+        blocks = 0
+        for s in plan.streams.values():
+            if s.producer is None or s.consumer is None:
+                continue
+            blocks += max(1, math.ceil(s.depth * s.elem_bits / BRAM18K_BITS))
+        return blocks
 
     def node_bram_streaming(self, plan: NodePlan, unroll: int, width: int = 1) -> int:
         """MING: line buffer + window buffer only.
@@ -239,7 +265,10 @@ class FpgaResourceModel:
                 NodeEstimate(np_.name, cyc, dsp, bram, np_.op.macs(), fill)
             )
             first = False
-        return GraphEstimate(mode, nodes)
+        fifo = (
+            self.stream_fifo_blocks(plan) if mode == ExecMode.STREAMING else 0
+        )
+        return GraphEstimate(mode, nodes, fifo_bram=fifo)
 
 
 # ---------------------------------------------------------------------------

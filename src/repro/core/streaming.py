@@ -160,9 +160,13 @@ def plan_node(op: GenericOp, dfg: DFG) -> NodePlan:
     info = classify_kernel(op)
     plan = NodePlan(op=op, info=info)
 
-    # constants (weights / biases) are kept on-chip for streaming reuse
+    # constants (weights / biases) are kept on-chip for streaming reuse;
+    # fused-epilogue operands (bias/scale folded in by repro.passes) live
+    # alongside them
     plan.const_buffer_bits = sum(
         dfg.values[i].total_bits for i in op.inputs if dfg.values[i].is_constant
+    ) + sum(
+        dfg.values[e.operand].total_bits for e in op.epilogue if e.operand
     )
 
     if info.kernel_class == KernelClass.SLIDING_WINDOW:

@@ -37,6 +37,25 @@ def _acc_dtype(dtype) -> jnp.dtype:
     return jnp.int32 if jnp.issubdtype(dtype, jnp.integer) else jnp.float32
 
 
+#: fused-epilogue kinds the conv path supports — mirrors the DFG-level
+#: FusedEpilogue kinds the fusion passes fold into a MAC node.  Applied
+#: to the int32/f32 accumulator in VMEM before writeback, so the fused
+#: activation costs zero extra HBM traffic (the TPU dual of the FPGA
+#: epilogue running on the stream-exit datapath).
+CONV_EPILOGUES = ("relu", "squared_relu")
+
+
+def _apply_epilogue(acc, epilogue: str | None):
+    if epilogue is None:
+        return acc
+    if epilogue == "relu":
+        return jnp.maximum(acc, 0)
+    if epilogue == "squared_relu":
+        r = jnp.maximum(acc, 0)
+        return r * r
+    raise ValueError(f"unsupported conv epilogue {epilogue!r}")
+
+
 def _conv_stream_kernel(
     x_ref,      # (1, R, Wp, Cin)   current row block (the "stream")
     w_ref,      # (KH, KW, Cin, Cout)
@@ -46,7 +65,7 @@ def _conv_stream_kernel(
     kh: int,
     kw: int,
     w_out: int,
-    fuse_relu: bool,
+    epilogue: str | None,
 ):
     i = pl.program_id(1)
     acc_t = _acc_dtype(o_ref.dtype)
@@ -73,8 +92,7 @@ def _conv_stream_kernel(
                 (((2,), (0,)), ((), ())),
                 preferred_element_type=acc_t,
             )
-    if fuse_relu:
-        acc = jnp.maximum(acc, 0)
+    acc = _apply_epilogue(acc, epilogue)
     o_ref[...] = acc[None].astype(o_ref.dtype)
 
     if kh > 1:
@@ -88,9 +106,20 @@ def conv2d_stream_pallas(
     rows_per_block: int,
     w_out: int,
     fuse_relu: bool = False,
+    epilogue: str | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Raw pallas_call; see ``ops.conv2d_stream`` for the public wrapper."""
+    """Raw pallas_call; see ``ops.conv2d_stream`` for the public wrapper.
+
+    ``epilogue`` generalizes ``fuse_relu`` to any supported fused
+    elementwise tail (``CONV_EPILOGUES``); ``fuse_relu=True`` is kept as
+    sugar for ``epilogue="relu"``.
+    """
+    if fuse_relu:
+        if epilogue not in (None, "relu"):
+            raise ValueError("fuse_relu=True conflicts with epilogue="
+                             f"{epilogue!r}")
+        epilogue = "relu"
     b, hp, wp, cin = x_padded.shape
     kh, kw_, _, cout = w.shape
     assert hp % rows_per_block == 0, (hp, rows_per_block)
@@ -98,7 +127,7 @@ def conv2d_stream_pallas(
     acc_t = _acc_dtype(x_padded.dtype)
 
     kernel = functools.partial(
-        _conv_stream_kernel, kh=kh, kw=kw_, w_out=w_out, fuse_relu=fuse_relu
+        _conv_stream_kernel, kh=kh, kw=kw_, w_out=w_out, epilogue=epilogue
     )
     return pl.pallas_call(
         kernel,

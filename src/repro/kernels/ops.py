@@ -54,6 +54,7 @@ def conv2d_stream(
     w: jax.Array,            # (KH, KW, Cin, Cout)
     *,
     fuse_relu: bool = False,
+    epilogue: str | None = None,
     rows_per_block: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -61,6 +62,11 @@ def conv2d_stream(
 
     Returns int32 accumulators for integer inputs (paper's int8 PTQ path),
     f32 otherwise — requantization is the caller's (graph's) concern.
+
+    ``epilogue`` fuses an elementwise tail into the kernel's writeback
+    (``"relu"`` | ``"squared_relu"``) — the TPU realization of the pass
+    pipeline's conv+activation fusion (``repro.passes.fusion``);
+    ``fuse_relu=True`` remains as sugar for ``epilogue="relu"``.
     """
     interpret = _auto_interpret(interpret)
     b, h, ww, cin = x.shape
@@ -91,6 +97,7 @@ def conv2d_stream(
         rows_per_block=rows_per_block,
         w_out=ww,
         fuse_relu=fuse_relu,
+        epilogue=epilogue,
         interpret=interpret,
     )
     return out[:, kh - 1 : kh - 1 + h]

@@ -26,9 +26,13 @@ def conv2d(
     stride: int = 1,
     padding: str = "SAME",
     fuse_relu: bool = False,
+    epilogue: str | None = None,
 ) -> jax.Array:
-    """NHWC conv; int8 inputs accumulate in int32 (paper's PTQ regime)."""
-    if x.dtype == jnp.int8:
+    """NHWC conv; int8 inputs accumulate in int32 (paper's PTQ regime).
+    ``epilogue`` mirrors the kernel's fused tails (relu / squared_relu)."""
+    if fuse_relu and epilogue not in (None, "relu"):
+        raise ValueError(f"fuse_relu=True conflicts with epilogue={epilogue!r}")
+    if jnp.issubdtype(x.dtype, jnp.integer):
         acc_dtype = jnp.int32
     else:
         acc_dtype = jnp.float32
@@ -39,8 +43,13 @@ def conv2d(
         padding=padding,
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     )
-    if fuse_relu:
+    if fuse_relu or epilogue == "relu":
         out = jnp.maximum(out, 0)
+    elif epilogue == "squared_relu":
+        r = jnp.maximum(out, 0)
+        out = r * r
+    elif epilogue is not None:
+        raise ValueError(f"unsupported conv epilogue {epilogue!r}")
     return out
 
 

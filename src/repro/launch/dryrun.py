@@ -241,6 +241,8 @@ def roofline_report(
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: list of one dict
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_report = {

@@ -268,19 +268,27 @@ def _dot_flops(rhs: str, comp: Computation) -> float:
     if res is None:
         return 0.0
     _, out_dims = res
-    # operand names
-    m = re.search(r"dot\(\s*%?([\w\.\-]+)", rhs)
-    if not m:
-        return 0.0
-    lhs_name = m.group(1)
-    lhs_rhs = comp.instrs.get(lhs_name, "")
-    # the instruction rhs begins with its result type, e.g.
-    # "bf16[128,256]{1,0} get-tuple-element(...), index=1"
-    lhs_shape = _shape_dims(lhs_rhs)
+    # lhs dims: newer HLO prints operand types inline —
+    # "dot(f32[32,32]{1,0} %Arg_0.1, ...)" — read the shape directly;
+    # older HLO prints bare names — "dot(%Arg_0.1, ...)" — resolve the
+    # name against the computation's instructions.
+    ldims: tuple[int, ...] | None = None
+    mt = re.search(r"dot\(\s*[a-z0-9]+\[([\d,]*)\]", rhs)
+    if mt:
+        ldims = tuple(int(d) for d in mt.group(1).split(",") if d)
+    else:
+        m = re.search(r"dot\(\s*%?([\w\.\-]+)", rhs)
+        if not m:
+            return 0.0
+        lhs_rhs = comp.instrs.get(m.group(1), "")
+        # the instruction rhs begins with its result type, e.g.
+        # "bf16[128,256]{1,0} get-tuple-element(...), index=1"
+        lhs_shape = _shape_dims(lhs_rhs)
+        if lhs_shape:
+            _, ldims = lhs_shape
     cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
     contracted = 1
-    if lhs_shape and cdims and cdims.group(1):
-        _, ldims = lhs_shape
+    if ldims and cdims and cdims.group(1):
         for ci in cdims.group(1).split(","):
             ci = int(ci)
             if ci < len(ldims):

@@ -1,0 +1,74 @@
+"""MING pass pipeline: verified, statistics-reporting DFG rewrites.
+
+The compiler-infrastructure layer between the frontends
+(``repro.core.cnn_graphs``) and the streaming/DSE/emit backends
+(paper Fig. 4, extended):
+
+    cnn_graphs → [canonicalize → dce → fusion → dce] → streaming → dse
+                                 │ (whole plan over budget?)
+                                 └→ layer-group partition → per-group
+                                    streaming+dse → multi-kernel emit
+
+``run_default_pipeline`` applies the standard rewrite pipeline;
+``partition_layer_groups`` handles graphs whose whole-graph plan
+exceeds the FPGA budgets.  See DESIGN.md §"Pass pipeline".
+"""
+from .base import Pass, PassManager, PassStats, PipelineResult
+from .canonicalize import Canonicalize
+from .dce import DeadCodeElimination
+from .fusion import (
+    ConvActivationFusion,
+    ElementwiseChainFusion,
+    can_fuse,
+    fuse,
+)
+from .partition import (
+    DRAM_BYTES_PER_CYCLE,
+    LayerGroup,
+    PartitionError,
+    PartitionPlan,
+    SpillBuffer,
+    partition_layer_groups,
+)
+from .verifier import VerificationError, verify_dfg
+
+
+def default_pipeline() -> list[Pass]:
+    """Canonicalize, strip dead code, fuse, clean up, re-canonicalize."""
+    return [
+        Canonicalize(),
+        DeadCodeElimination(),
+        ElementwiseChainFusion(),
+        ConvActivationFusion(),
+        DeadCodeElimination(),
+        Canonicalize(),
+    ]
+
+
+def run_default_pipeline(dfg, *, verify: bool = True) -> PipelineResult:
+    """Clone ``dfg`` and run the default pipeline over the clone."""
+    return PassManager(default_pipeline(), verify=verify).run(dfg)
+
+
+__all__ = [
+    "Pass",
+    "PassManager",
+    "PassStats",
+    "PipelineResult",
+    "Canonicalize",
+    "DeadCodeElimination",
+    "ElementwiseChainFusion",
+    "ConvActivationFusion",
+    "can_fuse",
+    "fuse",
+    "DRAM_BYTES_PER_CYCLE",
+    "LayerGroup",
+    "PartitionError",
+    "PartitionPlan",
+    "SpillBuffer",
+    "partition_layer_groups",
+    "VerificationError",
+    "verify_dfg",
+    "default_pipeline",
+    "run_default_pipeline",
+]

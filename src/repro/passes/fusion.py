@@ -1,0 +1,140 @@
+"""Operator fusion: fold elementwise consumers into producer payloads.
+
+Two passes share one legality core:
+
+* :class:`ElementwiseChainFusion` — chains of pure-parallel elementwise
+  ops (ReLU / add / mul / …) collapse into a single node carrying the
+  rest of the chain as :class:`~repro.core.ir.FusedEpilogue` entries.
+* :class:`ConvActivationFusion` — a trailing activation (or constant
+  bias/scale) folds into the MAC node (conv / matmul) that feeds it, the
+  classic epilogue fusion.
+
+Either way the fused consumer's process function and its FIFO disappear
+from the streaming plan: one fewer dataflow node, one fewer stream edge,
+one fewer BRAM-bound FIFO — the footprint reduction the pass pipeline
+exists to deliver.
+
+Legality (checked per candidate pair producer P → consumer C):
+
+  F1. C is pure-parallel with identity indexing maps (true elementwise);
+  F2. C reads exactly one non-constant value, exactly once: P's output;
+  F3. P's output has no other consumer and is not a graph output;
+  F4. C's iteration space equals the shape of P's output value;
+  F5. C's payload is a supported epilogue kind (unary: relu,
+      squared_relu, identity, exp; binary with a constant operand:
+      add, mul, max).
+"""
+from __future__ import annotations
+
+from repro.core.analysis import KernelClass, classify_kernel
+from repro.core.ir import DFG, FusedEpilogue, GenericOp, PayloadKind
+
+from .base import Pass
+
+FUSIBLE_UNARY = {
+    PayloadKind.RELU,
+    PayloadKind.SQUARED_RELU,
+    PayloadKind.IDENTITY,
+    PayloadKind.EXP,
+}
+FUSIBLE_BINARY = {PayloadKind.ADD, PayloadKind.MUL, PayloadKind.MAX}
+
+
+def _epilogue_operand(dfg: DFG, op: GenericOp) -> tuple[bool, str | None]:
+    """(is_fusible_payload, constant_operand_name) for consumer ``op``."""
+    const_inputs = [i for i in op.inputs if dfg.values[i].is_constant]
+    stream_inputs = [i for i in op.inputs if not dfg.values[i].is_constant]
+    if op.payload in FUSIBLE_UNARY:
+        return (len(stream_inputs) == 1 and not const_inputs, None)
+    if op.payload in FUSIBLE_BINARY:
+        if len(stream_inputs) == 1 and len(const_inputs) == 1:
+            return True, const_inputs[0]
+    return False, None
+
+
+def can_fuse(dfg: DFG, producer: GenericOp, consumer: GenericOp) -> bool:
+    """All of F1-F5, for ``producer → consumer``."""
+    info = classify_kernel(consumer)
+    if info.kernel_class != KernelClass.PURE_PARALLEL:          # F1
+        return False
+    if not all(m.is_identity() for m in consumer.indexing_maps):  # F1
+        return False
+    out = producer.output
+    if consumer.inputs.count(out) != 1:                          # F2
+        return False
+    stream_inputs = [i for i in consumer.inputs if not dfg.values[i].is_constant]
+    if stream_inputs != [out]:                                   # F2
+        return False
+    if out in dfg.graph_outputs or len(dfg.consumers_of(out)) != 1:  # F3
+        return False
+    if consumer.dim_sizes != dfg.values[out].shape:              # F4
+        return False
+    fusible, _ = _epilogue_operand(dfg, consumer)                # F5
+    return fusible
+
+
+def fuse(dfg: DFG, producer: GenericOp, consumer: GenericOp) -> None:
+    """Fold ``consumer`` into ``producer.epilogue`` (caller checked
+    :func:`can_fuse`).  The intermediate value disappears."""
+    _, operand = _epilogue_operand(dfg, consumer)
+    old_out = producer.output
+    dfg.remove_node(consumer.name)
+    producer.epilogue = producer.epilogue + (
+        FusedEpilogue(consumer.payload, operand),
+    ) + consumer.epilogue
+    producer.output = consumer.output
+    if old_out not in dfg.referenced_values():
+        del dfg.values[old_out]
+
+
+class _FusionBase(Pass):
+    """Fixpoint driver; subclasses pick which producers qualify."""
+
+    def producer_ok(self, dfg: DFG, producer: GenericOp) -> bool:
+        raise NotImplementedError
+
+    def run_on(self, dfg: DFG) -> dict[str, int]:
+        fused = 0
+        changed = True
+        while changed:
+            changed = False
+            for consumer in list(dfg.nodes):
+                # locate the single stream producer, if any
+                producers = [
+                    p for i in consumer.inputs
+                    if not dfg.values[i].is_constant
+                    and (p := dfg.producer_of(i)) is not None
+                ]
+                if len(producers) != 1:
+                    continue
+                producer = producers[0]
+                if not self.producer_ok(dfg, producer):
+                    continue
+                if can_fuse(dfg, producer, consumer):
+                    fuse(dfg, producer, consumer)
+                    fused += 1
+                    changed = True
+        return {"ops_fused": fused, "streams_eliminated": fused}
+
+
+class ElementwiseChainFusion(_FusionBase):
+    """ReLU/add/mul chains collapse into their elementwise producer."""
+
+    name = "elementwise-chain-fusion"
+
+    def producer_ok(self, dfg: DFG, producer: GenericOp) -> bool:
+        return classify_kernel(producer).kernel_class == KernelClass.PURE_PARALLEL
+
+
+class ConvActivationFusion(_FusionBase):
+    """Trailing activation folds into the MAC node (conv / matmul)."""
+
+    name = "conv-activation-fusion"
+
+    def producer_ok(self, dfg: DFG, producer: GenericOp) -> bool:
+        if producer.payload != PayloadKind.MAC:
+            return False
+        return classify_kernel(producer).kernel_class in (
+            KernelClass.SLIDING_WINDOW,
+            KernelClass.REGULAR_REDUCTION,
+        )

@@ -1,0 +1,140 @@
+"""Reference DFG interpreter — the semantic oracle for pass testing.
+
+Executes a :class:`~repro.core.ir.DFG` numerically (dense jnp math, no
+tiling, no streams) so tests can assert that a rewritten graph computes
+*exactly* what the original did: fusion, DCE, canonicalization, and the
+layer-group partitioner are all checked against this executor, which in
+turn leans on ``repro.kernels.ref`` for the conv path.
+
+Supported node shapes (everything ``cnn_graphs`` builds):
+
+* pure-parallel elementwise ops (identity maps) for every PayloadKind;
+* regular reductions whose map results are all single dims (matmul and
+  friends) via einsum built from the indexing maps;
+* NHWC sliding-window MAC (conv2d) via ``ref.conv2d`` (SAME padding —
+  the convention the graph builders use when sizing output values).
+
+Integer graphs execute in int32 (the paper's int8 PTQ regime accumulates
+in int32); float graphs in float32.
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analysis import KernelClass, classify_kernel
+from repro.core.ir import DFG, GenericOp, PayloadKind
+from repro.kernels import ref
+
+
+def _unary(kind: PayloadKind, x):
+    if kind == PayloadKind.RELU:
+        return jnp.maximum(x, 0)
+    if kind == PayloadKind.SQUARED_RELU:
+        r = jnp.maximum(x, 0)
+        return r * r
+    if kind == PayloadKind.IDENTITY:
+        return x
+    if kind == PayloadKind.EXP:
+        return jnp.exp(x.astype(jnp.float32))
+    raise NotImplementedError(f"unary payload {kind}")
+
+
+def _binary(kind: PayloadKind, a, b):
+    if kind == PayloadKind.ADD:
+        return a + b
+    if kind == PayloadKind.MUL:
+        return a * b
+    if kind == PayloadKind.MAX:
+        return jnp.maximum(a, b)
+    raise NotImplementedError(f"binary payload {kind}")
+
+
+def _apply_epilogue(op: GenericOp, out, env: Mapping[str, jax.Array]):
+    for e in op.epilogue:
+        if e.operand is None:
+            out = _unary(e.kind, out)
+        else:
+            out = _binary(e.kind, out, env[e.operand])
+    return out
+
+
+def _einsum_from_maps(op: GenericOp, operands):
+    """Regular reduction with single-dim map results → jnp.einsum."""
+    letters = "abcdefghijklmnopqrstuvwxyz"
+    subs = []
+    for m in op.indexing_maps:
+        if not all(e.is_single_dim() for e in m.results):
+            raise NotImplementedError(f"{op.name}: composite map in einsum path")
+        subs.append("".join(letters[e.terms[0][0]] for e in m.results))
+    spec = ",".join(subs[:-1]) + "->" + subs[-1]
+    return jnp.einsum(spec, *operands)
+
+
+def _conv2d(op: GenericOp, dfg: DFG, env: Mapping[str, jax.Array]):
+    info = classify_kernel(op)
+    if op.n_dims != 7 or len(op.inputs) != 2 or info.dilation != 1:
+        raise NotImplementedError(f"{op.name}: unsupported sliding-window shape")
+    stream = [i for i in op.inputs if not dfg.values[i].is_constant]
+    const = [i for i in op.inputs if dfg.values[i].is_constant]
+    if len(stream) != 1 or len(const) != 1:
+        raise NotImplementedError(f"{op.name}: conv needs 1 stream + 1 const input")
+    return ref.conv2d(env[stream[0]], env[const[0]], stride=info.stride,
+                      padding="SAME")
+
+
+def execute_node(op: GenericOp, dfg: DFG, env: Mapping[str, jax.Array]):
+    info = classify_kernel(op)
+    if info.kernel_class == KernelClass.PURE_PARALLEL:
+        args = [env[i] for i in op.inputs]
+        if len(args) == 1:
+            out = _unary(op.payload, args[0])
+        elif len(args) == 2:
+            out = _binary(op.payload, args[0], args[1])
+        else:
+            raise NotImplementedError(f"{op.name}: {len(args)}-ary elementwise")
+    elif info.kernel_class == KernelClass.REGULAR_REDUCTION:
+        if op.payload != PayloadKind.MAC:
+            raise NotImplementedError(f"{op.name}: non-MAC reduction")
+        out = _einsum_from_maps(op, [env[i] for i in op.inputs])
+    else:  # SLIDING_WINDOW
+        if op.payload != PayloadKind.MAC:
+            raise NotImplementedError(f"{op.name}: non-MAC sliding window (pool)")
+        out = _conv2d(op, dfg, env)
+    return _apply_epilogue(op, out, env)
+
+
+def execute_dfg(
+    dfg: DFG, env: Mapping[str, jax.Array]
+) -> dict[str, jax.Array]:
+    """Run the graph; ``env`` must bind every graph input and constant.
+    Returns the full value environment (inputs + all produced values),
+    so layer groups can be chained by feeding one group's result env
+    into the next — exactly what the host schedule does via DRAM."""
+    out_env = dict(env)
+    for op in dfg.topo_order():
+        out_env[op.output] = execute_node(op, dfg, out_env)
+    return out_env
+
+
+def graph_outputs(dfg: DFG, env: Mapping[str, jax.Array]) -> dict[str, jax.Array]:
+    full = execute_dfg(dfg, env)
+    return {v: full[v] for v in dfg.graph_outputs}
+
+
+def random_env(dfg: DFG, seed: int = 0) -> dict[str, jax.Array]:
+    """Small-integer int32 bindings for every graph input and constant —
+    integer math keeps fused-vs-unfused comparisons exact."""
+    key = jax.random.key(seed)
+    env: dict[str, jax.Array] = {}
+    names = list(dfg.graph_inputs) + [
+        v for v, val in dfg.values.items() if val.is_constant
+    ]
+    for name in names:
+        key, sub = jax.random.split(key)
+        env[name] = jax.random.randint(
+            sub, dfg.values[name].shape, -4, 5, jnp.int32
+        )
+    return env

@@ -1,0 +1,115 @@
+"""Structural DFG verifier — the pass pipeline's safety net.
+
+MLIR runs its verifier between passes so a broken rewrite is caught at
+the pass that produced it, not three passes later in a backend crash.
+We mirror that: :class:`~repro.passes.base.PassManager` calls
+:func:`verify_dfg` after every pass and raises
+:class:`VerificationError` naming the offending pass.
+
+Checks (all structural — payload semantics are the interpreter's job):
+
+  V1. unique node names; every node input/output/epilogue operand is a
+      registered value;
+  V2. single static assignment: at most one producer per value;
+  V3. graph inputs are not produced by nodes; graph outputs are produced
+      by a node or are graph inputs (pass-through);
+  V4. the graph is acyclic (Kahn's algorithm completes);
+  V5. op arity: |indexing_maps| == |inputs|+1, every map matches n_dims,
+      |dim_sizes| == |iterator_types|;
+  V6. epilogue operands are constant values (fusion may only fold
+      on-chip constants, never streams);
+  V7. every non-constant node input is a graph input or has a producer;
+  V8. output shape agreement: when every output-map result is a single
+      dim, the produced Value's shape equals the mapped extents (the
+      canonicalizer's shape propagation maintains this invariant).
+"""
+from __future__ import annotations
+
+from repro.core.ir import DFG
+
+
+class VerificationError(ValueError):
+    """A rewrite left the DFG structurally malformed."""
+
+
+def _fail(dfg: DFG, rule: str, msg: str) -> None:
+    raise VerificationError(f"{dfg.name}: [{rule}] {msg}")
+
+
+def verify_dfg(dfg: DFG) -> None:
+    """Raise :class:`VerificationError` on the first violated invariant."""
+    # V1 — names and registration
+    seen_nodes: set[str] = set()
+    for n in dfg.nodes:
+        if n.name in seen_nodes:
+            _fail(dfg, "V1", f"duplicate node name {n.name}")
+        seen_nodes.add(n.name)
+        for v in n.inputs + (n.output,):
+            if v not in dfg.values:
+                _fail(dfg, "V1", f"{n.name}: unregistered value {v}")
+        for e in n.epilogue:
+            if e.operand is not None and e.operand not in dfg.values:
+                _fail(dfg, "V1", f"{n.name}: unregistered epilogue operand {e.operand}")
+
+    # V2 — single producer per value
+    producers: dict[str, str] = {}
+    for n in dfg.nodes:
+        if n.output in producers:
+            _fail(dfg, "V2", f"value {n.output} produced by both "
+                             f"{producers[n.output]} and {n.name}")
+        producers[n.output] = n.name
+
+    # V3 — graph boundary
+    for gi in dfg.graph_inputs:
+        if gi not in dfg.values:
+            _fail(dfg, "V3", f"graph input {gi} not registered")
+        if gi in producers:
+            _fail(dfg, "V3", f"graph input {gi} is produced by {producers[gi]}")
+    for go in dfg.graph_outputs:
+        if go not in dfg.values:
+            _fail(dfg, "V3", f"graph output {go} not registered")
+        if go not in producers and go not in dfg.graph_inputs:
+            _fail(dfg, "V3", f"graph output {go} has no producer")
+
+    # V4 — acyclicity
+    try:
+        dfg.topo_order()
+    except ValueError as e:
+        _fail(dfg, "V4", str(e))
+
+    # V5 — op arity (rewrites mutate past __post_init__)
+    for n in dfg.nodes:
+        if len(n.indexing_maps) != len(n.inputs) + 1:
+            _fail(dfg, "V5", f"{n.name}: {len(n.indexing_maps)} maps for "
+                             f"{len(n.inputs)} inputs")
+        if len(n.dim_sizes) != len(n.iterator_types):
+            _fail(dfg, "V5", f"{n.name}: dim_sizes/iterator_types mismatch")
+        for m in n.indexing_maps:
+            if m.n_dims != n.n_dims:
+                _fail(dfg, "V5", f"{n.name}: map arity {m.n_dims} != {n.n_dims}")
+
+    # V6 — epilogue operands are constants
+    for n in dfg.nodes:
+        for e in n.epilogue:
+            if e.operand is not None and not dfg.values[e.operand].is_constant:
+                _fail(dfg, "V6", f"{n.name}: epilogue operand {e.operand} "
+                                 "is not a constant")
+
+    # V7 — every non-constant input is fed
+    feedable = set(dfg.graph_inputs) | set(producers)
+    for n in dfg.nodes:
+        for v in n.inputs:
+            if not dfg.values[v].is_constant and v not in feedable:
+                _fail(dfg, "V7", f"{n.name}: input {v} has no producer and "
+                                 "is not a graph input")
+
+    # V8 — output shape agreement (single-dim output maps only)
+    for n in dfg.nodes:
+        omap = n.output_map
+        if not all(e.is_single_dim() for e in omap.results):
+            continue
+        extents = tuple(n.dim_extent(e.terms[0][0]) for e in omap.results)
+        shape = dfg.values[n.output].shape
+        if shape != extents:
+            _fail(dfg, "V8", f"{n.name}: output {n.output} shape {shape} != "
+                             f"mapped extents {extents}")

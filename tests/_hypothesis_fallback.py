@@ -1,0 +1,54 @@
+"""Stand-ins for ``hypothesis`` when the optional dep is not installed.
+
+The property-based tests import ``given``/``settings``/``st`` at module
+scope; a bare ``pytest.importorskip`` would skip *every* test in those
+modules, including the ~60 plain unit tests.  Instead the test modules
+fall back to these no-ops: ``@given(...)`` marks just the property tests
+as skipped, strategies become inert placeholders, and the rest of the
+module runs normally.  Install the real thing via ``requirements-dev.txt``
+to run the property tests too.
+"""
+from __future__ import annotations
+
+import pytest
+
+_SKIP = pytest.mark.skip(reason="hypothesis not installed "
+                                "(pip install -r requirements-dev.txt)")
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        return _SKIP(fn)
+
+    return deco
+
+
+class settings:  # noqa: N801 - mirrors hypothesis.settings
+    def __init__(self, *_args, **_kwargs) -> None:
+        pass
+
+    def __call__(self, fn):
+        return fn
+
+
+class _Strategy:
+    """Inert placeholder: callable, chainable, never drawn from."""
+
+    def __call__(self, *_args, **_kwargs) -> "_Strategy":
+        return self
+
+    def __getattr__(self, _name) -> "_Strategy":
+        return self
+
+
+class _Strategies:
+    def composite(self, fn):
+        # the decorated builder is never executed; calling it must just
+        # return a strategy placeholder for @given(...)
+        return _Strategy()
+
+    def __getattr__(self, _name) -> _Strategy:
+        return _Strategy()
+
+
+st = _Strategies()

@@ -1,6 +1,10 @@
 """Paper Algorithms 1 & 2 (kernel classification) — unit + property tests."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: property tests skip, unit tests run
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.analysis import (
     KernelClass,

@@ -2,7 +2,11 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: property tests skip, unit tests run
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import cnn_graphs
 from repro.core.dse import (

@@ -1,0 +1,89 @@
+"""Multi-group HLS emission: golden files + structural invariants."""
+import os
+
+import pytest
+
+from repro.core import cnn_graphs
+from repro.core.emit_hls import emit_partitioned
+from repro.passes import partition_layer_groups, run_default_pipeline
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+@pytest.fixture(scope="module")
+def emitted():
+    """The deterministic forced-partition scenario behind the goldens."""
+    fused = run_default_pipeline(cnn_graphs.cascade_conv(16, c_mid=8)).dfg
+    pp = partition_layer_groups(fused, b_total=2)
+    assert pp.partitioned
+    return pp, emit_partitioned(pp)
+
+
+class TestGolden:
+    @pytest.mark.parametrize(
+        "fname",
+        [
+            "cascade_conv_16_g0.cpp",
+            "cascade_conv_16_g1.cpp",
+            "host_schedule.cpp",
+        ],
+    )
+    def test_matches_golden(self, emitted, fname):
+        _, files = emitted
+        path = os.path.join(GOLDEN_DIR, f"cascade16_{fname}")
+        with open(path) as f:
+            assert files[fname] == f.read(), (
+                f"{fname} drifted from golden — if intentional, regenerate "
+                f"tests/golden/ (see this test's fixture for the recipe)"
+            )
+
+
+class TestStructure:
+    def test_one_file_per_group_plus_schedule(self, emitted):
+        pp, files = emitted
+        assert set(files) == {f"{g.name}.cpp" for g in pp.groups} | {
+            "host_schedule.cpp"
+        }
+
+    def test_group_kernels_are_complete_dataflow_designs(self, emitted):
+        pp, files = emitted
+        for g in pp.groups:
+            cpp = files[f"{g.name}.cpp"]
+            assert "#pragma HLS DATAFLOW" in cpp
+            assert f"void {g.name}(" in cpp
+            # the DDR-pointer entry the host schedule links against
+            assert f'extern "C" void {g.name}_m_axi(' in cpp
+            assert cpp.count("{") == cpp.count("}")
+            for node in g.dfg.nodes:
+                assert f"void {node.name}(" in cpp
+
+    def test_fused_epilogue_emitted(self, emitted):
+        pp, files = emitted
+        assert any(
+            "// fused relu" in files[f"{g.name}.cpp"] for g in pp.groups
+        )
+
+    def test_host_schedule_threads_spills(self, emitted):
+        pp, files = emitted
+        host = files["host_schedule.cpp"]
+        for s in pp.spills():
+            assert f"static elem_t spill_{s.value}[{s.bytes}];" in host
+        # groups invoked in order, spill buffers threaded between them
+        last = -1
+        for g in pp.groups:
+            pos = host.index(f"  {g.name}_m_axi(")
+            assert pos > last
+            last = pos
+
+    def test_deep_cascade_224_emits(self):
+        """The acceptance graph's partitioned artifact is well-formed."""
+        fused = run_default_pipeline(cnn_graphs.deep_cascade(224)).dfg
+        pp = partition_layer_groups(fused)
+        files = emit_partitioned(pp)
+        host = files["host_schedule.cpp"]
+        assert f"void run_{fused.name}(" in host
+        assert len(files) == len(pp.groups) + 1
+        for g in pp.groups:
+            assert files[f"{g.name}.cpp"].count("{") == files[
+                f"{g.name}.cpp"
+            ].count("}")

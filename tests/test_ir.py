@@ -1,6 +1,10 @@
 """IR layer: affine algebra, GenericOp validation, DFG topology."""
 import pytest
-from hypothesis import given, strategies as st
+
+try:
+    from hypothesis import given, strategies as st
+except ImportError:  # optional dep: property tests skip, unit tests run
+    from _hypothesis_fallback import given, st
 
 from repro.core.ir import (
     DFG,

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: property tests skip, unit tests run
+    from _hypothesis_fallback import given, settings, st
 
 from repro.kernels import ops, ref
 

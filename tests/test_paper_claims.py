@@ -18,8 +18,12 @@ class TestTable2Claims:
         }
 
     def test_ming_fastest_everywhere(self, modes):
+        """Fastest among designs that actually fit the device — cycle
+        counts of infeasible designs (StreamHLS at 224², Table II DNF
+        rows) are fantasy numbers the paper excludes too."""
         for name, m in modes.items():
-            cycles = {k: v[0] for k, v in m.items()}
+            cycles = {k: v[0] for k, v in m.items() if v[3]}
+            assert m["ming"][3], name
             assert cycles["ming"] == min(cycles.values()), name
 
     def test_ming_bram_constant_in_input_size(self, modes):
@@ -51,7 +55,9 @@ class TestTable2Claims:
             assert 100 <= v / g <= 2000, (name, v / g)
 
     def test_ming_best_dsp_efficiency(self, modes):
-        """Paper: MING has the highest E_DSP on every kernel."""
+        """Paper: MING has the highest E_DSP on every kernel (among
+        designs that fit the device; infeasible rows are excluded as in
+        test_ming_fastest_everywhere)."""
         for name, m in modes.items():
             v_cyc, _, v_dsp, _ = m["vanilla"]
 
@@ -59,7 +65,7 @@ class TestTable2Claims:
                 cyc, _, dsp, _ = m[mode]
                 return (v_cyc / max(cyc, 1)) / max(dsp / max(v_dsp, 1), 1e-9)
 
-            scores = {mode: edsp(mode) for mode in m}
+            scores = {mode: edsp(mode) for mode in m if m[mode][3]}
             assert scores["ming"] == max(scores.values()), (name, scores)
 
 

@@ -1,0 +1,103 @@
+"""Resource-aware layer-group partitioning (repro.passes.partition)."""
+import numpy as np
+import pytest
+
+from repro.core import cnn_graphs
+from repro.core.dse import solve_ilp
+from repro.core.resource_model import KV260_BRAM18K, KV260_DSP
+from repro.core.streaming import plan_streams
+from repro.passes import (
+    PartitionError,
+    partition_layer_groups,
+    run_default_pipeline,
+)
+from repro.passes import interp
+
+
+@pytest.fixture(scope="module")
+def deep224():
+    """Fused deep_cascade(224) + its partition plan (computed once)."""
+    fused = run_default_pipeline(cnn_graphs.deep_cascade(224)).dfg
+    return fused, partition_layer_groups(fused)
+
+
+class TestAcceptance:
+    """ISSUE 1: deep_cascade(224) only fits the KV260 via partitioning."""
+
+    def test_whole_graph_provably_infeasible(self, deep224):
+        fused, pp = deep224
+        whole = solve_ilp(plan_streams(fused))
+        assert not whole.feasible
+        assert not pp.whole_graph_feasible
+
+    def test_every_group_fits_budgets(self, deep224):
+        _, pp = deep224
+        assert pp.partitioned and len(pp.groups) >= 2
+        assert pp.feasible
+        for g in pp.groups:
+            assert g.dse.feasible, g.name
+            assert g.bram <= KV260_BRAM18K, g.name
+            assert g.dsp <= KV260_DSP, g.name
+
+    def test_deep_cascade_32_fits_whole(self):
+        fused = run_default_pipeline(cnn_graphs.deep_cascade(32)).dfg
+        pp = partition_layer_groups(fused)
+        assert pp.whole_graph_feasible and len(pp.groups) == 1
+
+
+class TestSpills:
+    def test_boundary_values_spill_to_dram(self, deep224):
+        fused, pp = deep224
+        spills = pp.spills()
+        assert spills, "a cut must spill at least one value"
+        for s in spills:
+            assert s.bits == fused.values[s.value].total_bits
+            assert s.bytes == -(-s.bits // 8)
+        # every spill-out of group i is a spill-in of a later group
+        outs = {v for g in pp.groups for v in g.spill_out}
+        ins = {v for g in pp.groups for v in g.spill_in}
+        assert outs == ins
+
+    def test_total_cycles_include_spill_traffic(self, deep224):
+        _, pp = deep224
+        assert pp.total_cycles == sum(g.cycles for g in pp.groups) + pp.spill_cycles
+        assert pp.spill_cycles > 0
+
+    def test_schedule_rows(self, deep224):
+        fused, pp = deep224
+        rows = pp.schedule()
+        assert [r["group"] for r in rows] == [g.name for g in pp.groups]
+        covered = [n for r in rows for n in r["nodes"]]
+        assert sorted(covered) == sorted(n.name for n in fused.nodes)
+
+
+class TestSemantics:
+    def test_groupwise_execution_matches_whole_graph(self):
+        """Chaining group subgraphs through the interpreter (the host
+        schedule, with dict entries standing in for DRAM buffers) must
+        reproduce the unpartitioned result exactly."""
+        fused = run_default_pipeline(
+            cnn_graphs.cascade_conv(16, c_mid=8)
+        ).dfg
+        # tiny BRAM budget forces a cut between the two convs
+        pp = partition_layer_groups(fused, b_total=2)
+        assert pp.partitioned
+        env = interp.random_env(fused, seed=11)
+        whole = interp.graph_outputs(fused, env)
+        chained = dict(env)
+        for g in pp.groups:
+            chained.update(interp.execute_dfg(g.dfg, chained))
+        for k, v in whole.items():
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(chained[k]))
+
+
+class TestEdgeCases:
+    def test_unsplittable_node_raises(self):
+        dfg = cnn_graphs.conv_relu(32)
+        with pytest.raises(PartitionError, match="alone exceeds"):
+            partition_layer_groups(dfg, b_total=0)
+
+    def test_budgets_recorded(self, deep224):
+        _, pp = deep224
+        assert pp.b_total == KV260_BRAM18K and pp.d_total == KV260_DSP
+        assert pp.max_bram <= pp.b_total and pp.max_dsp <= pp.d_total

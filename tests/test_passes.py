@@ -1,0 +1,271 @@
+"""Pass pipeline: verifier, DCE, canonicalize, fusion — unit + semantic
+tests (semantics via the DFG interpreter backed by kernels/ref.py)."""
+import numpy as np
+import pytest
+
+from repro.core import cnn_graphs
+from repro.core.dse import solve_ilp
+from repro.core.ir import (
+    DFG,
+    FusedEpilogue,
+    GenericOp,
+    PayloadKind,
+    Value,
+    make_elementwise_op,
+)
+from repro.core.streaming import plan_streams
+from repro.passes import (
+    Canonicalize,
+    ConvActivationFusion,
+    DeadCodeElimination,
+    ElementwiseChainFusion,
+    Pass,
+    PassManager,
+    VerificationError,
+    default_pipeline,
+    run_default_pipeline,
+    verify_dfg,
+)
+from repro.passes import interp
+
+
+def _relu_chain(n=8, c=4):
+    """conv → relu → mul(scale const) → relu (chain fodder)."""
+    dfg = cnn_graphs.conv_relu(n, c_in=3, c_out=c)
+    shape = (1, n, n, c)
+    dfg.add_value(Value("scale", shape, 8, is_constant=True))
+    dfg.add_value(Value("scaled", shape, 8))
+    dfg.add_node(
+        make_elementwise_op("scale0", ["relu0_out", "scale"], "scaled",
+                            shape, PayloadKind.MUL)
+    )
+    dfg.add_value(Value("relu9_out", shape, 8))
+    dfg.add_node(
+        make_elementwise_op("relu9", ["scaled"], "relu9_out", shape,
+                            PayloadKind.RELU)
+    )
+    dfg.graph_outputs = ["relu9_out"]
+    return dfg
+
+
+class TestVerifier:
+    def test_suite_graphs_verify(self):
+        for make in cnn_graphs.PAPER_SUITE.values():
+            verify_dfg(make())
+
+    def test_duplicate_producer_rejected(self):
+        dfg = cnn_graphs.conv_relu(8)
+        dup = make_elementwise_op(
+            "dup", ["conv0_out"], "relu0_out", (1, 8, 8, 16), PayloadKind.RELU
+        )
+        dfg.nodes.append(dup)
+        with pytest.raises(VerificationError, match=r"\[V2\]"):
+            verify_dfg(dfg)
+
+    def test_unregistered_value_rejected(self):
+        dfg = cnn_graphs.conv_relu(8)
+        dfg.nodes[0].inputs = ("ghost", dfg.nodes[0].inputs[1])
+        with pytest.raises(VerificationError, match=r"\[V1\]"):
+            verify_dfg(dfg)
+
+    def test_cycle_rejected(self):
+        dfg = cnn_graphs.conv_relu(8)
+        # relu feeds the conv that feeds it
+        dfg.nodes[0].inputs = ("relu0_out", dfg.nodes[0].inputs[1])
+        dfg.graph_inputs = []
+        with pytest.raises(VerificationError):
+            verify_dfg(dfg)
+
+    def test_stream_epilogue_operand_rejected(self):
+        dfg = cnn_graphs.cascade_conv(8)
+        dfg.nodes[0].epilogue = (FusedEpilogue(PayloadKind.ADD, "relu1_out"),)
+        with pytest.raises(VerificationError, match=r"\[V6\]"):
+            verify_dfg(dfg)
+
+    def test_shape_mismatch_rejected(self):
+        dfg = cnn_graphs.conv_relu(8)
+        dfg.values["relu0_out"].shape = (1, 9, 9, 16)
+        with pytest.raises(VerificationError, match=r"\[V8\]"):
+            verify_dfg(dfg)
+
+
+class _BrokenPass(Pass):
+    name = "broken"
+
+    def run_on(self, dfg: DFG) -> dict[str, int]:
+        dfg.nodes[0].inputs = ("nonexistent",) + dfg.nodes[0].inputs[1:]
+        return {"damage": 1}
+
+
+class TestPassManager:
+    def test_broken_rewrite_caught_and_named(self):
+        with pytest.raises(VerificationError, match="broken"):
+            PassManager([_BrokenPass()]).run(cnn_graphs.conv_relu(8))
+
+    def test_input_graph_not_mutated(self):
+        dfg = cnn_graphs.cascade_conv(8)
+        n_nodes = len(dfg.nodes)
+        run_default_pipeline(dfg)
+        assert len(dfg.nodes) == n_nodes
+        assert all(not n.epilogue for n in dfg.nodes)
+
+    def test_report_lists_every_pass(self):
+        res = run_default_pipeline(cnn_graphs.cascade_conv(8))
+        report = res.report()
+        for p in default_pipeline():
+            assert p.name in report
+
+
+class TestDce:
+    def test_dead_branch_removed(self):
+        dfg = cnn_graphs.conv_relu(8)
+        shape = (1, 8, 8, 16)
+        dfg.add_value(Value("dead_out", shape, 8))
+        dfg.add_node(
+            make_elementwise_op("dead", ["conv0_out"], "dead_out", shape,
+                                PayloadKind.EXP)
+        )
+        dfg.add_value(Value("orphan", (4,), 8))
+        stats = DeadCodeElimination().run_on(dfg)
+        assert stats["nodes_removed"] == 1
+        assert stats["values_removed"] == 2  # dead_out + orphan
+        assert "dead" not in [n.name for n in dfg.nodes]
+        verify_dfg(dfg)
+
+    def test_live_graph_untouched(self):
+        dfg = cnn_graphs.residual_block(8)
+        stats = DeadCodeElimination().run_on(dfg)
+        assert stats["nodes_removed"] == 0 and stats["values_removed"] == 0
+
+
+class TestCanonicalize:
+    def test_identity_removed(self):
+        dfg = cnn_graphs.conv_relu(8)
+        shape = (1, 8, 8, 16)
+        # splice an identity between conv and relu
+        dfg.add_value(Value("id_out", shape, 8))
+        dfg.add_node(
+            make_elementwise_op("id0", ["conv0_out"], "id_out", shape,
+                                PayloadKind.IDENTITY)
+        )
+        dfg.node("relu0").inputs = ("id_out",)
+        stats = Canonicalize().run_on(dfg)
+        assert stats["identities_removed"] == 1
+        assert dfg.node("relu0").inputs == ("conv0_out",)
+        verify_dfg(dfg)
+
+    def test_shape_propagation(self):
+        dfg = cnn_graphs.conv_relu(8)
+        dfg.values["conv0_out"].shape = (1, 99, 99, 16)  # stale
+        stats = Canonicalize().run_on(dfg)
+        assert stats["shapes_fixed"] >= 1
+        assert dfg.values["conv0_out"].shape == (1, 8, 8, 16)
+
+    def test_deterministic_order(self):
+        dfg = cnn_graphs.residual_block(8)
+        dfg.nodes.reverse()
+        Canonicalize().run_on(dfg)
+        order = [n.name for n in dfg.nodes]
+        dfg2 = cnn_graphs.residual_block(8)
+        Canonicalize().run_on(dfg2)
+        assert order == [n.name for n in dfg2.nodes]
+
+
+class TestFusion:
+    @pytest.mark.parametrize(
+        "make",
+        [
+            lambda: cnn_graphs.conv_relu(8),
+            lambda: cnn_graphs.cascade_conv(8, c_mid=4),
+            lambda: cnn_graphs.residual_block(8, c=4),
+            cnn_graphs.feed_forward,
+            _relu_chain,
+        ],
+        ids=["conv_relu", "cascade", "residual", "feed_forward", "chain"],
+    )
+    def test_semantics_preserved(self, make):
+        """Fused graph computes bit-identical outputs (int32 math)."""
+        dfg = make()
+        env = interp.random_env(dfg, seed=7)
+        before = interp.graph_outputs(dfg, env)
+        after = interp.graph_outputs(run_default_pipeline(dfg).dfg, env)
+        assert set(before) == set(after)
+        for k in before:
+            np.testing.assert_array_equal(
+                np.asarray(before[k]), np.asarray(after[k])
+            )
+
+    def test_conv_activation_fuses_relu(self):
+        res = run_default_pipeline(cnn_graphs.conv_relu(8))
+        (conv,) = res.dfg.nodes
+        assert conv.name == "conv0"
+        assert [e.kind for e in conv.epilogue] == [PayloadKind.RELU]
+        assert res.dfg.graph_outputs == ["relu0_out"]
+
+    def test_elementwise_chain_collapses(self):
+        res = run_default_pipeline(_relu_chain())
+        # conv absorbs relu -> mul(scale) -> relu: single node remains
+        assert len(res.dfg.nodes) == 1
+        kinds = [e.kind for e in res.dfg.nodes[0].epilogue]
+        assert kinds == [PayloadKind.RELU, PayloadKind.MUL, PayloadKind.RELU]
+        assert res.dfg.nodes[0].epilogue[1].operand == "scale"
+
+    def test_multi_consumer_not_fused(self):
+        """Residual: conv1's output feeds add_skip with a second stream
+        input — add_skip must survive."""
+        res = run_default_pipeline(cnn_graphs.residual_block(8))
+        names = {n.name for n in res.dfg.nodes}
+        assert "add_skip" in names
+        assert len(res.dfg.nodes) == 3  # conv0(+relu), conv1, add(+relu)
+
+    def test_graph_output_value_name_preserved(self):
+        res = run_default_pipeline(cnn_graphs.cascade_conv(8))
+        assert res.dfg.graph_outputs == ["relu1_out"]
+        assert res.dfg.nodes[-1].output == "relu1_out"
+
+
+class TestAcceptance:
+    def test_fusion_shrinks_streams_and_bram_cascade32(self):
+        """ISSUE 1 acceptance: default pipeline reduces stream-edge count
+        and modeled BRAM on cascade_conv(32) vs the unfused plan."""
+        dfg = cnn_graphs.cascade_conv(32)
+        fused = run_default_pipeline(dfg).dfg
+        plan_pre, plan_post = plan_streams(dfg), plan_streams(fused)
+        edges = lambda p: sum(
+            1 for s in p.streams.values() if s.producer and s.consumer
+        )
+        assert edges(plan_post) < edges(plan_pre)
+        pre, post = solve_ilp(plan_pre), solve_ilp(plan_post)
+        assert pre.feasible and post.feasible
+        assert post.bram_used < pre.bram_used
+
+
+class TestConvEpiloguePallas:
+    """kernels/ops.py fused-epilogue flag (TPU dual of the fusion pass)."""
+
+    @pytest.mark.parametrize("epilogue", [None, "relu", "squared_relu"])
+    def test_epilogue_matches_oracle(self, epilogue):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels import ops, ref
+
+        ks = jax.random.split(jax.random.key(3), 2)
+        x = jax.random.randint(ks[0], (1, 12, 12, 4), -8, 8, jnp.int8)
+        w = jax.random.randint(ks[1], (3, 3, 4, 8), -4, 4, jnp.int8)
+        out = ops.conv2d_stream(x, w, epilogue=epilogue, interpret=True)
+        exp = ref.conv2d(x, w, epilogue=epilogue)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+    def test_fuse_relu_alias(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        ks = jax.random.split(jax.random.key(4), 2)
+        x = jax.random.randint(ks[0], (1, 8, 8, 3), -8, 8, jnp.int8)
+        w = jax.random.randint(ks[1], (3, 3, 3, 4), -4, 4, jnp.int8)
+        a = ops.conv2d_stream(x, w, fuse_relu=True, interpret=True)
+        b = ops.conv2d_stream(x, w, epilogue="relu", interpret=True)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
