@@ -7,8 +7,9 @@ Two sections:
      plus the per-pass statistics trail.
   2. **Partition report** — ``deep_cascade`` at 32²/64²/224²: does the
      whole (fused) graph fit, and if not, the layer-group schedule that
-     does — group count, per-group BRAM/DSP, DRAM spill bytes — next to
-     the vanilla/whole-graph verdict.
+     does — group count, per-group BRAM/DSP, DRAM spill bytes — with the
+     cycle-balanced cut's max-group-cycles next to the PR 1 greedy cut's
+     (the balancing win, ISSUE 2 tentpole).
 """
 from __future__ import annotations
 
@@ -55,11 +56,16 @@ def partition_report(emit=print, sizes=(32, 64, 224)) -> list[dict]:
     emit("# Layer-group partitioning — deep_cascade (4×Conv3x3+ReLU, "
          f"c_mid=136) vs KV260 (BRAM {KV260_BRAM18K}, DSP {KV260_DSP})")
     emit("input_size,whole_graph_fits,groups,group_brams,group_dsps,"
-         "spill_KiB,total_mcycles")
+         "spill_KiB,total_mcycles,max_group_mcycles,greedy_max_group_mcycles")
     rows = []
     for n in sizes:
         fused = run_default_pipeline(cnn_graphs.deep_cascade(n)).dfg
         pp = partition_layer_groups(fused)
+        if pp.partitioned:
+            greedy = partition_layer_groups(fused, strategy="greedy")
+            greedy_max = round(greedy.max_group_cycles / 1e6, 3)
+        else:
+            greedy_max = ""
         row = {
             "input_size": n,
             "whole_graph_fits": pp.whole_graph_feasible,
@@ -68,6 +74,8 @@ def partition_report(emit=print, sizes=(32, 64, 224)) -> list[dict]:
             "group_dsps": "|".join(str(g.dsp) for g in pp.groups),
             "spill_KiB": round(sum(s.bytes for s in pp.spills()) / 1024, 1),
             "total_mcycles": round(pp.total_cycles / 1e6, 3),
+            "max_group_mcycles": round(pp.max_group_cycles / 1e6, 3),
+            "greedy_max_group_mcycles": greedy_max,
         }
         rows.append(row)
         emit(",".join(str(row[k]) for k in row))

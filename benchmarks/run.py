@@ -14,7 +14,11 @@ Sections:
      hillclimb cells.
 
 ``--smoke`` runs the model-only sections (1, 2, 4) as a fast CI sanity
-gate — no Pallas interpret-mode execution, no roofline artifacts.
+gate — no Pallas interpret-mode execution, no roofline artifacts.  Both
+modes additionally compile every suite graph through the unified driver
+(``repro.core.compile_driver``) and write ``BENCH_smoke.json`` (cycles,
+peak BRAM, group count, spill bytes per graph) so the perf trajectory is
+tracked across PRs.
 
 Writes everything it prints; exit code 0 iff all validations pass.
 """
@@ -43,6 +47,49 @@ def passes_section() -> bool:
     _section("Pass pipeline (fusion + layer-group partitioning)")
     passes_report.run_all()
     return True
+
+
+def bench_smoke_json(path: str = "BENCH_smoke.json") -> bool:
+    """Compile every suite graph through the unified driver and write
+    the perf-trajectory snapshot (cycles + BRAM per graph) that CI
+    tracks from PR 2 on."""
+    import json
+
+    from repro.core import cnn_graphs
+    from repro.core.compile_driver import compile as compile_design
+
+    _section(f"BENCH smoke snapshot → {path}")
+    suite = dict(cnn_graphs.PAPER_SUITE)
+    suite["conv_pool_32"] = lambda: cnn_graphs.conv_pool(32)
+    suite["fat_conv_16"] = cnn_graphs.fat_conv
+    data = {}
+    ok = True
+    print("graph,total_cycles,max_group_cycles,max_bram,groups,spill_bytes,"
+          "weight_streamed")
+    for name, make in suite.items():
+        d = compile_design(make())
+        data[name] = {
+            "total_cycles": d.total_cycles,
+            "max_group_cycles": d.max_group_cycles,
+            "max_bram": d.max_bram,
+            "max_dsp": d.max_dsp,
+            "groups": len(d.groups),
+            "spill_bytes": sum(s.bytes for s in d.spills()),
+            "weight_streamed": d.weight_streamed,
+            "feasible": d.feasible,
+        }
+        r = data[name]
+        print(f"{name},{r['total_cycles']},{r['max_group_cycles']},"
+              f"{r['max_bram']},{r['groups']},{r['spill_bytes']},"
+              f"{r['weight_streamed']}")
+        if not r["feasible"]:
+            print(f"# WARNING: {name} infeasible under KV260 budgets")
+            ok = False
+    # always write the snapshot — a regression run is exactly when the
+    # trajectory artifact matters most (feasible:false rows included)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    return ok
 
 
 def kernel_validation() -> bool:
@@ -157,6 +204,7 @@ def main(argv=None) -> int:
     if not (args.skip_kernels or args.smoke):
         ok &= kernel_validation()
     ok &= dse_bench()
+    ok &= bench_smoke_json()
     if not args.smoke:
         ok &= roofline_summary()
     _section(f"RESULT: {'PASS' if ok else 'FAIL'}")

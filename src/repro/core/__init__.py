@@ -15,6 +15,13 @@ from .analysis import (
     detect_sliding_window,
     window_geometry,
 )
+from .compile_driver import (
+    KV260,
+    CompiledDesign,
+    GroupSchedule,
+    Target,
+)
+from .compile_driver import compile as compile_design
 from .dse import (
     DseResult,
     divisors,
@@ -58,9 +65,11 @@ _PASSES_EXPORTS = (
     "PassStats",
     "PipelineResult",
     "Canonicalize",
+    "CommonSubexprElimination",
     "DeadCodeElimination",
     "ElementwiseChainFusion",
     "ConvActivationFusion",
+    "ConvPoolFusion",
     "LayerGroup",
     "PartitionError",
     "PartitionPlan",

@@ -127,6 +127,20 @@ class KernelInfo:
         return self.kernel_class == KernelClass.SLIDING_WINDOW
 
 
+def einsum_spec(op: GenericOp) -> str:
+    """``jnp.einsum`` subscript string for a regular reduction whose map
+    results are all single dims (matmul and friends) — shared by the DFG
+    interpreter and the per-group Pallas lowering so both execute the
+    same contraction the maps describe."""
+    letters = "abcdefghijklmnopqrstuvwxyz"
+    subs = []
+    for m in op.indexing_maps:
+        if not all(e.is_single_dim() for e in m.results):
+            raise NotImplementedError(f"{op.name}: composite map in einsum path")
+        subs.append("".join(letters[e.terms[0][0]] for e in m.results))
+    return ",".join(subs[:-1]) + "->" + subs[-1]
+
+
 def classify_kernel(op: GenericOp) -> KernelInfo:
     sw = detect_sliding_window(op)
     classes = classify_iterators(op)

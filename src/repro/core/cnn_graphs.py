@@ -24,6 +24,7 @@ from .ir import (
     make_conv2d_op,
     make_elementwise_op,
     make_matmul_op,
+    make_pool2d_op,
 )
 
 INT8 = 8
@@ -159,6 +160,42 @@ def deep_cascade(n_size: int = 32, c_in: int = 3, c_mid: int = 136,
         cur = _relu(dfg, i, cur, (1, n_size, n_size, c_mid))
         c_prev = c_mid
     dfg.graph_outputs.append(cur)
+    return dfg
+
+
+def conv_pool(n_size: int = 32, c_in: int = 3, c_out: int = 16) -> DFG:
+    """Conv3×3 + ReLU + MaxPool2×2 (stride 2) — the conv+pool fusion
+    showcase: after the pass pipeline the pool rides the conv's epilogue
+    as a windowed FusedEpilogue and its process/FIFO disappear."""
+    assert n_size % 2 == 0, "pool2x2 needs even spatial extents"
+    dfg = DFG(f"conv_pool_{n_size}")
+    dfg.add_value(Value("x", (1, n_size, n_size, c_in), INT8))
+    dfg.graph_inputs.append("x")
+    c1 = _conv(dfg, 0, "x", 1, n_size, n_size, c_in, c_out)
+    r1 = _relu(dfg, 0, c1, (1, n_size, n_size, c_out))
+    h = n_size // 2
+    dfg.add_value(Value("pool0_out", (1, h, h, c_out), INT8))
+    dfg.add_node(
+        make_pool2d_op(
+            "pool0", r1, "pool0_out",
+            n=1, h_out=h, w_out=h, c=c_out, kh=2, kw=2, stride=2,
+        )
+    )
+    dfg.graph_outputs.append("pool0_out")
+    return dfg
+
+
+def fat_conv(n_size: int = 16, c: int = 288) -> DFG:
+    """Single Conv3×3+ReLU whose weights alone exceed the KV260 BRAM
+    budget (3·3·288·288 int8 ≈ 324 RAM18K > 288): no cut can help, so it
+    is only schedulable via partial weight streaming — the graph that
+    hard-failed with ``PartitionError`` before the weight-tiles knob."""
+    dfg = DFG(f"fat_conv_{n_size}")
+    dfg.add_value(Value("x", (1, n_size, n_size, c), INT8))
+    dfg.graph_inputs.append("x")
+    c1 = _conv(dfg, 0, "x", 1, n_size, n_size, c, c)
+    r1 = _relu(dfg, 0, c1, (1, n_size, n_size, c))
+    dfg.graph_outputs.append(r1)
     return dfg
 
 

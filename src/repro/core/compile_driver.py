@@ -1,0 +1,248 @@
+"""Unified compile driver: one entry point, one schedule IR.
+
+PR 1 left two ad-hoc lowering paths: the monolithic
+``plan_streams → solve_ilp → emit_cpp`` chain for graphs that fit, and
+``partition_layer_groups → emit_partitioned`` for graphs that don't —
+with every consumer (HLS emitter, paper tables, Pallas wrappers)
+re-deriving plan state on its own.  This module replaces both with an
+explicit **schedule IR**:
+
+* :class:`GroupSchedule` — one sequentially-executed slice of the graph:
+  its subgraph, streaming plan, ILP solution (unrolls, stream widths,
+  weight tiles), spill edges, and modeled cycles.
+* :class:`CompiledDesign` — the ordered list of ``GroupSchedule``s plus
+  the spill ledger and whole-design accounting.  A single-group design
+  is just the degenerate case (``partitioned == False``).
+* :func:`compile` — ``compile(dfg, target) -> CompiledDesign``: pass
+  pipeline → cycle-balanced partitioning → per-group streaming + DSE.
+
+Every backend works off the one ``CompiledDesign``:
+``repro.core.emit_hls.emit_design`` (Vitis C++, one kernel per group +
+host schedule), ``repro.kernels.ops.run_compiled`` (one fused Pallas/XLA
+executable per group), and ``benchmarks/paper_tables`` (reporting).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, TYPE_CHECKING
+
+from .dse import DseResult
+from .ir import DFG
+from .resource_model import (
+    DRAM_BYTES_PER_CYCLE,
+    FpgaResourceModel,
+    KV260_BRAM18K,
+    KV260_DSP,
+)
+from .streaming import StreamingPlan
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids core→passes cycle
+    from repro.passes.base import PipelineResult
+
+
+# ---------------------------------------------------------------------------
+# Targets
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Target:
+    """A device budget the driver compiles against."""
+
+    name: str = "kv260"
+    d_total: int = KV260_DSP
+    b_total: int = KV260_BRAM18K
+    max_unroll: int = 4096
+
+    def model(self) -> FpgaResourceModel:
+        return FpgaResourceModel()
+
+
+KV260 = Target()
+
+
+# ---------------------------------------------------------------------------
+# Schedule IR
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SpillBuffer:
+    """A DRAM buffer carrying one value across a group boundary."""
+
+    value: str
+    bits: int
+
+    @property
+    def bytes(self) -> int:
+        return math.ceil(self.bits / 8)
+
+
+@dataclass
+class GroupSchedule:
+    """One sequentially-executed slice of the graph, independently
+    planned through streaming + DSE.  The unit every backend consumes."""
+
+    name: str
+    dfg: DFG
+    plan: StreamingPlan
+    dse: DseResult
+    spill_in: list[str] = field(default_factory=list)
+    spill_out: list[str] = field(default_factory=list)
+
+    @property
+    def bram(self) -> int:
+        return self.dse.bram_used
+
+    @property
+    def dsp(self) -> int:
+        return self.dse.dsp_used
+
+    @property
+    def cycles(self) -> int:
+        return self.dse.estimate.pipeline_cycles
+
+    @property
+    def weight_streamed(self) -> dict[str, int]:
+        """Nodes mapped with partial weight streaming (node -> tiles)."""
+        return dict(self.dse.weight_tiles)
+
+    @property
+    def node_names(self) -> list[str]:
+        return [n.name for n in self.dfg.nodes]
+
+
+@dataclass
+class CompiledDesign:
+    """The schedule IR root: ordered groups + spill ledger + budgets.
+
+    ``source`` is the (post-pass-pipeline) graph the groups partition;
+    ``original`` the pre-pipeline graph when :func:`compile` ran the
+    passes.  Known to every backend; derived nowhere else.
+    """
+
+    source: DFG
+    groups: list[GroupSchedule]
+    d_total: int
+    b_total: int
+    whole_graph_feasible: bool
+    target: Optional[Target] = None
+    original: Optional[DFG] = None
+    pass_result: Optional["PipelineResult"] = None
+
+    # -- group-level accounting ---------------------------------------------
+
+    @property
+    def partitioned(self) -> bool:
+        return len(self.groups) > 1
+
+    @property
+    def feasible(self) -> bool:
+        return all(g.dse.feasible for g in self.groups)
+
+    @property
+    def max_bram(self) -> int:
+        """Peak resident BRAM — one group occupies the fabric at a time."""
+        return max(g.bram for g in self.groups)
+
+    @property
+    def max_dsp(self) -> int:
+        return max(g.dsp for g in self.groups)
+
+    @property
+    def max_group_cycles(self) -> int:
+        """The slowest group — the cycle-balanced partitioner's objective."""
+        return max(g.cycles for g in self.groups)
+
+    @property
+    def weight_streamed(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for g in self.groups:
+            out.update(g.weight_streamed)
+        return out
+
+    # -- spill ledger --------------------------------------------------------
+
+    def spills(self) -> list[SpillBuffer]:
+        seen: dict[str, SpillBuffer] = {}
+        for g in self.groups:
+            for v in g.spill_out:
+                val = self.source.values[v]
+                seen.setdefault(v, SpillBuffer(v, val.total_bits))
+        return list(seen.values())
+
+    @property
+    def spill_bits(self) -> int:
+        return sum(s.bits for s in self.spills())
+
+    @property
+    def spill_cycles(self) -> int:
+        """DRAM round-trip (write at the producer cut, read at the
+        consumer cut) for every spilled value."""
+        return sum(
+            math.ceil(2 * s.bytes / DRAM_BYTES_PER_CYCLE) for s in self.spills()
+        )
+
+    @property
+    def total_cycles(self) -> int:
+        """Sequential schedule: groups back-to-back plus spill traffic."""
+        return sum(g.cycles for g in self.groups) + self.spill_cycles
+
+    # -- host-visible schedule ----------------------------------------------
+
+    def schedule(self) -> list[dict]:
+        """Host-visible schedule rows (consumed by the emitter and the
+        benchmark report)."""
+        return [
+            {
+                "group": g.name,
+                "nodes": g.node_names,
+                "bram": g.bram,
+                "dsp": g.dsp,
+                "cycles": g.cycles,
+                "spill_in": list(g.spill_in),
+                "spill_out": list(g.spill_out),
+                "weight_streamed": g.weight_streamed,
+            }
+            for g in self.groups
+        ]
+
+
+# ---------------------------------------------------------------------------
+# The driver
+# ---------------------------------------------------------------------------
+
+
+def compile(
+    dfg: DFG,
+    target: Target = KV260,
+    *,
+    strategy: str = "balanced",
+    run_passes: bool = True,
+) -> CompiledDesign:
+    """Lower ``dfg`` to a :class:`CompiledDesign` for ``target``.
+
+    Stages: (1) the default pass pipeline (canonicalize / DCE / CSE /
+    fusion, unless ``run_passes=False``); (2) whole-graph streaming +
+    ILP; (3) if over budget, cycle-balanced layer-group partitioning
+    with single-node weight-streaming rescue (``repro.passes.partition``).
+    ``strategy`` selects the partitioner ("balanced" DP or the PR 1
+    "greedy" prefix cut, kept for regression comparison).
+    """
+    from repro.passes import partition_layer_groups, run_default_pipeline
+
+    pass_result = run_default_pipeline(dfg) if run_passes else None
+    lowered = pass_result.dfg if pass_result is not None else dfg
+    design = partition_layer_groups(
+        lowered,
+        d_total=target.d_total,
+        b_total=target.b_total,
+        model=target.model(),
+        max_unroll=target.max_unroll,
+        strategy=strategy,
+    )
+    design.target = target
+    design.original = dfg
+    design.pass_result = pass_result
+    return design

@@ -64,13 +64,18 @@ def divisors(n: int, cap: int | None = None) -> list[int]:
 
 @dataclass(frozen=True)
 class UnrollChoice:
-    """One candidate unroll factor for a node, with derived quantities."""
+    """One candidate unroll factor for a node, with derived quantities.
+
+    ``weight_tiles > 1`` marks a partial-weight-streaming variant: the
+    const buffer is split into that many output-channel tiles, double
+    buffered from DRAM — less BRAM, more cycles (the DRAM round trip)."""
 
     unroll: int
     stream_width: int     # κ: parallel lanes on this node's streams
     dsp: int
     bram: int
     cycles: int
+    weight_tiles: int = 1
 
 
 def _reduction_trip(plan: NodePlan) -> int:
@@ -103,35 +108,52 @@ def node_candidates(
     model: FpgaResourceModel,
     d_total: int,
     max_unroll: int = 4096,
+    *,
+    weight_streaming: bool = False,
 ) -> list[UnrollChoice]:
     """Enumerate legal unroll factors for one node (Unroll Constr.),
     STREAMING mode (II=1, line-buffer BRAM only).
 
     Factors are products r*p with r | reduction_trip and p | parallel_trip;
     the stream width is p (reduction unrolling does not widen streams).
+
+    ``weight_streaming=True`` additionally enumerates partial-weight-
+    streaming variants (weight_tiles > 1 along the const-indexed output
+    channels, stream width pinned to 1): strictly slower than their
+    resident-weight twins, but the only shapes that fit when the weights
+    alone approach the BRAM budget.
     """
     red = _reduction_trip(plan)
     par = _parallel_trip(plan)
-    choices: dict[int, UnrollChoice] = {}
-    for r in divisors(red, cap=max_unroll):
-        for p in divisors(par, cap=max(max_unroll // r, 1)):
-            u = r * p
-            if u > max_unroll:
-                continue
-            # widening streams before exhausting the reduction wastes DSPs
-            # feeding idle lanes — prune dominated shapes
-            if p > 1 and r != red:
-                continue
-            cyc = model.node_cycles(plan, u, ii=1)
-            dsp = model.node_dsp(plan, u)
-            if dsp > d_total:
-                continue
-            bram = model.node_bram_streaming(plan, u, width=p)
-            prev = choices.get(u)
-            cand = UnrollChoice(u, p, dsp, bram, cyc)
-            if prev is None or cand.cycles < prev.cycles:
-                choices[u] = cand
-    return sorted(choices.values(), key=lambda c: c.unroll)
+    tileable = plan.weight_tileable_extent
+    tile_opts = [1]
+    if weight_streaming and tileable > 1 and plan.const_buffer_bits > 0:
+        tile_opts += [t for t in divisors(tileable) if t > 1]
+    choices: dict[tuple[int, int], UnrollChoice] = {}
+    for t in tile_opts:
+        for r in divisors(red, cap=max_unroll):
+            for p in divisors(par, cap=max(max_unroll // r, 1)):
+                u = r * p
+                if u > max_unroll:
+                    continue
+                # widening streams before exhausting the reduction wastes
+                # DSPs feeding idle lanes — prune dominated shapes
+                if p > 1 and r != red:
+                    continue
+                # a streamed weight tile feeds one lane; widening the
+                # stream would demand concurrent tiles (defeats the point)
+                if t > 1 and p > 1:
+                    continue
+                cyc = model.node_cycles(plan, u, ii=1, weight_tiles=t)
+                dsp = model.node_dsp(plan, u)
+                if dsp > d_total:
+                    continue
+                bram = model.node_bram_streaming(plan, u, width=p, weight_tiles=t)
+                prev = choices.get((u, t))
+                cand = UnrollChoice(u, p, dsp, bram, cyc, weight_tiles=t)
+                if prev is None or cand.cycles < prev.cycles:
+                    choices[(u, t)] = cand
+    return sorted(choices.values(), key=lambda c: (c.unroll, c.weight_tiles))
 
 
 # ---------------------------------------------------------------------------
@@ -149,6 +171,8 @@ class DseResult:
     bram_used: int
     feasible: bool
     explored: int = 0
+    #: nodes mapped with partial weight streaming (node -> tile count > 1)
+    weight_tiles: dict[str, int] = field(default_factory=dict)
 
 
 def solve_ilp(
@@ -158,6 +182,7 @@ def solve_ilp(
     b_total: int = KV260_BRAM18K,
     model: FpgaResourceModel | None = None,
     max_unroll: int = 4096,
+    weight_streaming: bool = False,
 ) -> DseResult:
     """Solve Eq. (1) exactly for the STREAMING (MING) mode.
 
@@ -165,13 +190,22 @@ def solve_ilp(
     :meth:`FpgaResourceModel.stream_fifo_blocks`) is assignment-independent
     and charged as a fixed overhead against ``b_total`` — fusing nodes
     (``repro.passes``) shrinks it before the solver ever runs.
+
+    ``weight_streaming=True`` lets the candidate sets include partial
+    weight streaming (see :func:`node_candidates`).  Off by default: the
+    compile driver enables it only as a last resort, for single nodes
+    that no cut can make fit — streamed designs are strictly slower, so
+    admitting them everywhere would make *every* graph "feasible" and
+    erase the partitioning signal.
     """
     model = model or FpgaResourceModel()
     nodes = plan.node_order()
     fifo_bram = model.stream_fifo_blocks(plan)
     b_nodes = b_total - fifo_bram
     cand: dict[str, list[UnrollChoice]] = {
-        n.name: node_candidates(n, model, d_total, max_unroll)
+        n.name: node_candidates(
+            n, model, d_total, max_unroll, weight_streaming=weight_streaming
+        )
         for n in nodes
     }
 
@@ -242,9 +276,11 @@ def solve_ilp(
 
     assign: dict[str, UnrollChoice] = best["assign"]
     unrolls = {n: c.unroll for n, c in assign.items()}
+    tiles = {n: c.weight_tiles for n, c in assign.items() if c.weight_tiles > 1}
     est = model.estimate(
         plan, ExecMode.STREAMING, unrolls,
         widths={n: c.stream_width for n, c in assign.items()},
+        weight_tiles=tiles,
     )
     return DseResult(
         unrolls=unrolls,
@@ -255,6 +291,7 @@ def solve_ilp(
         bram_used=sum(c.bram for c in assign.values()) + fifo_bram,
         feasible=True,
         explored=best["explored"],
+        weight_tiles=tiles,
     )
 
 

@@ -1,17 +1,25 @@
-"""Vitis-HLS C++ emission from a StreamingPlan (the paper's emithls stage).
+"""Vitis-HLS C++ emission from the schedule IR (the paper's emithls stage).
 
 MING's final stage translates its ``emithls`` dialect to Vitis HLS C++.
-We reproduce that artifact: given a :class:`StreamingPlan` and a
-:class:`~repro.core.dse.DseResult`, emit a compilable-style C++ file with
-the five pragma families the paper highlights (Sec. III-C):
+We reproduce that artifact: :func:`emit_design` consumes a
+:class:`~repro.core.compile_driver.CompiledDesign` and emits one
+complete DATAFLOW kernel per :class:`GroupSchedule` plus the host-side
+group schedule, with the five pragma families the paper highlights
+(Sec. III-C):
 
   STREAM, UNROLL, PIPELINE (II=1), ARRAY_PARTITION, BIND_STORAGE,
   plus the top-level DATAFLOW region.
 
+Weight-streamed nodes (``DseResult.weight_tiles``) emit the
+double-buffered ``wtile[2][…]`` ping/pong array, a ``WT`` tile loop
+with prefetch, and ``m_axi`` DRAM weight pointers; windowed (pooling)
+epilogues emit their partial-row buffer.  ``emit_cpp`` remains the
+per-plan workhorse underneath.
+
 The emitter is golden-file tested; it cannot be synthesized in this
 container (no Vitis), but it is the faithful end of the reproduction
-pipeline and demonstrates that the plan carries every datum the HLS
-backend needs.
+pipeline and demonstrates that the schedule IR carries every datum the
+HLS backend needs.
 """
 from __future__ import annotations
 
@@ -54,6 +62,16 @@ def _emit_epilogue(op, indent: str) -> list[str]:
     var = "acc" if op.payload == PayloadKind.MAC else "out_v"
     lines = []
     for e in op.epilogue:
+        if e.window:
+            # windowed (pooling) entry: the row buffer holds partial
+            # reductions until the window's leading axis fills
+            f = "x".join(str(x) for x in e.window if x > 1)
+            lines.append(
+                f"{indent}pool_line[o % POOL_LINE] = "
+                f"({var} > pool_line[o % POOL_LINE]) ? {var} : "
+                f"pool_line[o % POOL_LINE];  // fused {e.kind.value}-pool /{f}"
+            )
+            continue
         # `o` is the flat output-point index, same schematic convention
         # as the payload's `win[i]`/`wgt[i]` accesses
         k = f"k_{e.operand}[o]" if e.operand else ""
@@ -63,13 +81,43 @@ def _emit_epilogue(op, indent: str) -> list[str]:
     return lines
 
 
+def _pool_line_elems(op, values) -> int:
+    """Partial-row buffer length for the first fused pooling epilogue."""
+    for e in op.epilogue:
+        if e.window and any(f > 1 for f in e.window):
+            shape = values[op.output].shape
+            first = next(i for i, f in enumerate(e.window) if f > 1)
+            n = 1
+            for a in range(first + 1, len(shape)):
+                n *= shape[a]
+            return max(n, 1)
+    return 0
+
+
 def _ctype(bits: int) -> str:
     return _CTYPE.get(bits, f"ap_int<{bits}>")
 
 
+def dram_weight_values(plan: StreamingPlan, dse: DseResult) -> list[str]:
+    """Constant values whose node streams them from DRAM (weight_tiles>1):
+    these become m_axi pointer ports instead of on-chip ROMs."""
+    out: list[str] = []
+    for np_ in plan.node_order():
+        if dse.weight_tiles.get(np_.name, 1) > 1:
+            for i in np_.op.inputs:
+                if plan.dfg.values[i].is_constant and i not in out:
+                    out.append(i)
+    return out
+
+
 def emit_node(plan: NodePlan, unroll: int, width: int,
-              values: dict | None = None) -> str:
-    """One dataflow process function for a node."""
+              values: dict | None = None, weight_tiles: int = 1) -> str:
+    """One dataflow process function for a node.
+
+    ``weight_tiles > 1`` emits the partial-weight-streaming realization:
+    a double-buffered (ping/pong) tile array fed from DRAM and a tile
+    loop wrapping the nest, with the tiled output-channel trip divided.
+    """
     op = plan.op
     lines: list[str] = []
     ins = ", ".join(
@@ -79,6 +127,10 @@ def emit_node(plan: NodePlan, unroll: int, width: int,
         f"hls::stream<elem_t> &{s}" for s in plan.output_streams
     )
     args = ", ".join(x for x in (ins, outs) if x)
+    if weight_tiles > 1:
+        wnames = [i for i in op.inputs if values and values[i].is_constant]
+        wargs = ", ".join(f"const elem_t *dram_{v}" for v in wnames)
+        args = ", ".join(x for x in (args, wargs) if x)
     lines.append(f"void {op.name}({args}) {{")
 
     # fused-epilogue constants (bias/scale) live on-chip next to the
@@ -87,6 +139,28 @@ def emit_node(plan: NodePlan, unroll: int, width: int,
         if e.operand:
             n = values[e.operand].num_elements if values else 1
             lines.append(f"  static elem_t k_{e.operand}[{n}];  // fused-const")
+
+    # fused-pool partial row (windowed epilogue)
+    pool_elems = _pool_line_elems(op, values) if values else 0
+    if pool_elems:
+        lines.append(f"  #define POOL_LINE {pool_elems}")
+        lines.append(f"  static elem_t pool_line[{pool_elems}];  // fused-pool row")
+        lines.append(
+            "#pragma HLS BIND_STORAGE variable=pool_line type=ram_2p impl=bram"
+        )
+
+    if weight_tiles > 1:
+        tile_elems = max(
+            plan.const_buffer_bits // max(op.elem_bits, 1) // weight_tiles, 1
+        )
+        lines.append(
+            f"  elem_t wtile[2][{tile_elems}];  "
+            f"// double-buffered DRAM weight tile (1/{weight_tiles} of the set)"
+        )
+        lines.append("#pragma HLS ARRAY_PARTITION variable=wtile dim=1 complete")
+        lines.append(
+            "#pragma HLS BIND_STORAGE variable=wtile type=ram_2p impl=bram"
+        )
 
     if plan.kernel_class == KernelClass.SLIDING_WINDOW:
         geo = window_geometry(op, plan.info)
@@ -123,12 +197,33 @@ def emit_node(plan: NodePlan, unroll: int, width: int,
     if plan.kernel_class != KernelClass.PURE_PARALLEL:
         # trailing loops of the nest (plan_node puts reductions innermost)
         inner_acc = len(plan.info.classes.reduction)
+
+    trips = list(plan.loops.trip_counts)
     depth = 0
-    for i, trip in enumerate(plan.loops.trip_counts):
+    if weight_tiles > 1:
+        # tile loop wraps the nest; the tiled output-channel dim runs
+        # 1/weight_tiles of its extent per pass
+        if plan.weight_tile_dims and plan.loop_dims:
+            tpos = plan.loop_dims.index(plan.weight_tile_dims[0])
+            trips[tpos] = max(trips[tpos] // weight_tiles, 1)
+        wname = next(
+            (i for i in op.inputs if values and values[i].is_constant), "w"
+        )
+        lines.append(f"  load_tile(wtile[0], dram_{wname}, 0);  // preload tile 0")
+        lines.append(
+            f"  WT: for (int wt = 0; wt < {weight_tiles}; ++wt) {{"
+        )
+        lines.append(
+            f"    if (wt + 1 < {weight_tiles}) "
+            f"load_tile(wtile[(wt + 1) & 1], dram_{wname}, wt + 1);  "
+            "// prefetch next tile while computing from wtile[wt & 1]"
+        )
+        depth = 1
+    for i, trip in enumerate(trips):
         indent = "  " * (depth + 1)
         lines.append(f"{indent}L{i}: for (int i{i} = 0; i{i} < {trip}; ++i{i}) {{")
         depth += 1
-        if i == len(plan.loops.trip_counts) - 1:
+        if i == len(trips) - 1:
             indent = "  " * (depth + 1)
             lines.append(f"{indent}#pragma HLS PIPELINE II=1")
             if unroll > 1:
@@ -175,15 +270,19 @@ def emit_cpp(
     for np_ in order:
         u = dse.unrolls.get(np_.name, 1)
         w = dse.stream_widths.get(np_.name, 1)
-        parts.append(emit_node(np_, u, w, values=plan.dfg.values))
+        t = dse.weight_tiles.get(np_.name, 1)
+        parts.append(emit_node(np_, u, w, values=plan.dfg.values,
+                               weight_tiles=t))
         parts.append("")
 
     # top-level DATAFLOW region
     gi = [s for s in plan.streams.values() if s.producer is None]
     go = [s for s in plan.streams.values() if s.consumer is None]
+    dram_w = dram_weight_values(plan, dse)
     args = ", ".join(
         [f"hls::stream<elem_t> &{s.name}" for s in gi]
         + [f"hls::stream<elem_t> &{s.name}" for s in go]
+        + [f"const elem_t *dram_{v}" for v in dram_w]
     )
     parts.append(f"void {top}({args}) {{")
     parts.append("#pragma HLS DATAFLOW")
@@ -194,22 +293,32 @@ def emit_cpp(
                 f"#pragma HLS STREAM variable={s.name} depth={s.depth}"
             )
     for np_ in order:
-        call_args = ", ".join(np_.input_streams + np_.output_streams)
-        parts.append(f"  {np_.op.name}({call_args});")
+        call_args = list(np_.input_streams + np_.output_streams)
+        if dse.weight_tiles.get(np_.name, 1) > 1:
+            call_args += [
+                f"dram_{v}" for v in np_.op.inputs
+                if plan.dfg.values[v].is_constant
+            ]
+        parts.append(f"  {np_.op.name}({', '.join(call_args)});")
     parts.append("}")
     parts.append("")
 
     if m_axi_wrapper:
         io_values = list(plan.dfg.graph_inputs) + list(plan.dfg.graph_outputs)
-        wargs = ", ".join(f"elem_t *{v}" for v in io_values)
+        wargs = ", ".join(
+            [f"elem_t *{v}" for v in io_values]
+            + [f"const elem_t *{v}" for v in dram_w]
+        )
         parts.append(f'extern "C" void {top}_m_axi({wargs}) {{')
-        for v in io_values:
+        for v in io_values + dram_w:
             parts.append(f"#pragma HLS INTERFACE m_axi port={v} offset=slave")
         for s in gi + go:
             parts.append(f"  hls::stream<elem_t> {s.name};")
         parts.append("  // DMA: DDR -> input streams, run, output streams -> DDR")
         parts.append(
-            f"  {top}(" + ", ".join(s.name for s in gi + go) + ");"
+            f"  {top}("
+            + ", ".join([s.name for s in gi + go] + [v for v in dram_w])
+            + ");"
         )
         parts.append("}")
         parts.append("")
@@ -217,27 +326,35 @@ def emit_cpp(
 
 
 # ---------------------------------------------------------------------------
-# Multi-group emission (layer-group partitioning, repro.passes.partition)
+# Whole-design emission off the schedule IR (repro.core.compile_driver)
 # ---------------------------------------------------------------------------
 
 
-def emit_partitioned(pp) -> dict[str, str]:
-    """Emit a partitioned design: one translation unit per layer group
-    plus the host-side schedule that runs them sequentially.
+def emit_design(design) -> dict[str, str]:
+    """Emit a :class:`repro.core.compile_driver.CompiledDesign`: one
+    translation unit per group schedule plus the host-side schedule that
+    runs them sequentially (single-group designs get one kernel and a
+    trivial host schedule).
 
-    ``pp`` is a :class:`repro.passes.partition.PartitionPlan`.  Returns
-    ``{filename: contents}``: ``<group>.cpp`` per group (each a complete
-    DATAFLOW kernel, top function named after the group) and
-    ``host_schedule.cpp`` declaring the DRAM spill buffers and invoking
-    the group kernels in order.
+    Returns ``{filename: contents}``: ``<group>.cpp`` per group (each a
+    complete DATAFLOW kernel, top function named after the group) and
+    ``host_schedule.cpp`` declaring the DRAM spill buffers (and any
+    streamed-weight buffers) and invoking the group kernels in order.
+    Every datum comes from the design's :class:`GroupSchedule`s — no
+    plan state is re-derived here.
     """
     files: dict[str, str] = {}
-    for g in pp.groups:
+    for g in design.groups:
         files[f"{g.name}.cpp"] = emit_cpp(
             g.plan, g.dse, top_name=g.name, m_axi_wrapper=True
         )
-    files["host_schedule.cpp"] = emit_host_schedule(pp)
+    files["host_schedule.cpp"] = emit_host_schedule(design)
     return files
+
+
+#: historical name (PR 1 API): the partitioned and monolithic paths are
+#: now the same single entry point over the schedule IR
+emit_partitioned = emit_design
 
 
 def emit_host_schedule(pp) -> str:
@@ -253,9 +370,11 @@ def emit_host_schedule(pp) -> str:
         "typedef signed char elem_t;",
         "",
     ]
+    group_weights = {g.name: dram_weight_values(g.plan, g.dse) for g in pp.groups}
     for g in pp.groups:
         args = ["elem_t *" + v for v in g.dfg.graph_inputs]
         args += ["elem_t *" + v for v in g.dfg.graph_outputs]
+        args += ["const elem_t *" + v for v in group_weights[g.name]]
         lines.append(
             f'extern "C" void {g.name}_m_axi({", ".join(args)});  // kernel'
         )
@@ -265,6 +384,13 @@ def emit_host_schedule(pp) -> str:
             f"static elem_t spill_{s.value}[{s.bytes}];  "
             f"// DRAM boundary buffer ({s.bytes / 1024:.1f} KiB)"
         )
+    for g in pp.groups:
+        for v in group_weights[g.name]:
+            n = src.values[v].num_elements
+            lines.append(
+                f"static elem_t wstream_{v}[{n}];  "
+                f"// DRAM-resident streamed weights ({n / 1024:.1f} KiB)"
+            )
     lines.append("")
     io = ["elem_t *" + v for v in src.graph_inputs] + [
         "elem_t *" + v for v in src.graph_outputs
@@ -279,16 +405,17 @@ def emit_host_schedule(pp) -> str:
         return f"spill_{v}" if v in spilled else v
 
     for g in pp.groups:
-        row = (
-            f"  {g.name}_m_axi("
-            + ", ".join(ref(v) for v in g.dfg.graph_inputs + g.dfg.graph_outputs)
-            + ");"
+        call = [ref(v) for v in g.dfg.graph_inputs + g.dfg.graph_outputs]
+        call += [f"wstream_{v}" for v in group_weights[g.name]]
+        streamed = g.weight_streamed
+        note = (
+            f", weights streamed {streamed}" if streamed else ""
         )
         lines.append(
             f"  // {g.name}: {', '.join(n.name for n in g.dfg.nodes)} "
-            f"(BRAM {g.bram}, DSP {g.dsp}, {g.cycles} cycles)"
+            f"(BRAM {g.bram}, DSP {g.dsp}, {g.cycles} cycles{note})"
         )
-        lines.append(row)
+        lines.append(f"  {g.name}_m_axi({', '.join(call)});")
     lines.append("}")
     lines.append("")
     return "\n".join(lines)

@@ -180,17 +180,26 @@ PAYLOAD_COSTS: dict[PayloadKind, tuple[int, int]] = {
 
 @dataclass(frozen=True)
 class FusedEpilogue:
-    """One elementwise op folded into a producer's payload by the fusion
-    passes (``repro.passes.fusion``).
+    """One op folded into a producer's payload by the fusion passes
+    (``repro.passes.fusion``).
 
-    Applies ``kind`` to the producer's output element once per output
-    point, *after* the main payload.  Binary kinds (ADD/MUL/MAX) read
-    their second operand from ``operand`` — a *constant* value (bias,
-    scale) held on-chip next to the weights; unary kinds leave it None.
+    Elementwise form (``window == ()``): applies ``kind`` to the
+    producer's output element once per output point, *after* the main
+    payload.  Binary kinds (ADD/MUL/MAX) read their second operand from
+    ``operand`` — a *constant* value (bias, scale) held on-chip next to
+    the weights; unary kinds leave it None.
+
+    Pooling form (``window != ()``): a non-overlapping window reduction
+    folded in by conv+pool fusion.  ``window`` has one factor per output
+    axis (e.g. ``(1, 2, 2, 1)`` for an NHWC 2×2 stride-2 max pool) and
+    ``kind`` is the combining op (MAX for max pool).  Unlike elementwise
+    entries it *shrinks* the output: axis ``i`` divides by ``window[i]``
+    — shape bookkeeping goes through :meth:`GenericOp.epilogue_shape`.
     """
 
     kind: PayloadKind
     operand: Optional[str] = None
+    window: tuple[int, ...] = ()
 
 
 @dataclass
@@ -268,11 +277,23 @@ class GenericOp:
 
     @property
     def output_elements(self) -> int:
-        """Number of output points = product of output-map dim extents."""
+        """Number of output points = product of output-map dim extents
+        (pre-pooling: a fused pool epilogue consumes these points)."""
         dims = set()
         for expr in self.output_map.results:
             dims.update(expr.dims())
         return math.prod(self.dim_sizes[d] for d in dims) if dims else 1
+
+    def epilogue_shape(self, shape: tuple[int, ...]) -> tuple[int, ...]:
+        """Shape of the value actually produced, after any fused pooling
+        epilogues shrink the mapped output extents (verifier V8 and the
+        canonicalizer's shape propagation both route through this)."""
+        for e in self.epilogue:
+            if e.window:
+                shape = tuple(
+                    s // f for s, f in zip(shape, e.window)
+                )
+        return shape
 
     def macs(self) -> int:
         """Multiply-accumulate-equivalents for the whole op (epilogue

@@ -39,6 +39,11 @@ KV260_BRAM18K = 288
 KV260_DSP = 1_248
 #: arrays at or below this size are mapped to LUTRAM by Vitis, not BRAM
 LUTRAM_THRESHOLD_BITS = 1_024
+#: DRAM bandwidth in bytes per fabric cycle (KV260 DDR4 ≈ 19 GB/s at a
+#: 300 MHz fabric clock ⇒ ~64 B/cycle; derated to a conservative
+#: streaming-access figure).  Charged for layer-group spills *and* for
+#: partial weight streaming's tile traffic.
+DRAM_BYTES_PER_CYCLE = 16
 
 
 class ExecMode(str, enum.Enum):
@@ -147,10 +152,23 @@ class FpgaResourceModel:
 
     # -- per-node cycle/resource estimates -----------------------------------
 
-    def node_cycles(self, plan: NodePlan, unroll: int, ii: int) -> int:
+    def node_cycles(
+        self, plan: NodePlan, unroll: int, ii: int, weight_tiles: int = 1
+    ) -> int:
         loops = plan.loops
         body = ii * math.ceil(loops.total_trip / max(unroll, 1))
-        return body + loops.pipeline_depth
+        cyc = body + loops.pipeline_depth
+        if weight_tiles > 1:
+            # partial weight streaming: the const buffer is tiled along
+            # the output-channel axis and double-buffered from DRAM.
+            # Charge the DRAM round-trip for the full weight set (each
+            # tile crosses the bus once per inference; 2× for the
+            # write/read pair, matching the spill model) plus one
+            # pipeline restart per tile pass.
+            const_bytes = math.ceil(plan.const_buffer_bits / 8)
+            cyc += math.ceil(2 * const_bytes / DRAM_BYTES_PER_CYCLE)
+            cyc += (weight_tiles - 1) * loops.pipeline_depth
+        return cyc
 
     def node_dsp(self, plan: NodePlan, unroll: int) -> int:
         mults, adds = PAYLOAD_COSTS[plan.op.payload]
@@ -185,7 +203,9 @@ class FpgaResourceModel:
             blocks += max(1, math.ceil(s.depth * s.elem_bits / BRAM18K_BITS))
         return blocks
 
-    def node_bram_streaming(self, plan: NodePlan, unroll: int, width: int = 1) -> int:
+    def node_bram_streaming(
+        self, plan: NodePlan, unroll: int, width: int = 1, weight_tiles: int = 1
+    ) -> int:
         """MING: line buffer + window buffer only.
 
         The line buffer is partitioned by the *stream width* (lanes that
@@ -195,7 +215,12 @@ class FpgaResourceModel:
         BRAM-bound (``BIND_STORAGE impl=bram``, Sec. III-C) so each lane
         slice costs ≥1 RAM18K regardless of the LUTRAM threshold — this is
         what produces the paper's constant 16-per-conv BRAM signature.
-        Window/weight buffers are completely partitioned → registers."""
+        Window/weight buffers are completely partitioned → registers.
+
+        ``weight_tiles > 1`` (partial weight streaming): only one
+        ``1/weight_tiles`` slice of the const buffer is resident, double
+        buffered (ping + pong) so the next tile's DRAM fetch overlaps the
+        current tile's compute — 2× tile BRAM instead of the full set."""
         blocks = 0
         if plan.line_buffer_bits > 0:
             lanes = max(width, 1)
@@ -206,7 +231,11 @@ class FpgaResourceModel:
         blocks += bram_blocks(
             plan.window_buffer_bits, partitions=max(unroll, 1)
         )
-        blocks += bram_blocks(plan.const_buffer_bits, partitions=max(unroll, 1))
+        if weight_tiles > 1:
+            tile_bits = math.ceil(plan.const_buffer_bits / weight_tiles)
+            blocks += 2 * bram_blocks(tile_bits, partitions=max(unroll, 1))
+        else:
+            blocks += bram_blocks(plan.const_buffer_bits, partitions=max(unroll, 1))
         return blocks
 
     def node_bram_materialized(
@@ -229,11 +258,13 @@ class FpgaResourceModel:
         mode: ExecMode,
         unrolls: dict[str, int] | None = None,
         widths: dict[str, int] | None = None,
+        weight_tiles: dict[str, int] | None = None,
     ) -> GraphEstimate:
         from .streaming import _first_output_cycles  # cycle-free import
 
         unrolls = unrolls or {}
         widths = widths or {}
+        weight_tiles = weight_tiles or {}
         dfg = plan.dfg
         nodes: list[NodeEstimate] = []
         graph_input_bits = sum(dfg.values[g].total_bits for g in dfg.graph_inputs)
@@ -257,9 +288,10 @@ class FpgaResourceModel:
                 bram = self.node_bram_materialized(np_, dfg, u, reorder_copy=True)
             else:  # STREAMING — MING
                 ii = 1
-                cyc = self.node_cycles(np_, u, ii)
+                t = weight_tiles.get(np_.name, 1)
+                cyc = self.node_cycles(np_, u, ii, weight_tiles=t)
                 dsp = self.node_dsp(np_, u)
-                bram = self.node_bram_streaming(np_, u, w)
+                bram = self.node_bram_streaming(np_, u, w, weight_tiles=t)
                 fill = max(1, fill // max(w, 1))
             nodes.append(
                 NodeEstimate(np_.name, cyc, dsp, bram, np_.op.macs(), fill)

@@ -96,6 +96,13 @@ class NodePlan:
     loops: LoopNest = field(default_factory=lambda: LoopNest((), ()))
     # loop index whose unroll factor sets the stream width (stream constr.)
     stream_loop: int = 0
+    #: loop dims in nest order (``loops.trip_counts[i]`` is the extent of
+    #: dim ``loop_dims[i]``) — lets back-ends locate a specific dim
+    loop_dims: tuple[int, ...] = ()
+    #: parallel non-window dims that index a *constant* input (e.g. c_out
+    #: for an NHWC conv's weights) — the axes partial weight streaming
+    #: may tile along (``repro.core.dse`` weight_tiles knob)
+    weight_tile_dims: tuple[int, ...] = ()
 
     @property
     def name(self) -> str:
@@ -104,6 +111,13 @@ class NodePlan:
     @property
     def kernel_class(self) -> KernelClass:
         return self.info.kernel_class
+
+    @property
+    def weight_tileable_extent(self) -> int:
+        """Product of the const-input dims weight streaming can tile."""
+        return math.prod(
+            self.op.dim_extent(d) for d in self.weight_tile_dims
+        ) if self.weight_tile_dims else 1
 
     def buffer_bits(self) -> int:
         return self.line_buffer_bits + self.window_buffer_bits
@@ -234,6 +248,35 @@ def plan_node(op: GenericOp, dfg: DFG) -> NodePlan:
         trips = tuple(op.dim_extent(d) for d in order)
         plan.loops = LoopNest(trips, tuple(t > 1 for t in trips), pipeline_depth=2)
         plan.stream_loop = _first_unrollable(plan.loops)
+
+    plan.loop_dims = tuple(order)
+
+    # dims eligible for partial weight streaming: parallel non-window
+    # subscripts of a constant input (c_out for conv weights, n_out for
+    # matmul weights) — tiling them splits the const buffer cleanly.
+    window = set(info.classes.window)
+    tile_dims: set[int] = set()
+    for i, name in enumerate(op.inputs):
+        if not dfg.values[name].is_constant:
+            continue
+        for expr in op.input_maps[i].results:
+            if expr.is_single_dim():
+                (d, _), = expr.terms
+                if op.is_parallel_dim(d) and d not in window:
+                    tile_dims.add(d)
+    plan.weight_tile_dims = tuple(sorted(tile_dims))
+
+    # fused pooling epilogue: one partial line of pooled outputs is kept
+    # while the window's leading axis fills (the 2×2 pool's row buffer)
+    out_shape = dfg.values[op.output].shape
+    for e in op.epilogue:
+        if not e.window or not any(f > 1 for f in e.window):
+            continue
+        first = next(i for i, f in enumerate(e.window) if f > 1)
+        line_elems = math.prod(
+            out_shape[a] for a in range(first + 1, len(out_shape))
+        )
+        plan.line_buffer_bits += (e.window[first] - 1) * line_elems * op.elem_bits
 
     return plan
 

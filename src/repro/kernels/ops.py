@@ -1,4 +1,5 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Public jit'd wrappers for the Pallas kernels + the TPU consumer of
+the schedule IR.
 
 Each wrapper:
   * derives legal tile sizes from the MING DSE (``repro.core.dse``) under
@@ -8,6 +9,15 @@ Each wrapper:
 
 The oracles live in ``ref.py``; ``tests/test_kernels.py`` sweeps
 shapes/dtypes asserting allclose between the two.
+
+``lower_group`` / ``run_compiled`` are the TPU duals of the HLS
+emitter: they consume the *same*
+:class:`repro.core.compile_driver.CompiledDesign` the FPGA path emits
+from — each :class:`GroupSchedule` lowers to one jit-compiled fused
+executable (streaming conv kernels with fused epilogues, map-driven
+einsum reductions, elementwise tails), and ``run_compiled`` chains the
+groups through a value environment exactly as the emitted
+``host_schedule.cpp`` threads DRAM spill buffers.
 """
 from __future__ import annotations
 
@@ -18,11 +28,19 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from repro.core.analysis import (
+    KernelClass,
+    classify_kernel,
+    einsum_spec,
+    window_geometry,
+)
 from repro.core.dse import plan_attention_blocks, plan_conv_rows, plan_matmul_blocks
+from repro.core.ir import PayloadKind
 from . import conv2d_stream as _conv
 from . import flash_attention as _flash
 from . import fused_mlp as _mlp
 from . import mamba2_ssd as _ssd
+from . import ref as _ref
 
 
 def _auto_interpret(interpret: bool | None) -> bool:
@@ -101,6 +119,121 @@ def conv2d_stream(
         interpret=interpret,
     )
     return out[:, kh - 1 : kh - 1 + h]
+
+
+# ---------------------------------------------------------------------------
+# Schedule-IR consumer: one fused executable per GroupSchedule
+# ---------------------------------------------------------------------------
+
+#: epilogue kinds the conv kernel applies *inside* the Pallas kernel
+#: (on the VMEM accumulator, before writeback)
+_IN_KERNEL_EPILOGUES = {
+    PayloadKind.RELU: "relu",
+    PayloadKind.SQUARED_RELU: "squared_relu",
+}
+
+
+def _split_conv_epilogue(op):
+    """(in-kernel epilogue string, remaining epilogue entries) for a
+    conv node: a leading unary relu/squared_relu runs on the kernel's
+    accumulator; everything after (constant binops, fused pools) applies
+    to the kernel's output inside the same jit unit."""
+    epi = list(op.epilogue)
+    if epi and epi[0].operand is None and not epi[0].window and (
+        epi[0].kind in _IN_KERNEL_EPILOGUES
+    ):
+        return _IN_KERNEL_EPILOGUES[epi[0].kind], epi[1:]
+    return None, epi
+
+
+def _lower_node(op, dfg, env, interpret: bool):
+    """Execute one GenericOp with the kernel library (jit-traceable)."""
+    info = classify_kernel(op)
+    if info.kernel_class == KernelClass.SLIDING_WINDOW:
+        if op.payload == PayloadKind.MAC:
+            stream = [i for i in op.inputs if not dfg.values[i].is_constant]
+            const = [i for i in op.inputs if dfg.values[i].is_constant]
+            if (
+                len(stream) == 1 and len(const) == 1
+                and op.n_dims == 7 and info.stride == 1 and info.dilation == 1
+            ):
+                kern_epi, rest = _split_conv_epilogue(op)
+                out = conv2d_stream(
+                    env[stream[0]], env[const[0]],
+                    epilogue=kern_epi, interpret=interpret,
+                )
+                return _ref.apply_epilogue(out, rest, env)
+            if info.dilation != 1:
+                # keep parity with the interpreter: fail loudly rather
+                # than silently computing a dilation-1 conv
+                raise NotImplementedError(
+                    f"{op.name}: dilated conv not supported in lower_group"
+                )
+            # strided convs: dense oracle inside the same jit
+            out = _ref.conv2d(env[stream[0]], env[const[0]],
+                              stride=info.stride, padding="SAME")
+            return _ref.apply_epilogue(out, op.epilogue, env)
+        if op.payload == PayloadKind.MAX and len(op.inputs) == 1:
+            geo = window_geometry(op, info)
+            kh, kw = geo.window_extents
+            out = _ref.maxpool2d(env[op.inputs[0]], kh, kw, info.stride)
+            return _ref.apply_epilogue(out, op.epilogue, env)
+        raise NotImplementedError(f"{op.name}: unsupported sliding window")
+    if info.kernel_class == KernelClass.REGULAR_REDUCTION:
+        if op.payload != PayloadKind.MAC:
+            raise NotImplementedError(f"{op.name}: non-MAC reduction")
+        out = jnp.einsum(einsum_spec(op), *(env[i] for i in op.inputs))
+        return _ref.apply_epilogue(out, op.epilogue, env)
+    # PURE_PARALLEL
+    args = [env[i] for i in op.inputs]
+    if len(args) == 1:
+        out = _ref.unary(op.payload, args[0])
+    elif len(args) == 2:
+        out = _ref.binary(op.payload, args[0], args[1])
+    else:
+        raise NotImplementedError(f"{op.name}: {len(args)}-ary elementwise")
+    return _ref.apply_epilogue(out, op.epilogue, env)
+
+
+def lower_group(group, *, interpret: bool | None = None, jit: bool = True):
+    """Lower one :class:`~repro.core.compile_driver.GroupSchedule` to a
+    fused executable: ``fn(env) -> {output name: array}``.
+
+    ``env`` must bind the group's graph inputs (spill values included)
+    and constants.  All nodes trace into one jit unit — the TPU analogue
+    of the group's single DATAFLOW kernel: intermediates stay in
+    VMEM/registers, epilogues (activations, constant binops, fused
+    pools) ride the producing kernel.
+    """
+    interpret = _auto_interpret(interpret)
+    dfg = group.dfg
+    order = dfg.topo_order()
+    needed = set(dfg.graph_inputs) | {
+        v for v, val in dfg.values.items() if val.is_constant
+    }
+
+    def run(env):
+        env = dict(env)
+        for op in order:
+            env[op.output] = _lower_node(op, dfg, env, interpret)
+        return {v: env[v] for v in dfg.graph_outputs}
+
+    if not jit:
+        return run
+    jitted = jax.jit(run)
+    return lambda env: jitted({k: v for k, v in env.items() if k in needed})
+
+
+def run_compiled(design, env, *, interpret: bool | None = None,
+                 jit: bool = True) -> dict:
+    """Execute a :class:`~repro.core.compile_driver.CompiledDesign` on
+    the Pallas path: groups run in schedule order, chained through the
+    value environment (the dict entries standing in for the DRAM spill
+    buffers of ``host_schedule.cpp``).  Returns the graph outputs."""
+    env = dict(env)
+    for g in design.groups:
+        env.update(lower_group(g, interpret=interpret, jit=jit)(env))
+    return {v: env[v] for v in design.source.graph_outputs}
 
 
 # ---------------------------------------------------------------------------

@@ -54,6 +54,85 @@ def conv2d(
 
 
 # ---------------------------------------------------------------------------
+# DFG payload / epilogue primitives — shared by the DFG interpreter
+# (repro.passes.interp) and the per-group Pallas lowering
+# (repro.kernels.ops.lower_group), so both execute identical semantics.
+# Kinds are the *string values* of repro.core.ir.PayloadKind (a str enum,
+# so the enum members themselves compare equal and pass straight through).
+# ---------------------------------------------------------------------------
+
+
+def unary(kind: str, x: jax.Array) -> jax.Array:
+    if kind == "relu":
+        return jnp.maximum(x, 0)
+    if kind == "squared_relu":
+        r = jnp.maximum(x, 0)
+        return r * r
+    if kind == "identity":
+        return x
+    if kind == "exp":
+        return jnp.exp(x.astype(jnp.float32))
+    raise NotImplementedError(f"unary payload {kind}")
+
+
+def binary(kind: str, a: jax.Array, b: jax.Array) -> jax.Array:
+    if kind == "add":
+        return a + b
+    if kind == "mul":
+        return a * b
+    if kind == "max":
+        return jnp.maximum(a, b)
+    raise NotImplementedError(f"binary payload {kind}")
+
+
+def pool_reduce(kind: str, x: jax.Array, window: tuple[int, ...]) -> jax.Array:
+    """Non-overlapping window reduction: axis ``i`` shrinks by
+    ``window[i]`` and ``kind`` combines each tile (a fused pool
+    epilogue's semantics — max pool for kind="max")."""
+    reducer = {"max": jnp.max, "add": jnp.sum}.get(kind)
+    if reducer is None:
+        raise NotImplementedError(f"pool payload {kind}")
+    for ax in range(x.ndim - 1, -1, -1):
+        f = window[ax]
+        if f <= 1:
+            continue
+        shp = x.shape
+        assert shp[ax] % f == 0, (shp, window)
+        x = x.reshape(shp[:ax] + (shp[ax] // f, f) + shp[ax + 1:])
+        x = reducer(x, axis=ax + 1)
+    return x
+
+
+def maxpool2d(x: jax.Array, kh: int, kw: int, stride: int) -> jax.Array:
+    """Standalone NHWC max pool (VALID padding) — the unfused oracle the
+    conv+pool fusion pass is checked against."""
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        init = jnp.iinfo(x.dtype).min
+    else:
+        init = -jnp.inf
+    return lax.reduce_window(
+        x, init, lax.max,
+        window_dimensions=(1, kh, kw, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+
+
+def apply_epilogue(out: jax.Array, epilogue, env) -> jax.Array:
+    """Apply a chain of :class:`repro.core.ir.FusedEpilogue` entries
+    (duck-typed: ``kind`` / ``operand`` / ``window`` attributes)."""
+    for e in epilogue:
+        window = getattr(e, "window", ())
+        if window:
+            out = pool_reduce(e.kind, out, window)
+        elif e.operand is None:
+            out = unary(e.kind, out)
+        else:
+            out = binary(e.kind, out, env[e.operand])
+    return out
+
+
+# ---------------------------------------------------------------------------
 # multi-head / grouped-query attention
 # ---------------------------------------------------------------------------
 

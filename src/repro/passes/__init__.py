@@ -1,29 +1,40 @@
 """MING pass pipeline: verified, statistics-reporting DFG rewrites.
 
 The compiler-infrastructure layer between the frontends
-(``repro.core.cnn_graphs``) and the streaming/DSE/emit backends
-(paper Fig. 4, extended):
+(``repro.core.cnn_graphs``) and the unified compile driver
+(``repro.core.compile_driver``, paper Fig. 4 extended):
 
-    cnn_graphs → [canonicalize → dce → fusion → dce] → streaming → dse
-                                 │ (whole plan over budget?)
-                                 └→ layer-group partition → per-group
-                                    streaming+dse → multi-kernel emit
+    cnn_graphs → [canonicalize → dce → cse → fusion → dce] → compile
+                                                               │
+                     ┌─────────────────────────────────────────┘
+                     ▼
+            whole-graph streaming + ILP
+                     │ (over budget?)
+                     └→ cycle-balanced layer-group partition
+                        (+ single-node weight-streaming rescue)
+                              │
+                              ▼
+                     CompiledDesign — consumed by emit_hls.emit_design
+                     and kernels/ops.run_compiled alike
 
 ``run_default_pipeline`` applies the standard rewrite pipeline;
-``partition_layer_groups`` handles graphs whose whole-graph plan
-exceeds the FPGA budgets.  See DESIGN.md §"Pass pipeline".
+``partition_layer_groups`` builds the group schedule for graphs whose
+whole-graph plan exceeds the FPGA budgets.  See DESIGN.md §1 and §3.
 """
 from .base import Pass, PassManager, PassStats, PipelineResult
 from .canonicalize import Canonicalize
+from .cse import CommonSubexprElimination
 from .dce import DeadCodeElimination
 from .fusion import (
     ConvActivationFusion,
+    ConvPoolFusion,
     ElementwiseChainFusion,
     can_fuse,
+    can_fuse_pool,
     fuse,
+    fuse_pool,
 )
 from .partition import (
-    DRAM_BYTES_PER_CYCLE,
     LayerGroup,
     PartitionError,
     PartitionPlan,
@@ -31,15 +42,18 @@ from .partition import (
     partition_layer_groups,
 )
 from .verifier import VerificationError, verify_dfg
+from repro.core.resource_model import DRAM_BYTES_PER_CYCLE
 
 
 def default_pipeline() -> list[Pass]:
-    """Canonicalize, strip dead code, fuse, clean up, re-canonicalize."""
+    """Canonicalize, strip dead code, dedup, fuse, clean up, re-canonicalize."""
     return [
         Canonicalize(),
         DeadCodeElimination(),
+        CommonSubexprElimination(),
         ElementwiseChainFusion(),
         ConvActivationFusion(),
+        ConvPoolFusion(),
         DeadCodeElimination(),
         Canonicalize(),
     ]
@@ -56,11 +70,15 @@ __all__ = [
     "PassStats",
     "PipelineResult",
     "Canonicalize",
+    "CommonSubexprElimination",
     "DeadCodeElimination",
     "ElementwiseChainFusion",
     "ConvActivationFusion",
+    "ConvPoolFusion",
     "can_fuse",
+    "can_fuse_pool",
     "fuse",
+    "fuse_pool",
     "DRAM_BYTES_PER_CYCLE",
     "LayerGroup",
     "PartitionError",

@@ -23,11 +23,13 @@ from .base import Pass
 
 
 def _inferred_output_shape(op: GenericOp) -> tuple[int, ...] | None:
-    """Output extents when every output-map result is a single dim."""
+    """Output extents when every output-map result is a single dim
+    (shrunk by any fused pooling epilogue — the value the op produces)."""
     omap = op.output_map
     if not all(e.is_single_dim() for e in omap.results):
         return None
-    return tuple(op.dim_extent(e.terms[0][0]) for e in omap.results)
+    extents = tuple(op.dim_extent(e.terms[0][0]) for e in omap.results)
+    return op.epilogue_shape(extents)
 
 
 class Canonicalize(Pass):

@@ -138,3 +138,108 @@ class ConvActivationFusion(_FusionBase):
             KernelClass.SLIDING_WINDOW,
             KernelClass.REGULAR_REDUCTION,
         )
+
+
+# ---------------------------------------------------------------------------
+# conv + pool fusion: a non-overlapping pool consumer folds into the
+# producing conv's epilogue as a windowed FusedEpilogue
+# ---------------------------------------------------------------------------
+
+
+def pool_window_factors(dfg: DFG, pool: GenericOp) -> tuple[int, ...] | None:
+    """Per-output-axis pool factors for a *fusible* pool op, else None.
+
+    Legality (beyond what :func:`can_fuse_pool` checks on the producer
+    side): the op is a single-input sliding-window MAX reduction whose
+    stride equals every window extent (non-overlapping — "stride
+    aligned"), and whose input extents divide exactly.
+    """
+    if pool.payload != PayloadKind.MAX or len(pool.inputs) != 1:
+        return None
+    info = classify_kernel(pool)
+    if info.kernel_class != KernelClass.SLIDING_WINDOW:
+        return None
+    out_results = list(pool.output_map.results)
+    if not all(e.is_single_dim() for e in out_results):
+        return None
+    axis_of = {e.terms[0][0]: i for i, e in enumerate(out_results)}
+    factors = [1] * len(out_results)
+    for expr in info.classes.original_input:
+        par = red = None
+        for d, c in expr.terms:
+            if pool.is_parallel_dim(d):
+                par = (d, c)
+            else:
+                red = (d, c)
+        if par is None or red is None:
+            return None
+        (pd, stride), (rd, dil) = par, red
+        k = pool.dim_extent(rd)
+        if dil != 1 or stride != k or pd not in axis_of:   # overlapping
+            return None
+        factors[axis_of[pd]] = k
+    if all(f == 1 for f in factors):
+        return None
+    return tuple(factors)
+
+
+def can_fuse_pool(dfg: DFG, producer: GenericOp, pool: GenericOp) -> bool:
+    """Legality for ``producer → pool`` window fusion: the producer is a
+    MAC sliding-window node (conv) whose output feeds *only* this
+    stride-aligned pool, and the pooled axes divide exactly."""
+    if producer.payload != PayloadKind.MAC:
+        return False
+    if classify_kernel(producer).kernel_class != KernelClass.SLIDING_WINDOW:
+        return False
+    out = producer.output
+    if pool.inputs != (out,):
+        return False
+    if out in dfg.graph_outputs or len(dfg.consumers_of(out)) != 1:
+        return False
+    factors = pool_window_factors(dfg, pool)
+    if factors is None:
+        return False
+    shape = dfg.values[out].shape
+    if len(shape) != len(factors):
+        return False
+    return all(s % f == 0 for s, f in zip(shape, factors))
+
+
+def fuse_pool(dfg: DFG, producer: GenericOp, pool: GenericOp) -> None:
+    """Fold ``pool`` into ``producer.epilogue`` as a windowed entry
+    (caller checked :func:`can_fuse_pool`)."""
+    factors = pool_window_factors(dfg, pool)
+    assert factors is not None
+    old_out = producer.output
+    dfg.remove_node(pool.name)
+    producer.epilogue = producer.epilogue + (
+        FusedEpilogue(pool.payload, None, window=factors),
+    ) + pool.epilogue
+    producer.output = pool.output
+    if old_out not in dfg.referenced_values():
+        del dfg.values[old_out]
+
+
+class ConvPoolFusion(Pass):
+    """A 2×2 (or any non-overlapping) max pool folds into the producing
+    conv's epilogue: one fewer process, one fewer BRAM-bound FIFO, and
+    the group's output stream shrinks by the pool factor."""
+
+    name = "conv-pool-fusion"
+
+    def run_on(self, dfg: DFG) -> dict[str, int]:
+        fused = 0
+        changed = True
+        while changed:
+            changed = False
+            for pool in list(dfg.nodes):
+                if pool_window_factors(dfg, pool) is None:
+                    continue
+                producer = dfg.producer_of(pool.inputs[0])
+                if producer is None:
+                    continue
+                if can_fuse_pool(dfg, producer, pool):
+                    fuse_pool(dfg, producer, pool)
+                    fused += 1
+                    changed = True
+        return {"pools_fused": fused, "streams_eliminated": fused}

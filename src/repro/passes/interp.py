@@ -2,9 +2,13 @@
 
 Executes a :class:`~repro.core.ir.DFG` numerically (dense jnp math, no
 tiling, no streams) so tests can assert that a rewritten graph computes
-*exactly* what the original did: fusion, DCE, canonicalization, and the
-layer-group partitioner are all checked against this executor, which in
-turn leans on ``repro.kernels.ref`` for the conv path.
+*exactly* what the original did: fusion (elementwise, conv+activation,
+conv+pool), CSE, DCE, canonicalization, and the layer-group partitioner
+are all checked against this executor, which in turn leans on
+``repro.kernels.ref`` for the conv/pool/elementwise primitives — the
+same primitives ``repro.kernels.ops.lower_group`` lowers groups with, so
+the interpreter, the Pallas path, and the HLS emitter all share one
+semantic definition.
 
 Supported node shapes (everything ``cnn_graphs`` builds):
 
@@ -12,7 +16,10 @@ Supported node shapes (everything ``cnn_graphs`` builds):
 * regular reductions whose map results are all single dims (matmul and
   friends) via einsum built from the indexing maps;
 * NHWC sliding-window MAC (conv2d) via ``ref.conv2d`` (SAME padding —
-  the convention the graph builders use when sizing output values).
+  the convention the graph builders use when sizing output values);
+* NHWC sliding-window MAX (max pool, non-overlapping or not) via
+  ``ref.maxpool2d`` (VALID padding);
+* fused epilogues, including windowed pooling entries.
 
 Integer graphs execute in int32 (the paper's int8 PTQ regime accumulates
 in int32); float graphs in float32.
@@ -24,53 +31,18 @@ from typing import Mapping
 import jax
 import jax.numpy as jnp
 
-from repro.core.analysis import KernelClass, classify_kernel
+from repro.core.analysis import KernelClass, classify_kernel, einsum_spec, window_geometry
 from repro.core.ir import DFG, GenericOp, PayloadKind
 from repro.kernels import ref
 
 
-def _unary(kind: PayloadKind, x):
-    if kind == PayloadKind.RELU:
-        return jnp.maximum(x, 0)
-    if kind == PayloadKind.SQUARED_RELU:
-        r = jnp.maximum(x, 0)
-        return r * r
-    if kind == PayloadKind.IDENTITY:
-        return x
-    if kind == PayloadKind.EXP:
-        return jnp.exp(x.astype(jnp.float32))
-    raise NotImplementedError(f"unary payload {kind}")
-
-
-def _binary(kind: PayloadKind, a, b):
-    if kind == PayloadKind.ADD:
-        return a + b
-    if kind == PayloadKind.MUL:
-        return a * b
-    if kind == PayloadKind.MAX:
-        return jnp.maximum(a, b)
-    raise NotImplementedError(f"binary payload {kind}")
-
-
 def _apply_epilogue(op: GenericOp, out, env: Mapping[str, jax.Array]):
-    for e in op.epilogue:
-        if e.operand is None:
-            out = _unary(e.kind, out)
-        else:
-            out = _binary(e.kind, out, env[e.operand])
-    return out
+    return ref.apply_epilogue(out, op.epilogue, env)
 
 
 def _einsum_from_maps(op: GenericOp, operands):
     """Regular reduction with single-dim map results → jnp.einsum."""
-    letters = "abcdefghijklmnopqrstuvwxyz"
-    subs = []
-    for m in op.indexing_maps:
-        if not all(e.is_single_dim() for e in m.results):
-            raise NotImplementedError(f"{op.name}: composite map in einsum path")
-        subs.append("".join(letters[e.terms[0][0]] for e in m.results))
-    spec = ",".join(subs[:-1]) + "->" + subs[-1]
-    return jnp.einsum(spec, *operands)
+    return jnp.einsum(einsum_spec(op), *operands)
 
 
 def _conv2d(op: GenericOp, dfg: DFG, env: Mapping[str, jax.Array]):
@@ -85,14 +57,23 @@ def _conv2d(op: GenericOp, dfg: DFG, env: Mapping[str, jax.Array]):
                       padding="SAME")
 
 
+def _maxpool(op: GenericOp, env: Mapping[str, jax.Array]):
+    info = classify_kernel(op)
+    geo = window_geometry(op, info)
+    if op.n_dims != 6 or len(geo.window_extents) != 2 or info.dilation != 1:
+        raise NotImplementedError(f"{op.name}: unsupported pool shape")
+    kh, kw = geo.window_extents
+    return ref.maxpool2d(env[op.inputs[0]], kh, kw, info.stride)
+
+
 def execute_node(op: GenericOp, dfg: DFG, env: Mapping[str, jax.Array]):
     info = classify_kernel(op)
     if info.kernel_class == KernelClass.PURE_PARALLEL:
         args = [env[i] for i in op.inputs]
         if len(args) == 1:
-            out = _unary(op.payload, args[0])
+            out = ref.unary(op.payload, args[0])
         elif len(args) == 2:
-            out = _binary(op.payload, args[0], args[1])
+            out = ref.binary(op.payload, args[0], args[1])
         else:
             raise NotImplementedError(f"{op.name}: {len(args)}-ary elementwise")
     elif info.kernel_class == KernelClass.REGULAR_REDUCTION:
@@ -100,9 +81,12 @@ def execute_node(op: GenericOp, dfg: DFG, env: Mapping[str, jax.Array]):
             raise NotImplementedError(f"{op.name}: non-MAC reduction")
         out = _einsum_from_maps(op, [env[i] for i in op.inputs])
     else:  # SLIDING_WINDOW
-        if op.payload != PayloadKind.MAC:
-            raise NotImplementedError(f"{op.name}: non-MAC sliding window (pool)")
-        out = _conv2d(op, dfg, env)
+        if op.payload == PayloadKind.MAC:
+            out = _conv2d(op, dfg, env)
+        elif op.payload == PayloadKind.MAX and len(op.inputs) == 1:
+            out = _maxpool(op, env)
+        else:
+            raise NotImplementedError(f"{op.name}: unsupported sliding window")
     return _apply_epilogue(op, out, env)
 
 

@@ -1,5 +1,4 @@
-"""Resource-aware layer-group partitioning (the pass pipeline's answer
-to "the whole graph does not fit").
+"""Resource-aware, cycle-balanced layer-group partitioning.
 
 When :func:`~repro.core.dse.solve_ilp` proves the whole-graph streaming
 plan exceeds the BRAM/DSP budgets even at unroll=1, we split the DFG at
@@ -9,163 +8,163 @@ the fabric (separate HLS kernels, one resident at a time); values
 crossing a group boundary spill to DRAM buffers that the host-side
 schedule allocates and threads between kernel invocations.
 
-The partitioner is greedy over the (canonicalized, fused) topological
-order: grow the current group while its independent streaming+DSE plan
-stays feasible, cut when the next node would break the budget.  Greedy
-is optimal in group *count* for chain graphs (every cut point it skips,
-a later plan must also skip), and safe for diamonds because groups are
-topological prefixes — a producer is always in the same or an earlier
-group than its consumers.
+Two strategies over the (canonicalized, fused) topological order:
+
+* ``"balanced"`` (default) — exact min-max search: a memoized DP over
+  the cut positions that minimizes the *slowest group's* modeled cycles
+  subject to per-group feasibility.  Feasibility is monotone in group
+  extent (a superset group needs at least its subset's resources), so
+  each start position probes forward only until the first infeasible
+  end — PR 1's suffix-bound fast infeasibility keeps every probe cheap.
+* ``"greedy"`` — the PR 1 prefix cut (grow until the budget breaks),
+  optimal in group *count* but free to leave one group far slower than
+  the rest; kept for regression comparison.
+
+Either way a single node that exceeds the budgets on its own is retried
+with **partial weight streaming** (``solve_ilp(weight_streaming=True)``)
+before :class:`PartitionError` is raised — the rescue that makes
+weight-dominated convs schedulable at the cost of DRAM tile traffic.
+
+The result is the schedule IR of :mod:`repro.core.compile_driver`:
+``partition_layer_groups`` returns a :class:`CompiledDesign` (exported
+here under its historical name ``PartitionPlan``), whose groups are
+:class:`GroupSchedule`s (historically ``LayerGroup``).
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
 from typing import Optional
 
-from repro.core.dse import DseResult, solve_ilp
+from repro.core.compile_driver import CompiledDesign, GroupSchedule, SpillBuffer
+from repro.core.dse import solve_ilp
 from repro.core.ir import DFG
 from repro.core.resource_model import (
     FpgaResourceModel,
     KV260_BRAM18K,
     KV260_DSP,
 )
-from repro.core.streaming import StreamingPlan, plan_streams
+from repro.core.streaming import plan_streams
 
-#: DRAM spill bandwidth in bytes per fabric cycle (KV260 DDR4 ≈ 19 GB/s
-#: at a 300 MHz fabric clock ⇒ ~64 B/cycle; we derate to a conservative
-#: streaming-access figure).
-DRAM_BYTES_PER_CYCLE = 16
+#: historical names (PR 1 API) for the schedule IR classes
+LayerGroup = GroupSchedule
+PartitionPlan = CompiledDesign
 
 
 class PartitionError(ValueError):
-    """A single node exceeds the budgets on its own — no cut can help."""
+    """A single node exceeds the budgets on its own — no cut can help,
+    not even with partial weight streaming."""
 
 
-@dataclass
-class SpillBuffer:
-    """A DRAM buffer carrying one value across a group boundary."""
+class _GroupPlanner:
+    """Plans (and caches) contiguous slices ``order[i:j]`` as groups."""
 
-    value: str
-    bits: int
+    def __init__(self, dfg: DFG, *, d_total: int, b_total: int,
+                 model: Optional[FpgaResourceModel], max_unroll: int) -> None:
+        self.dfg = dfg
+        self.order = [n.name for n in dfg.topo_order()]
+        self.d_total = d_total
+        self.b_total = b_total
+        self.model = model
+        self.max_unroll = max_unroll
+        self._cache: dict[tuple[int, int], GroupSchedule] = {}
 
-    @property
-    def bytes(self) -> int:
-        return math.ceil(self.bits / 8)
+    def group(self, i: int, j: int, index: int = 0) -> GroupSchedule:
+        """Plan ``order[i:j]`` (cached; ``index`` only names the group)."""
+        key = (i, j)
+        g = self._cache.get(key)
+        if g is None:
+            names = self.order[i:j]
+            sub = self.dfg.subgraph(names, name=f"{self.dfg.name}_g{index}")
+            plan = plan_streams(sub)
+            dse = solve_ilp(
+                plan, d_total=self.d_total, b_total=self.b_total,
+                model=self.model, max_unroll=self.max_unroll,
+            )
+            if not dse.feasible and j - i == 1:
+                # last resort for a node no cut can shrink: stream its
+                # weights from DRAM in double-buffered tiles
+                rescued = solve_ilp(
+                    plan, d_total=self.d_total, b_total=self.b_total,
+                    model=self.model, max_unroll=self.max_unroll,
+                    weight_streaming=True,
+                )
+                if rescued.feasible:
+                    dse = rescued
+            spill_in = [v for v in sub.graph_inputs
+                        if v not in self.dfg.graph_inputs]
+            spill_out = [v for v in sub.graph_outputs
+                         if v not in self.dfg.graph_outputs]
+            g = GroupSchedule(sub.name, sub, plan, dse, spill_in, spill_out)
+            self._cache[key] = g
+        return g
 
+    def renamed(self, i: int, j: int, index: int) -> GroupSchedule:
+        """The cached group, re-labelled with its final schedule index."""
+        g = self.group(i, j)
+        name = f"{self.dfg.name}_g{index}"
+        if g.name != name:
+            sub = self.dfg.subgraph(self.order[i:j], name=name)
+            g = GroupSchedule(name, sub, g.plan, g.dse,
+                              list(g.spill_in), list(g.spill_out))
+            self._cache[(i, j)] = g
+        return g
 
-@dataclass
-class LayerGroup:
-    """One sequentially-executed slice of the graph, independently
-    planned through streaming + DSE."""
+    def max_feasible_end(self, i: int) -> int:
+        """Largest ``j`` with ``order[i:j]`` feasible (monotone probe).
 
-    name: str
-    dfg: DFG
-    plan: StreamingPlan
-    dse: DseResult
-    spill_in: list[str] = field(default_factory=list)
-    spill_out: list[str] = field(default_factory=list)
-
-    @property
-    def bram(self) -> int:
-        return self.dse.bram_used
-
-    @property
-    def dsp(self) -> int:
-        return self.dse.dsp_used
-
-    @property
-    def cycles(self) -> int:
-        return self.dse.estimate.pipeline_cycles
-
-
-@dataclass
-class PartitionPlan:
-    """The group schedule: groups in execution order + spill ledger."""
-
-    source: DFG
-    groups: list[LayerGroup]
-    d_total: int
-    b_total: int
-    whole_graph_feasible: bool
-
-    @property
-    def partitioned(self) -> bool:
-        return len(self.groups) > 1
-
-    @property
-    def feasible(self) -> bool:
-        return all(g.dse.feasible for g in self.groups)
-
-    @property
-    def max_bram(self) -> int:
-        """Peak resident BRAM — one group occupies the fabric at a time."""
-        return max(g.bram for g in self.groups)
-
-    @property
-    def max_dsp(self) -> int:
-        return max(g.dsp for g in self.groups)
-
-    def spills(self) -> list[SpillBuffer]:
-        seen: dict[str, SpillBuffer] = {}
-        for g in self.groups:
-            for v in g.spill_out:
-                val = self.source.values[v]
-                seen.setdefault(v, SpillBuffer(v, val.total_bits))
-        return list(seen.values())
-
-    @property
-    def spill_bits(self) -> int:
-        return sum(s.bits for s in self.spills())
-
-    @property
-    def spill_cycles(self) -> int:
-        """DRAM round-trip (write at the producer cut, read at the
-        consumer cut) for every spilled value."""
-        return sum(
-            math.ceil(2 * s.bytes / DRAM_BYTES_PER_CYCLE) for s in self.spills()
-        )
-
-    @property
-    def total_cycles(self) -> int:
-        """Sequential schedule: groups back-to-back plus spill traffic."""
-        return sum(g.cycles for g in self.groups) + self.spill_cycles
-
-    def schedule(self) -> list[dict]:
-        """Host-visible schedule rows (consumed by the emitter and the
-        benchmark report)."""
-        return [
-            {
-                "group": g.name,
-                "nodes": [n.name for n in g.dfg.nodes],
-                "bram": g.bram,
-                "dsp": g.dsp,
-                "cycles": g.cycles,
-                "spill_in": list(g.spill_in),
-                "spill_out": list(g.spill_out),
-            }
-            for g in self.groups
-        ]
+        Raises :class:`PartitionError` when even ``order[i:i+1]`` (with
+        the weight-streaming rescue) cannot fit.
+        """
+        if not self.group(i, i + 1).dse.feasible:
+            raise PartitionError(
+                f"{self.dfg.name}: node {self.order[i]} alone exceeds the "
+                f"budgets (DSP={self.d_total}, BRAM={self.b_total}) — "
+                "partitioning cannot help"
+            )
+        j = i + 1
+        while j < len(self.order) and self.group(i, j + 1).dse.feasible:
+            j += 1
+        return j
 
 
-def _plan_group(
-    dfg: DFG,
-    names: list[str],
-    index: int,
-    *,
-    d_total: int,
-    b_total: int,
-    model: Optional[FpgaResourceModel],
-    max_unroll: int,
-) -> LayerGroup:
-    sub = dfg.subgraph(names, name=f"{dfg.name}_g{index}")
-    plan = plan_streams(sub)
-    dse = solve_ilp(
-        plan, d_total=d_total, b_total=b_total, model=model, max_unroll=max_unroll
-    )
-    spill_in = [v for v in sub.graph_inputs if v not in dfg.graph_inputs]
-    spill_out = [v for v in sub.graph_outputs if v not in dfg.graph_outputs]
-    return LayerGroup(sub.name, sub, plan, dse, spill_in, spill_out)
+def _balanced_cuts(planner: _GroupPlanner) -> list[tuple[int, int]]:
+    """Min-max DP over cut positions: minimize the slowest group's
+    modeled cycles, tie-breaking on fewer groups then lower total."""
+    n = len(planner.order)
+    memo: dict[int, tuple[tuple[int, int, int], list[tuple[int, int]]]] = {
+        n: ((0, 0, 0), [])
+    }
+
+    def best(i: int) -> tuple[tuple[int, int, int], list[tuple[int, int]]]:
+        hit = memo.get(i)
+        if hit is not None:
+            return hit
+        end = planner.max_feasible_end(i)
+        best_key: tuple[int, int, int] | None = None
+        best_cuts: list[tuple[int, int]] = []
+        for j in range(i + 1, end + 1):
+            cyc = planner.group(i, j).cycles
+            (rest_max, rest_groups, rest_total), rest_cuts = best(j)
+            key = (max(cyc, rest_max), 1 + rest_groups, cyc + rest_total)
+            if best_key is None or key < best_key:
+                best_key = key
+                best_cuts = [(i, j)] + rest_cuts
+        assert best_key is not None  # end >= i+1 guarantees one candidate
+        memo[i] = (best_key, best_cuts)
+        return memo[i]
+
+    return best(0)[1]
+
+
+def _greedy_cuts(planner: _GroupPlanner) -> list[tuple[int, int]]:
+    """PR 1 behaviour: grow each group until the next node breaks it."""
+    cuts: list[tuple[int, int]] = []
+    i = 0
+    n = len(planner.order)
+    while i < n:
+        j = planner.max_feasible_end(i)
+        cuts.append((i, j))
+        i = j
+    return cuts
 
 
 def partition_layer_groups(
@@ -175,46 +174,23 @@ def partition_layer_groups(
     b_total: int = KV260_BRAM18K,
     model: Optional[FpgaResourceModel] = None,
     max_unroll: int = 4096,
-) -> PartitionPlan:
-    """Whole graph if it fits; greedy topological layer groups if not."""
-    whole = _plan_group(
-        dfg, [n.name for n in dfg.topo_order()], 0,
-        d_total=d_total, b_total=b_total, model=model, max_unroll=max_unroll,
+    strategy: str = "balanced",
+) -> CompiledDesign:
+    """Whole graph if it fits; cycle-balanced topological layer groups
+    (or the greedy PR 1 cut, ``strategy="greedy"``) if not."""
+    if strategy not in ("balanced", "greedy"):
+        raise ValueError(f"unknown partition strategy {strategy!r}")
+    planner = _GroupPlanner(
+        dfg, d_total=d_total, b_total=b_total, model=model,
+        max_unroll=max_unroll,
     )
+    n = len(planner.order)
+    whole = planner.group(0, n)
     if whole.dse.feasible:
-        return PartitionPlan(dfg, [whole], d_total, b_total,
-                             whole_graph_feasible=True)
+        return CompiledDesign(dfg, [planner.renamed(0, n, 0)],
+                              d_total, b_total, whole_graph_feasible=True)
 
-    order = [n.name for n in dfg.topo_order()]
-    groups: list[LayerGroup] = []
-    current: list[str] = []
-    planned: Optional[LayerGroup] = None
-    for name in order:
-        candidate = current + [name]
-        trial = _plan_group(
-            dfg, candidate, len(groups),
-            d_total=d_total, b_total=b_total, model=model, max_unroll=max_unroll,
-        )
-        if trial.dse.feasible:
-            current, planned = candidate, trial
-            continue
-        if not current:
-            raise PartitionError(
-                f"{dfg.name}: node {name} alone exceeds the budgets "
-                f"(DSP={d_total}, BRAM={b_total}) — partitioning cannot help"
-            )
-        groups.append(planned)
-        current = [name]
-        planned = _plan_group(
-            dfg, current, len(groups),
-            d_total=d_total, b_total=b_total, model=model, max_unroll=max_unroll,
-        )
-        if not planned.dse.feasible:
-            raise PartitionError(
-                f"{dfg.name}: node {name} alone exceeds the budgets "
-                f"(DSP={d_total}, BRAM={b_total}) — partitioning cannot help"
-            )
-    if current:
-        groups.append(planned)
-    return PartitionPlan(dfg, groups, d_total, b_total,
-                         whole_graph_feasible=False)
+    cuts = (_balanced_cuts if strategy == "balanced" else _greedy_cuts)(planner)
+    groups = [planner.renamed(i, j, idx) for idx, (i, j) in enumerate(cuts)]
+    return CompiledDesign(dfg, groups, d_total, b_total,
+                          whole_graph_feasible=False)

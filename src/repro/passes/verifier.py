@@ -20,8 +20,11 @@ Checks (all structural — payload semantics are the interpreter's job):
       on-chip constants, never streams);
   V7. every non-constant node input is a graph input or has a producer;
   V8. output shape agreement: when every output-map result is a single
-      dim, the produced Value's shape equals the mapped extents (the
-      canonicalizer's shape propagation maintains this invariant).
+      dim, the produced Value's shape equals the mapped extents — shrunk
+      by any fused pooling epilogue (the canonicalizer's shape
+      propagation maintains this invariant);
+  V9. pooling epilogues are well-formed: window rank matches the output
+      rank and every factor tiles its axis exactly.
 """
 from __future__ import annotations
 
@@ -103,13 +106,33 @@ def verify_dfg(dfg: DFG) -> None:
                 _fail(dfg, "V7", f"{n.name}: input {v} has no producer and "
                                  "is not a graph input")
 
-    # V8 — output shape agreement (single-dim output maps only)
+    # V8 — output shape agreement (single-dim output maps only); a fused
+    # pooling epilogue shrinks the mapped extents before the comparison
     for n in dfg.nodes:
         omap = n.output_map
         if not all(e.is_single_dim() for e in omap.results):
             continue
         extents = tuple(n.dim_extent(e.terms[0][0]) for e in omap.results)
+        extents = n.epilogue_shape(extents)
         shape = dfg.values[n.output].shape
         if shape != extents:
             _fail(dfg, "V8", f"{n.name}: output {n.output} shape {shape} != "
                              f"mapped extents {extents}")
+
+    # V9 — pooling epilogues divide their axes exactly (window factors
+    # must tile the pre-pool extents; checked against the mapped shape)
+    for n in dfg.nodes:
+        omap = n.output_map
+        if not all(e.is_single_dim() for e in omap.results):
+            continue
+        shape = tuple(n.dim_extent(e.terms[0][0]) for e in omap.results)
+        for e in n.epilogue:
+            if not e.window:
+                continue
+            if len(e.window) != len(shape):
+                _fail(dfg, "V9", f"{n.name}: pool window rank {len(e.window)} "
+                                 f"!= output rank {len(shape)}")
+            if any(s % f for s, f in zip(shape, e.window)):
+                _fail(dfg, "V9", f"{n.name}: pool window {e.window} does not "
+                                 f"tile output extents {shape}")
+            shape = tuple(s // f for s, f in zip(shape, e.window))

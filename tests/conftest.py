@@ -28,3 +28,22 @@ def run_subprocess(code: str, *, devices: int = 0, env: dict | None = None,
 @pytest.fixture(scope="session")
 def subproc():
     return run_subprocess
+
+
+@pytest.fixture(scope="session")
+def deep224_fused():
+    """deep_cascade(224) through the default pass pipeline — shared
+    across test modules (the pipeline + per-group ILP solves are the
+    priciest model-side fixtures in the suite)."""
+    from repro.core import cnn_graphs
+    from repro.passes import run_default_pipeline
+
+    return run_default_pipeline(cnn_graphs.deep_cascade(224)).dfg
+
+
+@pytest.fixture(scope="session")
+def deep224_partition(deep224_fused):
+    """Cycle-balanced partition of deep_cascade(224) (CompiledDesign)."""
+    from repro.passes import partition_layer_groups
+
+    return partition_layer_groups(deep224_fused)

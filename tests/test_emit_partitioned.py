@@ -75,10 +75,9 @@ class TestStructure:
             assert pos > last
             last = pos
 
-    def test_deep_cascade_224_emits(self):
+    def test_deep_cascade_224_emits(self, deep224_fused, deep224_partition):
         """The acceptance graph's partitioned artifact is well-formed."""
-        fused = run_default_pipeline(cnn_graphs.deep_cascade(224)).dfg
-        pp = partition_layer_groups(fused)
+        fused, pp = deep224_fused, deep224_partition
         files = emit_partitioned(pp)
         host = files["host_schedule.cpp"]
         assert f"void run_{fused.name}(" in host

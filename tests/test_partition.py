@@ -14,11 +14,11 @@ from repro.passes import (
 from repro.passes import interp
 
 
-@pytest.fixture(scope="module")
-def deep224():
-    """Fused deep_cascade(224) + its partition plan (computed once)."""
-    fused = run_default_pipeline(cnn_graphs.deep_cascade(224)).dfg
-    return fused, partition_layer_groups(fused)
+@pytest.fixture()
+def deep224(deep224_fused, deep224_partition):
+    """Fused deep_cascade(224) + its partition plan (session-shared —
+    see conftest.py)."""
+    return deep224_fused, deep224_partition
 
 
 class TestAcceptance:

@@ -16,7 +16,9 @@ from repro.core.ir import (
 from repro.core.streaming import plan_streams
 from repro.passes import (
     Canonicalize,
+    CommonSubexprElimination,
     ConvActivationFusion,
+    ConvPoolFusion,
     DeadCodeElimination,
     ElementwiseChainFusion,
     Pass,
@@ -222,6 +224,139 @@ class TestFusion:
         res = run_default_pipeline(cnn_graphs.cascade_conv(8))
         assert res.dfg.graph_outputs == ["relu1_out"]
         assert res.dfg.nodes[-1].output == "relu1_out"
+
+
+class TestConvPoolFusion:
+    """Satellite (ISSUE 2): 2×2 pool folds into the conv's epilogue."""
+
+    def test_pool_fuses_into_conv(self):
+        res = run_default_pipeline(cnn_graphs.conv_pool(16, c_out=8))
+        (conv,) = res.dfg.nodes
+        assert conv.name == "conv0"
+        kinds = [(e.kind, e.window) for e in conv.epilogue]
+        assert kinds == [
+            (PayloadKind.RELU, ()),
+            (PayloadKind.MAX, (1, 2, 2, 1)),
+        ]
+        assert res.dfg.graph_outputs == ["pool0_out"]
+        assert res.dfg.values["pool0_out"].shape == (1, 8, 8, 8)
+        assert res.stat("pools_fused") == 1
+
+    def test_fused_vs_unfused_bit_exact(self):
+        """Legality + semantics: fused pool computes the identical
+        max-pooled result (int32 math, exact)."""
+        dfg = cnn_graphs.conv_pool(16, c_out=8)
+        env = interp.random_env(dfg, seed=13)
+        before = interp.graph_outputs(dfg, env)
+        after = interp.graph_outputs(run_default_pipeline(dfg).dfg, env)
+        assert set(before) == set(after)
+        for k in before:
+            np.testing.assert_array_equal(
+                np.asarray(before[k]), np.asarray(after[k])
+            )
+
+    def test_multi_consumer_pool_not_fused(self):
+        """F-legality: a conv output with a second consumer keeps its
+        pool as a standalone node."""
+        dfg = cnn_graphs.conv_pool(16, c_out=8)
+        # second consumer of the conv output
+        shape = (1, 16, 16, 8)
+        dfg.add_value(Value("tap_out", shape, 8))
+        dfg.add_node(
+            make_elementwise_op("tap", ["conv0_out"], "tap_out", shape,
+                                PayloadKind.RELU)
+        )
+        dfg.graph_outputs.append("tap_out")
+        res = run_default_pipeline(dfg)
+        assert "pool0" in {n.name for n in res.dfg.nodes}
+        assert res.stat("pools_fused") == 0
+
+    def test_overlapping_pool_not_fused(self):
+        """Stride-aligned only: a 3×3 stride-1 pool must stay a node."""
+        from repro.core.ir import make_pool2d_op
+
+        dfg = cnn_graphs.conv_relu(16, c_out=8)
+        dfg.add_value(Value("pool_out", (1, 16, 16, 8), 8))
+        dfg.add_node(
+            make_pool2d_op("pool0", "relu0_out", "pool_out",
+                           n=1, h_out=16, w_out=16, c=8, kh=3, kw=3, stride=1)
+        )
+        dfg.graph_outputs = ["pool_out"]
+        res = run_default_pipeline(dfg)
+        assert "pool0" in {n.name for n in res.dfg.nodes}
+        assert res.stat("pools_fused") == 0
+
+    def test_fused_plan_shrinks_footprint(self):
+        """One fewer process + FIFO: modeled BRAM must not grow."""
+        dfg = cnn_graphs.conv_pool(32)
+        fused = run_default_pipeline(dfg).dfg
+        pre = solve_ilp(plan_streams(dfg))
+        post = solve_ilp(plan_streams(fused))
+        assert pre.feasible and post.feasible
+        assert post.bram_used < pre.bram_used
+
+
+def _diamond_with_duplicates(n=8, c=4):
+    """x → {conv0, conv9 (identical)} → relus → add: CSE fodder."""
+    from repro.core.ir import make_conv2d_op
+
+    dfg = cnn_graphs.conv_relu(n, c_out=c)
+    shape = (1, n, n, c)
+    dfg.add_value(Value("conv9_out", shape, 8))
+    dfg.add_node(
+        make_conv2d_op("conv9", "x", "w0", "conv9_out",
+                       n=1, h_out=n, w_out=n, c_out=c, kh=3, kw=3, c_in=3)
+    )
+    dfg.add_value(Value("relu9_out", shape, 8))
+    dfg.add_node(
+        make_elementwise_op("relu9", ["conv9_out"], "relu9_out", shape,
+                            PayloadKind.RELU)
+    )
+    dfg.add_value(Value("sum_out", shape, 8))
+    dfg.add_node(
+        make_elementwise_op("sum", ["relu0_out", "relu9_out"], "sum_out",
+                            shape, PayloadKind.ADD)
+    )
+    dfg.graph_outputs = ["sum_out"]
+    return dfg
+
+
+class TestCse:
+    """Satellite (ISSUE 2): CSE across branches."""
+
+    def test_duplicate_chain_collapses(self):
+        dfg = _diamond_with_duplicates()
+        stats = CommonSubexprElimination().run_on(dfg)
+        assert stats["subexprs_eliminated"] == 2  # conv9 then relu9
+        names = {n.name for n in dfg.nodes}
+        assert "conv9" not in names and "relu9" not in names
+        assert dfg.node("sum").inputs == ("relu0_out", "relu0_out")
+        verify_dfg(dfg)
+
+    def test_semantics_preserved(self):
+        dfg = _diamond_with_duplicates()
+        env = interp.random_env(dfg, seed=9)
+        before = interp.graph_outputs(dfg, env)
+        after = interp.graph_outputs(run_default_pipeline(dfg).dfg, env)
+        for k in before:
+            np.testing.assert_array_equal(
+                np.asarray(before[k]), np.asarray(after[k])
+            )
+
+    def test_distinct_nodes_untouched(self):
+        dfg = cnn_graphs.residual_block(8)
+        stats = CommonSubexprElimination().run_on(dfg)
+        assert stats["subexprs_eliminated"] == 0
+
+    def test_graph_output_duplicate_kept(self):
+        """A duplicate whose output is itself a graph output stays."""
+        dfg = _diamond_with_duplicates()
+        dfg.graph_outputs.append("relu9_out")
+        stats = CommonSubexprElimination().run_on(dfg)
+        # conv9 dedups, but relu9 (a graph output) must survive
+        assert stats["subexprs_eliminated"] == 1
+        assert "relu9" in {n.name for n in dfg.nodes}
+        verify_dfg(dfg)
 
 
 class TestAcceptance:
