@@ -50,41 +50,41 @@ def passes_section() -> bool:
 
 
 def bench_smoke_json(path: str = "BENCH_smoke.json") -> bool:
-    """Compile every suite graph through the unified driver and write
-    the perf-trajectory snapshot (cycles + BRAM per graph) that CI
-    tracks from PR 2 on."""
+    """Compile every suite graph through the unified driver — once per
+    device preset (KV260, ZU3EG) — and write the perf-trajectory
+    snapshot (cycles + BRAM per graph per target) that CI archives and
+    diffs across runs (``scripts/smoke_diff.py``)."""
     import json
 
-    from repro.core import cnn_graphs
-    from repro.core.compile_driver import compile as compile_design
+    from benchmarks.paper_tables import compile_cached, sweep_suite
+    from repro.core.compile_driver import TARGETS
 
     _section(f"BENCH smoke snapshot → {path}")
-    suite = dict(cnn_graphs.PAPER_SUITE)
-    suite["conv_pool_32"] = lambda: cnn_graphs.conv_pool(32)
-    suite["fat_conv_16"] = cnn_graphs.fat_conv
     data = {}
     ok = True
-    print("graph,total_cycles,max_group_cycles,max_bram,groups,spill_bytes,"
-          "weight_streamed")
-    for name, make in suite.items():
-        d = compile_design(make())
-        data[name] = {
-            "total_cycles": d.total_cycles,
-            "max_group_cycles": d.max_group_cycles,
-            "max_bram": d.max_bram,
-            "max_dsp": d.max_dsp,
-            "groups": len(d.groups),
-            "spill_bytes": sum(s.bytes for s in d.spills()),
-            "weight_streamed": d.weight_streamed,
-            "feasible": d.feasible,
-        }
-        r = data[name]
-        print(f"{name},{r['total_cycles']},{r['max_group_cycles']},"
-              f"{r['max_bram']},{r['groups']},{r['spill_bytes']},"
-              f"{r['weight_streamed']}")
-        if not r["feasible"]:
-            print(f"# WARNING: {name} infeasible under KV260 budgets")
-            ok = False
+    print("graph,target,total_cycles,max_group_cycles,max_bram,groups,"
+          "spill_bytes,weight_streamed")
+    for name, make in sweep_suite().items():
+        data[name] = {}
+        for tname, target in TARGETS.items():
+            d = compile_cached(name, make, target)
+            data[name][tname] = {
+                "total_cycles": d.total_cycles,
+                "max_group_cycles": d.max_group_cycles,
+                "max_bram": d.max_bram,
+                "max_dsp": d.max_dsp,
+                "groups": len(d.groups),
+                "spill_bytes": sum(s.bytes for s in d.spills()),
+                "weight_streamed": d.weight_streamed,
+                "feasible": d.feasible,
+            }
+            r = data[name][tname]
+            print(f"{name},{tname},{r['total_cycles']},"
+                  f"{r['max_group_cycles']},{r['max_bram']},{r['groups']},"
+                  f"{r['spill_bytes']},{r['weight_streamed']}")
+            if not r["feasible"]:
+                print(f"# WARNING: {name} infeasible under {tname} budgets")
+                ok = False
     # always write the snapshot — a regression run is exactly when the
     # trajectory artifact matters most (feasible:false rows included)
     with open(path, "w") as f:

@@ -25,3 +25,8 @@ if [ "$FULL" = 1 ]; then
 else
   python -m benchmarks.run --smoke  # model-only sections + BENCH_smoke.json
 fi
+
+# perf-trajectory gate: diff BENCH_smoke.json against the archived
+# previous snapshot (fail-soft: only a >10% cycle regression hard-fails;
+# a missing archive just seeds the trajectory), then refresh the archive.
+python scripts/smoke_diff.py BENCH_smoke.json

@@ -1,0 +1,128 @@
+#!/usr/bin/env python
+"""Fail-soft perf-trajectory diff for BENCH_smoke.json.
+
+Compares the current snapshot against the archived previous one, prints
+per-graph (per-target) cycle/BRAM deltas, then refreshes the archive.
+
+Fail-soft contract (scripts/ci.sh):
+  * no archive yet, unreadable archive, schema drift → report + archive,
+    exit 0 (the trajectory starts/restarts here);
+  * any metric moved → printed delta, exit 0;
+  * total_cycles regressed by more than --threshold (default 10%) on
+    any graph → exit 1 (the only hard failure).
+
+The snapshot schema is ``{graph: {target: row}}`` since ISSUE 3; the
+flat PR 2 ``{graph: row}`` form is still accepted (treated as one
+"kv260" target) so the first diff across the schema change stays soft.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+HARD_METRIC = "total_cycles"
+SOFT_METRICS = ("total_cycles", "max_group_cycles", "max_bram", "groups",
+                "spill_bytes")
+
+
+def _load(path: str) -> dict | None:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"# smoke-diff: cannot read {path}: {e}")
+        return None
+    if not isinstance(data, dict):
+        print(f"# smoke-diff: {path} is not a snapshot dict")
+        return None
+    return data
+
+
+def _per_target(data: dict) -> dict[tuple[str, str], dict]:
+    """Normalize either schema to {(graph, target): row}."""
+    rows: dict[tuple[str, str], dict] = {}
+    for graph, entry in data.items():
+        if not isinstance(entry, dict):
+            continue
+        if any(isinstance(v, dict) and "total_cycles" in v
+               for v in entry.values()):
+            for target, row in entry.items():
+                if isinstance(row, dict):
+                    rows[(graph, target)] = row
+        elif "total_cycles" in entry:  # PR 2 flat schema
+            rows[(graph, "kv260")] = entry
+    return rows
+
+
+def diff(prev: dict, cur: dict, threshold: float, emit=print) -> int:
+    """Print deltas; return the number of hard cycle regressions."""
+    p, c = _per_target(prev), _per_target(cur)
+    regressions = 0
+    emit("graph,target,metric,previous,current,delta_pct")
+    for key in sorted(c):
+        graph, target = key
+        if key not in p:
+            emit(f"{graph},{target},<new row>,,,")
+            continue
+        for m in SOFT_METRICS:
+            a, b = p[key].get(m), c[key].get(m)
+            if not isinstance(a, (int, float)) or not isinstance(b, (int, float)):
+                continue
+            if a == b:
+                continue
+            pct = (b - a) / a * 100 if a else float("inf")
+            emit(f"{graph},{target},{m},{a},{b},{pct:+.1f}%")
+            if m == HARD_METRIC and a and (b - a) / a > threshold:
+                emit(f"# REGRESSION: {graph}@{target} {m} "
+                     f"{a} -> {b} (+{(b - a) / a * 100:.1f}% > "
+                     f"{threshold * 100:.0f}%)")
+                regressions += 1
+    for key in sorted(set(p) - set(c)):
+        emit(f"{key[0]},{key[1]},<row dropped>,,,")
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", nargs="?", default="BENCH_smoke.json")
+    ap.add_argument("--archive", default=".bench/BENCH_smoke.prev.json",
+                    help="previous snapshot (refreshed on every run)")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="hard-fail fraction for total_cycles regressions")
+    args = ap.parse_args(argv)
+
+    cur = _load(args.current)
+    if cur is None:
+        print("# smoke-diff: no current snapshot — nothing to do")
+        return 0
+
+    rc = 0
+    prev = _load(args.archive) if os.path.exists(args.archive) else None
+    if prev is None:
+        print(f"# smoke-diff: no previous snapshot at {args.archive} — "
+              "archiving this run as the new baseline")
+    else:
+        n = diff(prev, cur, args.threshold)
+        if n:
+            print(f"# smoke-diff: {n} hard cycle regression(s) "
+                  f"(> {args.threshold * 100:.0f}%)")
+            rc = 1
+        else:
+            print("# smoke-diff: no hard regressions")
+
+    if rc == 0:
+        # keep the pre-regression baseline on failure so a re-run does
+        # not silently accept the regression as the new normal (delete
+        # the archive, or raise --threshold, to accept intentionally)
+        os.makedirs(os.path.dirname(args.archive) or ".", exist_ok=True)
+        shutil.copyfile(args.current, args.archive)
+    else:
+        print(f"# smoke-diff: baseline at {args.archive} left unchanged")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -199,6 +199,27 @@ def fat_conv(n_size: int = 16, c: int = 288) -> DFG:
     return dfg
 
 
+def fat_cascade(n_size: int = 16, c: int = 288, n_layers: int = 2) -> DFG:
+    """(Conv3×3+ReLU) × ``n_layers`` where *every* layer's weights alone
+    exceed the KV260 BRAM budget (3·3·288·288 int8 ≈ 324 RAM18K > 288).
+
+    No contiguous slice of this graph fits with resident weights, so the
+    partitioner cannot fall back to "cut until everything fits": every
+    candidate group needs streamed weight tiles, and the balanced DP
+    must price spill boundaries against DRAM tile traffic — the
+    cost-aware streaming showcase (ISSUE 3), unreachable through the
+    PR 2 single-node rescue."""
+    dfg = DFG(f"fat_cascade_{n_size}")
+    dfg.add_value(Value("x", (1, n_size, n_size, c), INT8))
+    dfg.graph_inputs.append("x")
+    cur = "x"
+    for i in range(n_layers):
+        cur = _conv(dfg, i, cur, 1, n_size, n_size, c, c)
+        cur = _relu(dfg, i, cur, (1, n_size, n_size, c))
+    dfg.graph_outputs.append(cur)
+    return dfg
+
+
 PAPER_SUITE = {
     "conv_relu_32": lambda: conv_relu(32),
     "conv_relu_224": lambda: conv_relu(224),

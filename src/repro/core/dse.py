@@ -192,11 +192,13 @@ def solve_ilp(
     (``repro.passes``) shrinks it before the solver ever runs.
 
     ``weight_streaming=True`` lets the candidate sets include partial
-    weight streaming (see :func:`node_candidates`).  Off by default: the
-    compile driver enables it only as a last resort, for single nodes
-    that no cut can make fit — streamed designs are strictly slower, so
-    admitting them everywhere would make *every* graph "feasible" and
-    erase the partitioning signal.
+    weight streaming (see :func:`node_candidates`).  Off by default:
+    streamed designs are strictly slower than their resident twins, so
+    admitting them unconditionally would make *every* graph "feasible"
+    and erase the partitioning signal.  The partitioner re-solves with
+    it for any slice whose resident plan is over budget — that makes
+    streamed groups a first-class choice its DP prices against cutting
+    (ISSUE 3), while graphs that fit resident never pick up tiles.
     """
     model = model or FpgaResourceModel()
     nodes = plan.node_order()

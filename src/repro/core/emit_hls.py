@@ -13,7 +13,9 @@ group schedule, with the five pragma families the paper highlights
 Weight-streamed nodes (``DseResult.weight_tiles``) emit the
 double-buffered ``wtile[2][…]`` ping/pong array, a ``WT`` tile loop
 with prefetch, and ``m_axi`` DRAM weight pointers; windowed (pooling)
-epilogues emit their partial-row buffer.  ``emit_cpp`` remains the
+epilogues emit their partial-row buffer; the host schedule overlaps
+each group's spill write with the next group's fill through an async
+DMA queue (matching ``transition_cycles``).  ``emit_cpp`` remains the
 per-plan workhorse underneath.
 
 The emitter is golden-file tested; it cannot be synthesized in this
@@ -359,7 +361,18 @@ emit_partitioned = emit_design
 
 def emit_host_schedule(pp) -> str:
     """The host-side group schedule (the artifact a partitioned design
-    adds over a monolithic one)."""
+    adds over a monolithic one).
+
+    Group transitions issue *overlapped* DMA: the spill write of group
+    *k* is queued asynchronously and the fill of group *k+1* streams one
+    burst behind it (``dma_write_async`` / ``dma_read_async`` /
+    ``dma_join``), matching the
+    :func:`repro.core.resource_model.transition_cycles` cost model —
+    ``max(spill, fill)`` plus the exposed burst tail, not a serial
+    round trip.
+    """
+    from .resource_model import transition_cycles
+
     src = pp.source
     lines = [
         "// Generated by MING-repro emithls backend — layer-group schedule",
@@ -370,6 +383,15 @@ def emit_host_schedule(pp) -> str:
         "typedef signed char elem_t;",
         "",
     ]
+    if pp.partitioned:
+        lines += [
+            "// async DMA queue: spill writes of group k overlap the fill of",
+            "// group k+1 (the read trails the write by one DRAM burst)",
+            "void dma_write_async(const elem_t *buf, size_t bytes);",
+            "void dma_read_async(elem_t *buf, size_t bytes);",
+            "void dma_join();  // barrier: all queued transfers retired",
+            "",
+        ]
     group_weights = {g.name: dram_weight_values(g.plan, g.dse) for g in pp.groups}
     for g in pp.groups:
         args = ["elem_t *" + v for v in g.dfg.graph_inputs]
@@ -386,10 +408,10 @@ def emit_host_schedule(pp) -> str:
         )
     for g in pp.groups:
         for v in group_weights[g.name]:
-            n = src.values[v].num_elements
+            b = math.ceil(src.values[v].total_bits / 8)
             lines.append(
-                f"static elem_t wstream_{v}[{n}];  "
-                f"// DRAM-resident streamed weights ({n / 1024:.1f} KiB)"
+                f"static elem_t wstream_{v}[{b}];  "
+                f"// DRAM-resident streamed weights ({b / 1024:.1f} KiB)"
             )
     lines.append("")
     io = ["elem_t *" + v for v in src.graph_inputs] + [
@@ -404,7 +426,8 @@ def emit_host_schedule(pp) -> str:
     def ref(v: str) -> str:
         return f"spill_{v}" if v in spilled else v
 
-    for g in pp.groups:
+    traffic = pp.boundary_traffic()
+    for gi, g in enumerate(pp.groups):
         call = [ref(v) for v in g.dfg.graph_inputs + g.dfg.graph_outputs]
         call += [f"wstream_{v}" for v in group_weights[g.name]]
         streamed = g.weight_streamed
@@ -416,6 +439,21 @@ def emit_host_schedule(pp) -> str:
             f"(BRAM {g.bram}, DSP {g.dsp}, {g.cycles} cycles{note})"
         )
         lines.append(f"  {g.name}_m_axi({', '.join(call)});")
+        if gi < len(pp.groups) - 1:
+            nxt = pp.groups[gi + 1]
+            wb, rb = traffic[gi]
+            cyc = transition_cycles(wb, rb)
+            lines.append(
+                f"  // transition {g.name} -> {nxt.name}: write {wb} B "
+                f"overlaps read {rb} B — {cyc} cycles modeled"
+            )
+            for v in g.spill_out:
+                b = math.ceil(src.values[v].total_bits / 8)
+                lines.append(f"  dma_write_async(spill_{v}, {b});")
+            for v in nxt.spill_in:
+                b = math.ceil(src.values[v].total_bits / 8)
+                lines.append(f"  dma_read_async(spill_{v}, {b});")
+            lines.append("  dma_join();")
     lines.append("}")
     lines.append("")
     return "\n".join(lines)

@@ -37,6 +37,13 @@ from .streaming import NodePlan, StreamingPlan
 BRAM18K_BITS = 18_432          # one RAM18K block stores up to 18,432 bits
 KV260_BRAM18K = 288
 KV260_DSP = 1_248
+#: Zynq UltraScale+ ZU3EG (Ultra96-class edge part): BRAM-richer but far
+#: DSP-poorer than the KV260's K26 — 216 BRAM36 (= 432 RAM18K) vs 360
+#: DSP48E2.  The multi-target sweep's second budget point: designs that
+#: partition on the KV260 for BRAM often fit the ZU3EG whole but unroll
+#: ~3.5× narrower.
+ZU3EG_BRAM18K = 432
+ZU3EG_DSP = 360
 #: arrays at or below this size are mapped to LUTRAM by Vitis, not BRAM
 LUTRAM_THRESHOLD_BITS = 1_024
 #: DRAM bandwidth in bytes per fabric cycle (KV260 DDR4 ≈ 19 GB/s at a
@@ -44,6 +51,29 @@ LUTRAM_THRESHOLD_BITS = 1_024
 #: streaming-access figure).  Charged for layer-group spills *and* for
 #: partial weight streaming's tile traffic.
 DRAM_BYTES_PER_CYCLE = 16
+#: one AXI DMA burst: the granularity at which a group-boundary fill can
+#: start trailing the previous group's spill write through DRAM.
+DRAM_BURST_BYTES = 4_096
+
+
+def transition_cycles(write_bytes: int, read_bytes: int) -> int:
+    """Cycles for one layer-group boundary's DRAM traffic, with the
+    spill write of group *k* overlapped against the fill of group *k+1*.
+
+    The successor's read streams one DMA burst behind the predecessor's
+    write, so the bus time is ``max(write, read)`` plus the *exposed
+    tail* — the trailing burst the read cannot hide, capped by the
+    smaller transfer (a sub-burst boundary degenerates to the serial
+    sum, never worse than it).  A one-sided boundary (nothing to read
+    back, or nothing written) has no overlap partner and pays its own
+    transfer in full.
+    """
+    w = math.ceil(write_bytes / DRAM_BYTES_PER_CYCLE)
+    r = math.ceil(read_bytes / DRAM_BYTES_PER_CYCLE)
+    if w == 0 or r == 0:
+        return w + r
+    tail = math.ceil(DRAM_BURST_BYTES / DRAM_BYTES_PER_CYCLE)
+    return max(w, r) + min(tail, w, r)
 
 
 class ExecMode(str, enum.Enum):

@@ -114,10 +114,14 @@ class NodePlan:
 
     @property
     def weight_tileable_extent(self) -> int:
-        """Product of the const-input dims weight streaming can tile."""
-        return math.prod(
-            self.op.dim_extent(d) for d in self.weight_tile_dims
-        ) if self.weight_tile_dims else 1
+        """Extent of the *leading* weight-tile dim — the one axis every
+        backend splits (the emitter's ``WT`` loop divides exactly this
+        dim's trip; ``kernels/ops`` slices the const tensor along it),
+        so tile counts must divide it, not the product of all tileable
+        dims."""
+        if not self.weight_tile_dims:
+            return 1
+        return self.op.dim_extent(self.weight_tile_dims[0])
 
     def buffer_bits(self) -> int:
         return self.line_buffer_bits + self.window_buffer_bits

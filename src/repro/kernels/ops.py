@@ -21,6 +21,7 @@ groups through a value environment exactly as the emitted
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 from typing import Literal
@@ -146,8 +147,75 @@ def _split_conv_epilogue(op):
     return None, epi
 
 
-def _lower_node(op, dfg, env, interpret: bool):
-    """Execute one GenericOp with the kernel library (jit-traceable)."""
+def _weight_tile_axes(op, dfg):
+    """(const input name, const tensor axis, output tensor axis) for the
+    *leading* weight-tileable dim of a streamed-weight node — the axis
+    the DSE's ``weight_tiles`` splits the const buffer along (c_out for
+    an NHWC conv, n_out for a matmul; ``NodePlan.weight_tile_dims[0]``,
+    recomputed here from the maps).  ``None`` when no safe tile axis
+    exists (the untiled lowering is numerically identical either way)."""
+    info = classify_kernel(op)
+    window = set(info.classes.window)
+    cands = []  # (dim, input index, input name, const axis, output axis)
+    for i, name in enumerate(op.inputs):
+        if not dfg.values[name].is_constant:
+            continue
+        for pos, expr in enumerate(op.input_maps[i].results):
+            if not expr.is_single_dim():
+                continue
+            (d, _), = expr.terms
+            if not (op.is_parallel_dim(d) and d not in window):
+                continue
+            out_axis = next(
+                (
+                    q for q, oe in enumerate(op.output_map.results)
+                    if oe.is_single_dim() and oe.terms[0][0] == d
+                ),
+                None,
+            )
+            if out_axis is not None:
+                cands.append((d, i, name, pos, out_axis))
+    if not cands:
+        return None
+    d, i, name, pos, out_axis = min(cands)  # leading dim, like plan_node
+    # slicing one operand is only sound if no other input reads dim d
+    for j, other in enumerate(op.inputs):
+        if j == i:
+            continue
+        if any(d in expr.dims() for expr in op.input_maps[j].results):
+            return None
+    return name, pos, out_axis
+
+
+def _lower_node(op, dfg, env, interpret: bool, weight_tiles: int = 1):
+    """Execute one GenericOp with the kernel library (jit-traceable).
+
+    ``weight_tiles > 1`` honors the schedule's partial weight streaming:
+    the const operand is processed in output-channel tiles (the TPU
+    stand-in for the HLS kernel's double-buffered DRAM ``wtile`` loop)
+    and the partial results concatenated — bit-exact with the resident
+    lowering, but structurally the same tiled schedule the emitter
+    realizes.
+    """
+    if weight_tiles > 1:
+        tiled = _weight_tile_axes(op, dfg)
+        if tiled is not None:
+            cname, cax, oax = tiled
+            w = env[cname]
+            if w.shape[cax] % weight_tiles == 0:
+                bare = dataclasses.replace(op, epilogue=())
+                step = w.shape[cax] // weight_tiles
+                parts = [
+                    _lower_node(
+                        bare, dfg,
+                        {**env, cname: jax.lax.slice_in_dim(
+                            w, t * step, (t + 1) * step, axis=cax)},
+                        interpret,
+                    )
+                    for t in range(weight_tiles)
+                ]
+                out = jnp.concatenate(parts, axis=oax)
+                return _ref.apply_epilogue(out, op.epilogue, env)
     info = classify_kernel(op)
     if info.kernel_class == KernelClass.SLIDING_WINDOW:
         if op.payload == PayloadKind.MAC:
@@ -195,6 +263,71 @@ def _lower_node(op, dfg, env, interpret: bool):
     return _ref.apply_epilogue(out, op.epilogue, env)
 
 
+#: executables per group *structure* — repeated ``run_compiled`` calls
+#: (batched inference, benchmark sweeps) reuse the traced/jitted unit
+#: instead of re-jitting per call (ROADMAP "lower_group jits per call").
+_EXEC_CACHE: dict[tuple, "object"] = {}
+_EXEC_CACHE_CAP = 128
+#: observability for tests and benchmarks
+exec_cache_stats = {"hits": 0, "misses": 0}
+
+
+def _group_signature(group, interpret: bool) -> tuple:
+    """Hashable identity of everything the lowered executable depends
+    on: node structure (maps, iterators, payloads, epilogues), value
+    shapes/bits/names (env keys!), the group's streamed-weight tiling,
+    and the interpret flag.  Constants arrive through ``env`` at call
+    time, so they are deliberately *not* part of the key."""
+    dfg = group.dfg
+    sig: list = [interpret, tuple(dfg.graph_inputs), tuple(dfg.graph_outputs)]
+    for op in dfg.topo_order():
+        sig.append((
+            op.name,
+            op.inputs,
+            op.output,
+            tuple(str(m) for m in op.indexing_maps),
+            tuple(t.value for t in op.iterator_types),
+            op.dim_sizes,
+            op.payload.value,
+            op.elem_bits,
+            tuple(
+                (e.kind.value, e.operand, tuple(e.window) if e.window else ())
+                for e in op.epilogue
+            ),
+            group.dse.weight_tiles.get(op.name, 1),
+            tuple(
+                (v, dfg.values[v].shape, dfg.values[v].elem_bits,
+                 dfg.values[v].is_constant)
+                for v in op.inputs + (op.output,)
+            ),
+        ))
+    return tuple(sig)
+
+
+def _build_group_fn(group, interpret: bool, jit: bool):
+    """The uncached lowering — separable so tests can probe compile
+    counts (the cache satellite of ISSUE 3)."""
+    dfg = group.dfg
+    order = dfg.topo_order()
+    tiles = dict(group.dse.weight_tiles)
+    needed = set(dfg.graph_inputs) | {
+        v for v, val in dfg.values.items() if val.is_constant
+    }
+
+    def run(env):
+        env = dict(env)
+        for op in order:
+            env[op.output] = _lower_node(
+                op, dfg, env, interpret, weight_tiles=tiles.get(op.name, 1)
+            )
+        return {v: env[v] for v in dfg.graph_outputs}
+
+    if not jit:
+        return run
+    jitted = jax.jit(run)
+    return lambda env: jitted({k: v for k, v in env.items() if k in needed})
+
+
 def lower_group(group, *, interpret: bool | None = None, jit: bool = True):
     """Lower one :class:`~repro.core.compile_driver.GroupSchedule` to a
     fused executable: ``fn(env) -> {output name: array}``.
@@ -203,25 +336,25 @@ def lower_group(group, *, interpret: bool | None = None, jit: bool = True):
     and constants.  All nodes trace into one jit unit — the TPU analogue
     of the group's single DATAFLOW kernel: intermediates stay in
     VMEM/registers, epilogues (activations, constant binops, fused
-    pools) ride the producing kernel.
+    pools) ride the producing kernel; weight-streamed nodes run the
+    tiled const-buffer schedule.  Executables are cached per group
+    signature (+ interpret flag), so recompiling or re-running the same
+    design never re-jits.
     """
     interpret = _auto_interpret(interpret)
-    dfg = group.dfg
-    order = dfg.topo_order()
-    needed = set(dfg.graph_inputs) | {
-        v for v, val in dfg.values.items() if val.is_constant
-    }
-
-    def run(env):
-        env = dict(env)
-        for op in order:
-            env[op.output] = _lower_node(op, dfg, env, interpret)
-        return {v: env[v] for v in dfg.graph_outputs}
-
     if not jit:
-        return run
-    jitted = jax.jit(run)
-    return lambda env: jitted({k: v for k, v in env.items() if k in needed})
+        return _build_group_fn(group, interpret, jit=False)
+    key = _group_signature(group, interpret)
+    fn = _EXEC_CACHE.get(key)
+    if fn is None:
+        exec_cache_stats["misses"] += 1
+        fn = _build_group_fn(group, interpret, jit=True)
+        if len(_EXEC_CACHE) >= _EXEC_CACHE_CAP:  # bounded: drop oldest
+            _EXEC_CACHE.pop(next(iter(_EXEC_CACHE)))
+        _EXEC_CACHE[key] = fn
+    else:
+        exec_cache_stats["hits"] += 1
+    return fn
 
 
 def run_compiled(design, env, *, interpret: bool | None = None,

@@ -9,9 +9,10 @@ The compiler-infrastructure layer between the frontends
                      ┌─────────────────────────────────────────┘
                      ▼
             whole-graph streaming + ILP
-                     │ (over budget?)
-                     └→ cycle-balanced layer-group partition
-                        (+ single-node weight-streaming rescue)
+                     │ (over budget resident?)
+                     └→ cost-aware layer-group partition
+                        (streamed weight tiles priced against
+                         overlapped spill boundaries, any slice)
                               │
                               ▼
                      CompiledDesign — consumed by emit_hls.emit_design

@@ -1,4 +1,4 @@
-"""Resource-aware, cycle-balanced layer-group partitioning.
+"""Resource-aware, cost-aware layer-group partitioning.
 
 When :func:`~repro.core.dse.solve_ilp` proves the whole-graph streaming
 plan exceeds the BRAM/DSP budgets even at unroll=1, we split the DFG at
@@ -12,18 +12,24 @@ Two strategies over the (canonicalized, fused) topological order:
 
 * ``"balanced"`` (default) — exact min-max search: a memoized DP over
   the cut positions that minimizes the *slowest group's* modeled cycles
-  subject to per-group feasibility.  Feasibility is monotone in group
-  extent (a superset group needs at least its subset's resources), so
-  each start position probes forward only until the first infeasible
-  end — PR 1's suffix-bound fast infeasibility keeps every probe cheap.
+  subject to per-group feasibility, tie-breaking on the **total host
+  schedule** (group cycles plus overlapped boundary DMA, see
+  :func:`~repro.core.resource_model.transition_cycles`) and then on
+  fewer groups.  Since ISSUE 3 every candidate slice — not just single
+  nodes — may be planned with **partial weight streaming** when its
+  resident-weight plan is over budget, so the DP prices a group
+  boundary (spill round-trip) against streamed weight tiles (DRAM tile
+  traffic) and keeps whichever is modeled cheaper.
 * ``"greedy"`` — the PR 1 prefix cut (grow until the budget breaks),
   optimal in group *count* but free to leave one group far slower than
-  the rest; kept for regression comparison.
+  the rest; kept for regression comparison with its historical
+  semantics (weight streaming only as the single-node rescue).
 
-Either way a single node that exceeds the budgets on its own is retried
-with **partial weight streaming** (``solve_ilp(weight_streaming=True)``)
-before :class:`PartitionError` is raised — the rescue that makes
-weight-dominated convs schedulable at the cost of DRAM tile traffic.
+Feasibility is monotone in group extent (a superset group needs at
+least its subset's line buffers, FIFOs, and — streamed or not — weight
+storage), so each start position probes forward only until the first
+infeasible end; PR 1's suffix-bound fast infeasibility keeps every
+probe cheap.
 
 The result is the schedule IR of :mod:`repro.core.compile_driver`:
 ``partition_layer_groups`` returns a :class:`CompiledDesign` (exported
@@ -34,13 +40,19 @@ from __future__ import annotations
 
 from typing import Optional
 
-from repro.core.compile_driver import CompiledDesign, GroupSchedule, SpillBuffer
+from repro.core.compile_driver import (
+    CompiledDesign,
+    GroupSchedule,
+    SpillBuffer,
+    boundary_bytes,
+)
 from repro.core.dse import solve_ilp
 from repro.core.ir import DFG
 from repro.core.resource_model import (
     FpgaResourceModel,
     KV260_BRAM18K,
     KV260_DSP,
+    transition_cycles,
 )
 from repro.core.streaming import plan_streams
 
@@ -55,7 +67,14 @@ class PartitionError(ValueError):
 
 
 class _GroupPlanner:
-    """Plans (and caches) contiguous slices ``order[i:j]`` as groups."""
+    """Plans (and caches) contiguous slices ``order[i:j]`` as groups.
+
+    Every slice is planned resident-weights first; if that is over
+    budget the slice is re-solved with ``weight_streaming=True`` — the
+    first-class streaming choice the balanced DP prices against a cut.
+    (The streamed candidate set is a superset of the resident one, so a
+    slice that fits resident never silently picks up weight tiles.)
+    """
 
     def __init__(self, dfg: DFG, *, d_total: int, b_total: int,
                  model: Optional[FpgaResourceModel], max_unroll: int) -> None:
@@ -65,30 +84,43 @@ class _GroupPlanner:
         self.b_total = b_total
         self.model = model
         self.max_unroll = max_unroll
+        self._resident: dict[tuple[int, int], tuple] = {}
         self._cache: dict[tuple[int, int], GroupSchedule] = {}
 
-    def group(self, i: int, j: int, index: int = 0) -> GroupSchedule:
-        """Plan ``order[i:j]`` (cached; ``index`` only names the group)."""
+    def _solve(self, plan, *, weight_streaming: bool):
+        return solve_ilp(
+            plan, d_total=self.d_total, b_total=self.b_total,
+            model=self.model, max_unroll=self.max_unroll,
+            weight_streaming=weight_streaming,
+        )
+
+    def _resident_plan(self, i: int, j: int):
+        """(subgraph, streaming plan, resident-weights DSE) for
+        ``order[i:j]`` — cached separately from :meth:`group` so pure
+        resident-feasibility probes (the greedy strategy, the
+        whole-graph fast path) never pay the streamed re-solve."""
+        key = (i, j)
+        hit = self._resident.get(key)
+        if hit is None:
+            names = self.order[i:j]
+            sub = self.dfg.subgraph(names, name=f"{self.dfg.name}_g0")
+            plan = plan_streams(sub)
+            hit = (sub, plan, self._solve(plan, weight_streaming=False))
+            self._resident[key] = hit
+        return hit
+
+    def group(self, i: int, j: int) -> GroupSchedule:
+        """Plan ``order[i:j]``: resident if it fits, else re-solved with
+        partial weight streaming (double-buffered DRAM tiles) — any
+        slice length, not the PR 2 single-node rescue.  Cached."""
         key = (i, j)
         g = self._cache.get(key)
         if g is None:
-            names = self.order[i:j]
-            sub = self.dfg.subgraph(names, name=f"{self.dfg.name}_g{index}")
-            plan = plan_streams(sub)
-            dse = solve_ilp(
-                plan, d_total=self.d_total, b_total=self.b_total,
-                model=self.model, max_unroll=self.max_unroll,
-            )
-            if not dse.feasible and j - i == 1:
-                # last resort for a node no cut can shrink: stream its
-                # weights from DRAM in double-buffered tiles
-                rescued = solve_ilp(
-                    plan, d_total=self.d_total, b_total=self.b_total,
-                    model=self.model, max_unroll=self.max_unroll,
-                    weight_streaming=True,
-                )
-                if rescued.feasible:
-                    dse = rescued
+            sub, plan, dse = self._resident_plan(i, j)
+            if not dse.feasible:
+                streamed = self._solve(plan, weight_streaming=True)
+                if streamed.feasible:
+                    dse = streamed
             spill_in = [v for v in sub.graph_inputs
                         if v not in self.dfg.graph_inputs]
             spill_out = [v for v in sub.graph_outputs
@@ -108,28 +140,67 @@ class _GroupPlanner:
             self._cache[(i, j)] = g
         return g
 
-    def max_feasible_end(self, i: int) -> int:
-        """Largest ``j`` with ``order[i:j]`` feasible (monotone probe).
+    def resident_feasible(self, i: int, j: int) -> bool:
+        """``order[i:j]`` fits with all weights on-chip (no tiles)."""
+        return self._resident_plan(i, j)[2].feasible
 
-        Raises :class:`PartitionError` when even ``order[i:i+1]`` (with
-        the weight-streaming rescue) cannot fit.
-        """
+    def transition(self, left: GroupSchedule, right: GroupSchedule) -> int:
+        """Overlapped boundary DMA between two adjacent groups — the
+        same ``boundary_bytes`` the compiled design reports."""
+        return transition_cycles(*boundary_bytes(self.dfg, left, right))
+
+    def _check_first(self, i: int) -> None:
         if not self.group(i, i + 1).dse.feasible:
             raise PartitionError(
                 f"{self.dfg.name}: node {self.order[i]} alone exceeds the "
-                f"budgets (DSP={self.d_total}, BRAM={self.b_total}) — "
-                "partitioning cannot help"
+                f"budgets (DSP={self.d_total}, BRAM={self.b_total}) even "
+                "with streamed weights — partitioning cannot help"
             )
+
+    def max_feasible_end(self, i: int) -> int:
+        """Largest ``j`` with ``order[i:j]`` feasible — resident *or*
+        weight-streamed (monotone probe).
+
+        Raises :class:`PartitionError` when even ``order[i:i+1]`` cannot
+        fit with streamed weights.
+        """
+        self._check_first(i)
         j = i + 1
         while j < len(self.order) and self.group(i, j + 1).dse.feasible:
             j += 1
         return j
 
+    def max_resident_end(self, i: int) -> int:
+        """The PR 1/PR 2 greedy probe: grow while the slice fits with
+        resident weights; a lone infeasible node falls back to the
+        streamed single-node group (the historical rescue)."""
+        self._check_first(i)
+        j = i + 1
+        while j < len(self.order) and self.resident_feasible(i, j + 1):
+            j += 1
+        return j
+
 
 def _balanced_cuts(planner: _GroupPlanner) -> list[tuple[int, int]]:
-    """Min-max DP over cut positions: minimize the slowest group's
-    modeled cycles, tie-breaking on fewer groups then lower total."""
+    """Cost-aware min-max DP over cut positions.
+
+    Primary objective: minimize the slowest group's modeled cycles —
+    exact (every greedy cut is in the candidate space, so the balanced
+    result is never worse than greedy on the max, a property pinned by
+    tests/test_partition_properties.py).  Tie-breaks: the total host
+    schedule (group cycles + overlapped boundary DMA — this is where a
+    spill round-trip is traded against a streamed slice's weight-tile
+    traffic), then fewer groups.
+
+    The tie-break total is exact for linear chains (every boundary's
+    traffic depends only on the cut position).  For diamonds the bridge
+    added when combining ``group(i, j)`` with the memoized suffix uses
+    the suffix's already-chosen first group, whose ``spill_in`` can vary
+    with its extent — an exact total there would need two-dimensional
+    DP state; we accept the approximation on the secondary key only.
+    """
     n = len(planner.order)
+    # memo[i] = ((max_cycles, total_cycles, n_groups), cuts-for-suffix)
     memo: dict[int, tuple[tuple[int, int, int], list[tuple[int, int]]]] = {
         n: ((0, 0, 0), [])
     }
@@ -142,9 +213,17 @@ def _balanced_cuts(planner: _GroupPlanner) -> list[tuple[int, int]]:
         best_key: tuple[int, int, int] | None = None
         best_cuts: list[tuple[int, int]] = []
         for j in range(i + 1, end + 1):
-            cyc = planner.group(i, j).cycles
-            (rest_max, rest_groups, rest_total), rest_cuts = best(j)
-            key = (max(cyc, rest_max), 1 + rest_groups, cyc + rest_total)
+            g = planner.group(i, j)
+            (rest_max, rest_total, rest_groups), rest_cuts = best(j)
+            bridge = (
+                planner.transition(g, planner.group(*rest_cuts[0]))
+                if rest_cuts else 0
+            )
+            key = (
+                max(g.cycles, rest_max),
+                g.cycles + bridge + rest_total,
+                1 + rest_groups,
+            )
             if best_key is None or key < best_key:
                 best_key = key
                 best_cuts = [(i, j)] + rest_cuts
@@ -161,7 +240,7 @@ def _greedy_cuts(planner: _GroupPlanner) -> list[tuple[int, int]]:
     i = 0
     n = len(planner.order)
     while i < n:
-        j = planner.max_feasible_end(i)
+        j = planner.max_resident_end(i)
         cuts.append((i, j))
         i = j
     return cuts
@@ -176,8 +255,10 @@ def partition_layer_groups(
     max_unroll: int = 4096,
     strategy: str = "balanced",
 ) -> CompiledDesign:
-    """Whole graph if it fits; cycle-balanced topological layer groups
-    (or the greedy PR 1 cut, ``strategy="greedy"``) if not."""
+    """Whole graph if it fits resident; otherwise cost-aware balanced
+    topological layer groups (or the greedy PR 1 cut,
+    ``strategy="greedy"``) — where the balanced DP may keep a slice
+    whole with streamed weight tiles instead of cutting it."""
     if strategy not in ("balanced", "greedy"):
         raise ValueError(f"unknown partition strategy {strategy!r}")
     planner = _GroupPlanner(
@@ -185,8 +266,9 @@ def partition_layer_groups(
         max_unroll=max_unroll,
     )
     n = len(planner.order)
-    whole = planner.group(0, n)
-    if whole.dse.feasible:
+    if planner.resident_feasible(0, n):
+        # fits whole with weights on-chip: never cut a feasible graph
+        # (the ROADMAP reconfiguration-cost item gates that trade)
         return CompiledDesign(dfg, [planner.renamed(0, n, 0)],
                               d_total, b_total, whole_graph_feasible=True)
 

@@ -9,6 +9,41 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+GOLDEN_DIR = os.path.join(REPO, "tests", "golden")
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="rewrite tests/golden/ from the current emission instead of "
+             "diffing against it (one-command golden refresh)",
+    )
+
+
+@pytest.fixture(scope="session")
+def golden_check(request):
+    """Compare emitted text against ``tests/golden/<name>``; with
+    ``pytest --update-golden`` the golden file is (re)written instead."""
+    update = request.config.getoption("--update-golden")
+
+    def check(name: str, content: str):
+        path = os.path.join(GOLDEN_DIR, name)
+        if update:
+            with open(path, "w") as f:
+                f.write(content)
+            return
+        assert os.path.exists(path), (
+            f"missing golden {name} — run `pytest --update-golden` to "
+            "create it"
+        )
+        with open(path) as f:
+            expected = f.read()
+        assert content == expected, (
+            f"{name} drifted from golden — if intentional, refresh with "
+            "`pytest --update-golden`"
+        )
+
+    return check
 
 
 def run_subprocess(code: str, *, devices: int = 0, env: dict | None = None,

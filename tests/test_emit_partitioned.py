@@ -28,14 +28,23 @@ class TestGolden:
             "host_schedule.cpp",
         ],
     )
-    def test_matches_golden(self, emitted, fname):
+    def test_matches_golden(self, emitted, fname, golden_check):
         _, files = emitted
-        path = os.path.join(GOLDEN_DIR, f"cascade16_{fname}")
-        with open(path) as f:
-            assert files[fname] == f.read(), (
-                f"{fname} drifted from golden — if intentional, regenerate "
-                f"tests/golden/ (see this test's fixture for the recipe)"
-            )
+        golden_check(f"cascade16_{fname}", files[fname])
+
+    def test_zu3eg_emission_golden(self, golden_check):
+        """The ZU3EG budget flips fat_conv from weight-streamed (KV260)
+        to resident weights: the emitted kernel must carry no wtile
+        ping/pong loop and no m_axi weight pointer."""
+        from repro.core.compile_driver import ZU3EG
+        from repro.core.compile_driver import compile as compile_design
+
+        d = compile_design(cnn_graphs.fat_conv(), ZU3EG)
+        assert not d.weight_streamed and len(d.groups) == 1
+        files = emit_partitioned(d)
+        cpp = files["fat_conv_16_g0.cpp"]
+        assert "wtile" not in cpp and "dram_w0" not in cpp
+        golden_check("fat_conv_16_zu3eg_g0.cpp", cpp)
 
 
 class TestStructure:
