@@ -50,10 +50,11 @@ def passes_section() -> bool:
 
 
 def bench_smoke_json(path: str = "BENCH_smoke.json") -> bool:
-    """Compile every suite graph through the unified driver — once per
+    """Compile every suite graph through the public API — once per
     device preset (KV260, ZU3EG) — and write the perf-trajectory
     snapshot (cycles + BRAM per graph per target) that CI archives and
-    diffs across runs (``scripts/smoke_diff.py``)."""
+    diffs across runs (``scripts/smoke_diff.py``).  Rows come straight
+    from ``CompiledArtifact.report()``."""
     import json
 
     from benchmarks.paper_tables import compile_cached, sweep_suite
@@ -67,16 +68,17 @@ def bench_smoke_json(path: str = "BENCH_smoke.json") -> bool:
     for name, make in sweep_suite().items():
         data[name] = {}
         for tname, target in TARGETS.items():
-            d = compile_cached(name, make, target)
+            art = compile_cached(name, make, target)
+            rep = art.report()
             data[name][tname] = {
-                "total_cycles": d.total_cycles,
-                "max_group_cycles": d.max_group_cycles,
-                "max_bram": d.max_bram,
-                "max_dsp": d.max_dsp,
-                "groups": len(d.groups),
-                "spill_bytes": sum(s.bytes for s in d.spills()),
-                "weight_streamed": d.weight_streamed,
-                "feasible": d.feasible,
+                "total_cycles": rep.total_cycles,
+                "max_group_cycles": rep.max_group_cycles,
+                "max_bram": rep.max_bram,
+                "max_dsp": rep.max_dsp,
+                "groups": len(rep.groups),
+                "spill_bytes": rep.spill_bytes,
+                "weight_streamed": art.design.weight_streamed,
+                "feasible": rep.feasible,
             }
             r = data[name][tname]
             print(f"{name},{tname},{r['total_cycles']},"

@@ -1,78 +1,78 @@
-"""Quickstart: the whole MING pipeline on one CNN kernel, end to end.
+"""Quickstart: the public API end to end — build → compile → report →
+emit → run.
 
-  1. Build the paper's Conv+ReLU kernel as a linalg-style DFG.
-  2. Classify every node (Alg. 1 + 2): sliding-window vs pure-parallel.
-  3. Streaming transform: streams + line buffers (never materialize the
-     intermediate tensor — contribution C1).
-  4. ILP DSE under the Kria KV260 budgets (Eq. 1).
-  5. Emit Vitis-style HLS C++ with the five pragma families.
-  6. TPU path: run the line-buffer streaming conv as a Pallas kernel
-     (interpret mode on CPU) and check it against the oracle.
+One front door (``repro.api``, re-exported at the package top level):
+
+  1. Declare a CNN with the layer-builder frontend (``Sequential`` /
+     ``Conv2D`` / ``ReLU`` / ``MaxPool`` …) — shapes are inferred and
+     validated, no hand-assembled ``Value``/GenericOp bookkeeping.
+  2. Compile it under one validated ``CompileOptions`` bundle (device
+     preset, partition strategy, pass selection, weight-streaming
+     policy) — pass pipeline → streaming transform → ILP DSE →
+     cycle-balanced layer groups, all behind ``compile_graph``.
+  3. Read the ``CompiledArtifact.report()`` table
+     (cycles / BRAM / DSP / spills per group).
+  4. ``emit_hls`` the Vitis-style C++ kernels + host schedule.
+  5. ``run`` the same schedule on the Pallas path (interpret mode on
+     CPU) and check it against the dense oracle.
+  6. ``save``/``load`` the artifact — the benchmark-cache hook.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
+import os
+import tempfile
+
 import numpy as np
 
-from repro.core import (
-    KV260_BRAM18K,
-    KV260_DSP,
-    classify_kernel,
-    cnn_graphs,
-    plan_streams,
-    solve_ilp,
-    solve_materialized,
-)
-from repro.core.emit_hls import emit_cpp
-from repro.kernels import ops, ref
+import repro
 
 
 def main() -> None:
-    # 1-2. build + classify ---------------------------------------------------
-    dfg = cnn_graphs.conv_relu(32)
-    print(f"DFG {dfg.name!r}: {len(dfg.nodes)} nodes, "
+    # 1. build ---------------------------------------------------------------
+    net = repro.Sequential(
+        [
+            repro.Conv2D(16),
+            repro.ReLU(),
+            repro.Residual([repro.Conv2D(16), repro.ReLU(), repro.Conv2D(16)]),
+            repro.ReLU(),
+            repro.AvgPool(2),
+        ],
+        input_shape=(1, 32, 32, 16),
+        name="quickstart_net",
+    )
+    dfg = net.build()
+    print(f"built {dfg.name!r}: {len(dfg.nodes)} nodes, "
           f"{len(dfg.intermediate_values())} intermediate tensor(s)")
-    for node in dfg.topo_order():
-        info = classify_kernel(node)
-        extra = (f" stride={info.stride} dilation={info.dilation}"
-                 if info.kernel_class.value == "sliding_window" else "")
-        print(f"  {node.name:8s} -> {info.kernel_class.value}{extra}")
 
-    # 3. streaming transform ---------------------------------------------------
-    plan = plan_streams(dfg)
-    conv = plan.nodes["conv0"]
-    print(f"\nstreaming plan: line buffer {conv.line_buffer_bits // 8} B "
-          f"(vs {dfg.values['conv0_out'].total_bits // 8} B materialized), "
-          f"{len(plan.streams)} streams, {len(plan.regions)} DATAFLOW region")
+    # 2. compile -------------------------------------------------------------
+    options = repro.CompileOptions(target="kv260", strategy="balanced")
+    art = repro.compile_graph(net, options)
 
-    # 4. DSE --------------------------------------------------------------------
-    ming = solve_ilp(plan, d_total=KV260_DSP, b_total=KV260_BRAM18K)
-    mat = solve_materialized(plan)
-    speed = mat.estimate.pipeline_cycles / ming.estimate.pipeline_cycles
-    print(f"\nDSE (KV260: {KV260_DSP} DSP, {KV260_BRAM18K} BRAM18K):")
-    print(f"  MING      : {ming.estimate.pipeline_cycles:>9} cycles, "
-          f"{ming.bram_used:>4} BRAM, {ming.dsp_used:>4} DSP "
-          f"(explored {ming.explored} states)")
-    print(f"  StreamHLS-like: {mat.estimate.pipeline_cycles:>9} cycles, "
-          f"{mat.estimate.bram:>4} BRAM, {mat.estimate.dsp:>4} DSP")
-    print(f"  -> {speed:.1f}x faster with "
-          f"{mat.estimate.bram / max(ming.bram_used, 1):.1f}x less BRAM")
+    # 3. report --------------------------------------------------------------
+    print("\nreport:")
+    print(art.report())
 
-    # 5. HLS emission -------------------------------------------------------------
-    cpp = emit_cpp(plan, ming)
-    print(f"\nemitted {len(cpp.splitlines())} lines of Vitis HLS C++; head:")
-    print("\n".join("  | " + l for l in cpp.splitlines()[:16]))
+    # 4. emit HLS ------------------------------------------------------------
+    outdir = tempfile.mkdtemp(prefix="quickstart_hls_")
+    for path in art.emit_hls(outdir):
+        print(f"emitted {path} ({os.path.getsize(path)} bytes)")
 
-    # 6. TPU Pallas path ------------------------------------------------------------
-    key = jax.random.key(0)
-    x = jax.random.randint(key, (1, 32, 32, 3), -8, 8, jnp.int8)
-    w = jax.random.randint(jax.random.key(1), (3, 3, 3, 16), -4, 4, jnp.int8)
-    out = ops.conv2d_stream(x, w, fuse_relu=True)      # line-buffer kernel
-    exp = ref.conv2d(x, w, fuse_relu=True)             # oracle
-    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
-    print(f"\nPallas line-buffer conv (interpret): {out.shape} int32 — "
-          "matches oracle exactly")
+    # 5. run (Pallas interpret) + oracle check -------------------------------
+    from repro.passes import interp
+
+    env = interp.random_env(art.design.original, seed=0)
+    want = interp.graph_outputs(art.design.original, env)
+    got = art.run({"x": env["x"]}, params=env, interpret=True, seed=0)
+    (want_arr,) = want.values()
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want_arr))
+    print(f"\nran OK: output {tuple(got.shape)} {got.dtype} — "
+          "bit-exact with the DFG interpreter")
+
+    # 6. save / load ---------------------------------------------------------
+    saved = art.save(os.path.join(outdir, "quickstart.artifact"))
+    again = repro.CompiledArtifact.load(saved)
+    assert again.report() == art.report()
+    print(f"saved + reloaded {saved} — identical report")
 
 
 if __name__ == "__main__":

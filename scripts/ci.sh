@@ -20,6 +20,16 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 python -m pytest -q
+
+# public-API smoke: the CLI front door must compile + emit end to end
+# (exercises repro.api: builder suite -> CompileOptions -> artifact)
+CLI_OUT="$(mktemp -d)"
+python -m repro list > /dev/null
+python -m repro compile conv_relu_32 --target kv260 --emit "$CLI_OUT" --quiet
+test -s "$CLI_OUT/conv_relu_32_g0.cpp"
+test -s "$CLI_OUT/host_schedule.cpp"
+rm -rf "$CLI_OUT"
+
 if [ "$FULL" = 1 ]; then
   python -m benchmarks.run          # includes kernel interpret-mode checks
 else

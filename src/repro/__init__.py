@@ -1,0 +1,38 @@
+"""MING reproduction — top-level package.
+
+The public surface lives in :mod:`repro.api` (layer-builder frontend,
+``CompileOptions``, ``CompiledArtifact``) and is re-exported here
+lazily, so ``import repro`` stays free of heavy imports (jax loads only
+when a kernel path actually runs)::
+
+    import repro
+
+    net = repro.Sequential([repro.Conv2D(16), repro.ReLU()],
+                           input_shape=(1, 32, 32, 3), name="demo")
+    art = repro.compile_graph(net, repro.CompileOptions(target="kv260"))
+
+Subsystems keep their own namespaces: ``repro.core`` (IR, analysis,
+streaming, DSE, resource model, emit), ``repro.passes`` (rewrites +
+partitioner), ``repro.kernels`` (Pallas kernels + oracles).
+"""
+from __future__ import annotations
+
+def _api():
+    import importlib
+
+    return importlib.import_module("repro.api")
+
+
+def __getattr__(name: str):
+    # forward the public surface lazily (PEP 562); repro.api.__all__ is
+    # the single source of truth, so new api exports appear here too
+    if name == "api":
+        return _api()
+    api = _api()
+    if name in api.__all__:
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_api().__all__) | {"api"})

@@ -1,0 +1,113 @@
+"""``python -m repro`` — the command-line front door.
+
+Subcommands:
+
+* ``list``
+    Named graphs (the paper suite + showcases) and device targets.
+* ``compile <graph> [--target kv260] [--strategy balanced]
+  [--weight-streaming auto|off] [--max-unroll N] [--no-passes]
+  [--emit DIR] [--save FILE] [--run] [--quiet]``
+    Build the named graph through the declarative frontend, compile it
+    under one :class:`repro.api.CompileOptions`, print the
+    cycles/BRAM/DSP/spill report, and optionally emit the HLS C++
+    kernels, persist the artifact, or execute the Pallas path
+    (interpret mode) as a numeric smoke check.
+
+Exit status: 0 on success, 1 on an infeasible design or failed run,
+2 on bad arguments (argparse convention).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _cmd_list() -> int:
+    from repro import api
+
+    print("graphs:")
+    for name in sorted(api.suite()):
+        print(f"  {name}")
+    print("targets:")
+    for name, t in sorted(api.TARGETS.items()):
+        print(f"  {name}  (DSP={t.d_total}, BRAM18K={t.b_total})")
+    return 0
+
+
+def _cmd_compile(args: argparse.Namespace) -> int:
+    from repro import api
+
+    graphs = api.suite()
+    if args.graph not in graphs:
+        print(f"error: unknown graph {args.graph!r} — run "
+              "`python -m repro list`", file=sys.stderr)
+        return 2
+    options = api.CompileOptions(
+        target=args.target,
+        strategy=args.strategy,
+        weight_streaming=args.weight_streaming,
+        max_unroll=args.max_unroll,
+        passes=() if args.no_passes else None,
+    )
+    art = api.compile_graph(graphs[args.graph](), options)
+    if not args.quiet:
+        print(art.report())
+    if args.emit:
+        for path in art.emit_hls(args.emit):
+            print(f"emitted {path}")
+    if args.save:
+        print(f"saved {art.save(args.save)}")
+    if args.run:
+        out = art.run(interpret=True)
+        outs = out if isinstance(out, dict) else {"output": out}
+        for name, arr in outs.items():
+            print(f"ran OK: {name} shape {tuple(arr.shape)} dtype {arr.dtype}")
+    return 0 if art.feasible else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="MING reproduction CLI: build + compile + emit "
+                    "through the public API",
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    sub.add_parser("list", help="named graphs and device targets")
+    c = sub.add_parser("compile", help="compile a named graph")
+    c.add_argument("graph", help="suite graph name (see `list`)")
+    c.add_argument("--target", default="kv260",
+                   help="device preset (kv260 | zu3eg)")
+    c.add_argument("--strategy", default="balanced",
+                   choices=("balanced", "greedy"))
+    c.add_argument("--weight-streaming", default="auto",
+                   choices=("auto", "off"))
+    c.add_argument("--max-unroll", type=int, default=None)
+    c.add_argument("--no-passes", action="store_true",
+                   help="skip the rewrite pipeline")
+    c.add_argument("--emit", metavar="DIR",
+                   help="write HLS C++ kernels + host schedule here")
+    c.add_argument("--save", metavar="FILE",
+                   help="persist the CompiledArtifact (pickle)")
+    c.add_argument("--run", action="store_true",
+                   help="execute the Pallas path (interpret mode)")
+    c.add_argument("--quiet", action="store_true",
+                   help="suppress the report table")
+    args = ap.parse_args(argv)
+    if args.cmd == "list":
+        return _cmd_list()
+    from repro.passes import PartitionError
+
+    try:
+        return _cmd_compile(args)
+    except PartitionError as e:
+        # a valid command line whose design cannot be scheduled: exit 1
+        # (infeasible), not 2 (bad arguments)
+        print(f"infeasible: {e}", file=sys.stderr)
+        return 1
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,95 @@
+"""The public API — one front door for the whole reproduction.
+
+Three pieces (ISSUE 4):
+
+* the **layer-builder frontend** (:mod:`repro.api.builder`):
+  :class:`Sequential` / :class:`Graph` combinators with automatic shape
+  inference and validating errors, replacing hand-assembled DFGs;
+* :class:`CompileOptions` (re-exported from
+  :mod:`repro.core.compile_driver`): every compile knob in one frozen,
+  validated bundle;
+* :class:`CompiledArtifact` (:mod:`repro.api.artifact`): the handle a
+  compile returns — ``emit_hls`` / ``run`` / ``report`` / ``save`` /
+  ``load``.
+
+Typical session::
+
+    from repro.api import Sequential, Conv2D, ReLU, MaxPool, \
+        CompileOptions, compile_graph
+
+    net = Sequential([Conv2D(16), ReLU(), MaxPool(2)],
+                     input_shape=(1, 32, 32, 3), name="demo")
+    art = compile_graph(net, CompileOptions(target="kv260"))
+    print(art.report())
+    art.emit_hls("out/")
+    y = art.run(x)
+
+Everything here is also re-exported at the package top level
+(``import repro; repro.compile_graph(...)``), and drivable from the
+shell via ``python -m repro compile <graph> --target kv260 --emit out/``.
+"""
+from repro.core.compile_driver import (
+    KV260,
+    TARGETS,
+    ZU3EG,
+    CompiledDesign,
+    CompileOptions,
+    Target,
+    compile_design,
+)
+
+from .artifact import CompiledArtifact, GroupReport, Report, compile_graph
+from .builder import (
+    Activation,
+    AvgPool,
+    Conv2D,
+    Dense,
+    FrontendError,
+    Graph,
+    MaxPool,
+    ReLU,
+    Residual,
+    Sequential,
+    TensorRef,
+)
+
+
+def suite() -> dict:
+    """The named graphs the CLI / benchmarks can compile out of the box:
+    the paper suite plus the fusion and weight-streaming showcases —
+    every one built through the declarative frontend."""
+    from repro.core import cnn_graphs
+
+    out = dict(cnn_graphs.PAPER_SUITE)
+    out["conv_pool_32"] = lambda: cnn_graphs.conv_pool(32)
+    out["conv_avgpool_32"] = lambda: cnn_graphs.conv_avgpool(32)
+    out["fat_conv_16"] = cnn_graphs.fat_conv
+    out["fat_cascade_16"] = cnn_graphs.fat_cascade
+    return out
+
+
+__all__ = [
+    "KV260",
+    "TARGETS",
+    "ZU3EG",
+    "CompiledDesign",
+    "CompileOptions",
+    "Target",
+    "compile_design",
+    "CompiledArtifact",
+    "GroupReport",
+    "Report",
+    "compile_graph",
+    "Activation",
+    "AvgPool",
+    "Conv2D",
+    "Dense",
+    "FrontendError",
+    "Graph",
+    "MaxPool",
+    "ReLU",
+    "Residual",
+    "Sequential",
+    "TensorRef",
+    "suite",
+]

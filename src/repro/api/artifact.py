@@ -1,0 +1,311 @@
+"""`CompiledArtifact`: the session handle a compile returns.
+
+hls4ml's ``convert → compile → predict`` one-call surface is the
+adoption bar (PAPERS.md); this module is our equivalent.  One call —
+:func:`compile_graph` — takes anything graph-shaped (a built
+:class:`~repro.core.ir.DFG`, a :class:`~repro.api.builder.Sequential`,
+or an open :class:`~repro.api.builder.Graph`) plus one
+:class:`~repro.core.compile_driver.CompileOptions`, and hands back a
+:class:`CompiledArtifact` that can
+
+* ``emit_hls(outdir)``   — write the Vitis C++ kernels + host schedule,
+* ``run(x)``             — execute on the Pallas path (interpret mode
+                           on CPU), bit-exact with the DFG interpreter,
+* ``report()``           — the cycles/BRAM/DSP/spill table per group,
+* ``save()`` / ``load()``— persist the compiled design (the benchmark
+                           cache uses this to skip recompiles).
+
+The artifact holds plain schedule-IR state only (no jitted functions,
+no arrays), so ``save``/``load`` is a straight pickle and a loaded
+artifact re-lowers through the same executable cache as a fresh one.
+"""
+from __future__ import annotations
+
+import math
+import os
+import pickle
+from dataclasses import dataclass
+from typing import Mapping, Optional
+
+from repro.core.compile_driver import (
+    CompiledDesign,
+    CompileOptions,
+    compile_design,
+)
+from repro.core.ir import DFG
+
+#: bumped when the pickled payload's schema changes; load() rejects
+#: mismatches loudly instead of failing deep inside the schedule IR
+_SAVE_VERSION = 1
+
+
+@dataclass(frozen=True)
+class GroupReport:
+    """One row of :meth:`CompiledArtifact.report`."""
+
+    name: str
+    nodes: tuple[str, ...]
+    cycles: int
+    bram: int
+    dsp: int
+    spill_in_bytes: int
+    spill_out_bytes: int
+    weight_streamed: tuple[tuple[str, int], ...]
+
+
+@dataclass(frozen=True)
+class Report:
+    """Whole-design accounting, printable as a table."""
+
+    graph: str
+    target: str
+    feasible: bool
+    groups: tuple[GroupReport, ...]
+    total_cycles: int
+    max_group_cycles: int
+    spill_cycles: int
+    max_bram: int
+    b_total: int
+    max_dsp: int
+    d_total: int
+    spill_bytes: int
+
+    def __str__(self) -> str:
+        head = (
+            f"{self.graph} @ {self.target}: "
+            f"{self.total_cycles / 1e6:.3f} Mcycles total "
+            f"({self.spill_cycles} boundary DMA), "
+            f"peak BRAM {self.max_bram}/{self.b_total}, "
+            f"peak DSP {self.max_dsp}/{self.d_total}, "
+            f"{'feasible' if self.feasible else 'INFEASIBLE'}"
+        )
+        lines = [head, "group,nodes,cycles,bram,dsp,spill_in_B,spill_out_B,"
+                       "weight_streamed"]
+        for g in self.groups:
+            ws = ";".join(f"{n}/{t}" for n, t in g.weight_streamed) or "-"
+            lines.append(
+                f"{g.name},{'+'.join(g.nodes)},{g.cycles},{g.bram},{g.dsp},"
+                f"{g.spill_in_bytes},{g.spill_out_bytes},{ws}"
+            )
+        return "\n".join(lines)
+
+
+class CompiledArtifact:
+    """A compiled design plus every way to consume it."""
+
+    def __init__(self, design: CompiledDesign) -> None:
+        self.design = design
+
+    # -- identity ------------------------------------------------------------
+
+    @property
+    def source(self) -> DFG:
+        """The (post-pass-pipeline) graph the groups partition."""
+        return self.design.source
+
+    @property
+    def options(self) -> Optional[CompileOptions]:
+        return self.design.options
+
+    @property
+    def target_name(self) -> str:
+        return self.design.target.name if self.design.target else "custom"
+
+    @property
+    def feasible(self) -> bool:
+        return self.design.feasible
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"<CompiledArtifact {self.source.name!r} @ {self.target_name} "
+            f"groups={len(self.design.groups)} "
+            f"cycles={self.design.total_cycles}>"
+        )
+
+    # -- backends ------------------------------------------------------------
+
+    def emit_hls(self, outdir: str) -> list[str]:
+        """Write one Vitis-style C++ kernel per group plus the host
+        schedule into ``outdir``; returns the written paths."""
+        from repro.core.emit_hls import emit_design
+
+        os.makedirs(outdir, exist_ok=True)
+        paths = []
+        for fname, contents in emit_design(self.design).items():
+            path = os.path.join(outdir, fname)
+            with open(path, "w") as f:
+                f.write(contents)
+            paths.append(path)
+        return paths
+
+    def run(
+        self,
+        inputs=None,
+        params: Optional[Mapping] = None,
+        *,
+        interpret: Optional[bool] = None,
+        jit: bool = True,
+        seed: int = 0,
+    ):
+        """Execute the compiled schedule on the Pallas path.
+
+        ``inputs`` is a ``{name: array}`` mapping, or a bare array when
+        the graph has exactly one input.  Passing *some* inputs of a
+        multi-input graph is an error; passing *none* runs a smoke
+        execution on the deterministic small-integer initialization of
+        ``repro.passes.interp.random_env(seed)`` (the CLI ``--run``
+        path).  ``params`` binds constant values (weights/biases) —
+        nothing else; unbound constants fall back to the same random
+        init.  Returns the output array for single-output graphs, else
+        ``{name: array}``.
+        """
+        from repro.kernels import ops
+        from repro.passes import interp
+
+        src = self.design.source
+        if inputs is None:
+            inputs = {}
+        if not isinstance(inputs, Mapping):
+            if len(src.graph_inputs) != 1:
+                raise ValueError(
+                    f"{src.name} has {len(src.graph_inputs)} inputs "
+                    f"({src.graph_inputs}); pass a dict, not a bare array"
+                )
+            inputs = {src.graph_inputs[0]: inputs}
+        for k in inputs:
+            if k not in src.graph_inputs:
+                raise KeyError(
+                    f"{src.name}: {k!r} is not a graph input "
+                    f"({src.graph_inputs})"
+                )
+        if inputs and set(inputs) != set(src.graph_inputs):
+            # all-or-nothing: a partially bound multi-input graph would
+            # silently run on random data for the forgotten input
+            missing = sorted(set(src.graph_inputs) - set(inputs))
+            raise ValueError(
+                f"{src.name}: missing graph input(s) {missing} — bind "
+                "every input, or none for a random smoke run"
+            )
+        constants = sorted(
+            n for n, val in src.values.items() if val.is_constant
+        )
+        if params:
+            for k in params:
+                ok = k in src.graph_inputs or (
+                    k in src.values and src.values[k].is_constant
+                )
+                if not ok:
+                    raise KeyError(
+                        f"{src.name}: param {k!r} is not a constant (or "
+                        f"graph input) of the compiled graph — "
+                        f"constants: {constants} (note: the pass "
+                        "pipeline may have folded or renamed values of "
+                        "the original graph)"
+                    )
+        # random-fill only when something is actually unbound — a fully
+        # parameterized call (the hot path) never pays the RNG work
+        bound = set(inputs) | set(params or ())
+        needed = set(src.graph_inputs) | {
+            n for n, v in src.values.items() if v.is_constant
+        }
+        env: dict = {}
+        if needed - bound:
+            env.update(interp.random_env(src, seed=seed))
+        if params:
+            env.update(params)
+        env.update(inputs)
+        out = ops.run_compiled(self.design, env, interpret=interpret, jit=jit)
+        if len(src.graph_outputs) == 1:
+            return out[src.graph_outputs[0]]
+        return out
+
+    # -- reporting -----------------------------------------------------------
+
+    def report(self) -> Report:
+        d = self.design
+        src = d.source
+
+        def _bytes(names) -> int:
+            return sum(
+                math.ceil(src.values[v].total_bits / 8) for v in names
+            )
+
+        groups = tuple(
+            GroupReport(
+                name=g.name,
+                nodes=tuple(g.node_names),
+                cycles=g.cycles,
+                bram=g.bram,
+                dsp=g.dsp,
+                spill_in_bytes=_bytes(g.spill_in),
+                spill_out_bytes=_bytes(g.spill_out),
+                weight_streamed=tuple(sorted(g.weight_streamed.items())),
+            )
+            for g in d.groups
+        )
+        return Report(
+            graph=src.name,
+            target=self.target_name,
+            feasible=d.feasible,
+            groups=groups,
+            total_cycles=d.total_cycles,
+            max_group_cycles=d.max_group_cycles,
+            spill_cycles=d.spill_cycles,
+            max_bram=d.max_bram,
+            b_total=d.b_total,
+            max_dsp=d.max_dsp,
+            d_total=d.d_total,
+            spill_bytes=sum(s.bytes for s in d.spills()),
+        )
+
+    # -- persistence (the benchmark cache) -----------------------------------
+
+    def save(self, path: str) -> str:
+        """Pickle the compiled design (schedule IR only — cheap)."""
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(path, "wb") as f:
+            pickle.dump({"version": _SAVE_VERSION, "design": self.design}, f)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "CompiledArtifact":
+        with open(path, "rb") as f:
+            payload = pickle.load(f)
+        if not isinstance(payload, dict) or "design" not in payload:
+            raise ValueError(f"{path}: not a CompiledArtifact save file")
+        if payload.get("version") != _SAVE_VERSION:
+            raise ValueError(
+                f"{path}: save version {payload.get('version')} != "
+                f"{_SAVE_VERSION} — recompile instead of loading"
+            )
+        return cls(payload["design"])
+
+
+def compile_graph(
+    graph,
+    options: Optional[CompileOptions] = None,
+    **option_kwargs,
+) -> CompiledArtifact:
+    """The front door: graph (DFG | Sequential | Graph builder) +
+    options → :class:`CompiledArtifact`.
+
+    ``option_kwargs`` are sugar for ``CompileOptions(**option_kwargs)``
+    (``compile_graph(net, target="zu3eg")``); mixing them with an
+    explicit ``options`` bundle is an error.
+    """
+    if options is not None and option_kwargs:
+        raise ValueError(
+            "pass either options=CompileOptions(...) or keyword knobs, "
+            "not both"
+        )
+    if options is None:
+        options = CompileOptions(**option_kwargs)
+    dfg = graph.build() if hasattr(graph, "build") else graph
+    if not isinstance(dfg, DFG):
+        raise TypeError(
+            f"compile_graph needs a DFG or a builder with .build(), got "
+            f"{type(graph).__name__}"
+        )
+    return CompiledArtifact(compile_design(dfg, options=options))

@@ -17,11 +17,14 @@ from .analysis import (
 )
 from .compile_driver import (
     KV260,
+    TARGETS,
+    ZU3EG,
     CompiledDesign,
+    CompileOptions,
     GroupSchedule,
     Target,
+    compile_design,
 )
-from .compile_driver import compile as compile_design
 from .dse import (
     DseResult,
     divisors,

@@ -8,136 +8,85 @@ Five kernels, matching Table II rows:
 * ``linear()``            — 512×128 @ 128×256
 * ``feed_forward()``      — 512×128 @ 128×256 → ReLU → @ 256×128
 
+plus the beyond-paper showcases (``deep_cascade``, ``conv_pool``,
+``conv_avgpool``, ``fat_conv``, ``fat_cascade``) the partitioner,
+fusion, and weight-streaming work was grown on.
+
 The paper does not publish channel counts; we fix C_in=3→C_out=16, K=3,
 'same' padding — chosen so the *Vanilla* BRAM footprint reproduces the
 paper's Table II values (19 blocks @32², ~707 @224²; see
 benchmarks/paper_tables.py for the calibration table).  All tensors are
 int8 (post-training quantization, Sec. V-A).
+
+Since ISSUE 4 every constructor is a thin wrapper over the declarative
+layer-builder frontend (:mod:`repro.api.builder`) — the hand-assembled
+``Value``/``make_*_op`` bodies are gone, and
+``tests/test_frontend.py`` pins that the builder output is
+node-for-node identical to the historical hand-built graphs.
 """
 from __future__ import annotations
 
-from .ir import (
-    DFG,
-    GenericOp,
-    PayloadKind,
-    Value,
-    make_conv2d_op,
-    make_elementwise_op,
-    make_matmul_op,
-    make_pool2d_op,
+from repro.api.builder import (
+    AvgPool,
+    Conv2D,
+    Dense,
+    MaxPool,
+    ReLU,
+    Residual,
+    Sequential,
 )
+from .ir import DFG
 
 INT8 = 8
 
 
-def _conv(
-    dfg: DFG,
-    idx: int,
-    in_name: str,
-    n: int,
-    h: int,
-    w: int,
-    c_in: int,
-    c_out: int,
-    k: int = 3,
-) -> str:
-    wname = f"w{idx}"
-    oname = f"conv{idx}_out"
-    dfg.add_value(Value(wname, (k, k, c_in, c_out), INT8, is_constant=True))
-    dfg.add_value(Value(oname, (n, h, w, c_out), INT8))
-    dfg.add_node(
-        make_conv2d_op(
-            f"conv{idx}", in_name, wname, oname,
-            n=n, h_out=h, w_out=w, c_out=c_out, kh=k, kw=k, c_in=c_in,
-        )
-    )
-    return oname
-
-
-def _relu(dfg: DFG, idx: int, in_name: str, shape: tuple[int, ...]) -> str:
-    oname = f"relu{idx}_out"
-    dfg.add_value(Value(oname, shape, INT8))
-    dfg.add_node(
-        make_elementwise_op(f"relu{idx}", [in_name], oname, shape, PayloadKind.RELU)
-    )
-    return oname
-
-
 def conv_relu(n_size: int = 32, c_in: int = 3, c_out: int = 16) -> DFG:
-    dfg = DFG(f"conv_relu_{n_size}")
-    shape = (1, n_size, n_size, c_in)
-    dfg.add_value(Value("x", shape, INT8))
-    dfg.graph_inputs.append("x")
-    c1 = _conv(dfg, 0, "x", 1, n_size, n_size, c_in, c_out)
-    r1 = _relu(dfg, 0, c1, (1, n_size, n_size, c_out))
-    dfg.graph_outputs.append(r1)
-    return dfg
+    return Sequential(
+        [Conv2D(c_out), ReLU()],
+        input_shape=(1, n_size, n_size, c_in),
+        name=f"conv_relu_{n_size}",
+    ).build()
 
 
 def cascade_conv(n_size: int = 32, c_in: int = 3, c_mid: int = 16) -> DFG:
-    dfg = DFG(f"cascade_conv_{n_size}")
-    dfg.add_value(Value("x", (1, n_size, n_size, c_in), INT8))
-    dfg.graph_inputs.append("x")
-    c1 = _conv(dfg, 0, "x", 1, n_size, n_size, c_in, c_mid)
-    r1 = _relu(dfg, 0, c1, (1, n_size, n_size, c_mid))
-    c2 = _conv(dfg, 1, r1, 1, n_size, n_size, c_mid, c_mid)
-    r2 = _relu(dfg, 1, c2, (1, n_size, n_size, c_mid))
-    dfg.graph_outputs.append(r2)
-    return dfg
+    return Sequential(
+        [Conv2D(c_mid), ReLU(), Conv2D(c_mid), ReLU()],
+        input_shape=(1, n_size, n_size, c_in),
+        name=f"cascade_conv_{n_size}",
+    ).build()
 
 
 def residual_block(n_size: int = 32, c: int = 16) -> DFG:
     """Diamond: x → conv0 → relu0 → conv1 → add(x) → relu1.
 
     Exercises the FIFO-depth sizing for diamond structures (Sec. IV-C)."""
-    dfg = DFG(f"residual_block_{n_size}")
-    shape = (1, n_size, n_size, c)
-    dfg.add_value(Value("x", shape, INT8))
-    dfg.graph_inputs.append("x")
-    c1 = _conv(dfg, 0, "x", 1, n_size, n_size, c, c)
-    r1 = _relu(dfg, 0, c1, shape)
-    c2 = _conv(dfg, 1, r1, 1, n_size, n_size, c, c)
-    dfg.add_value(Value("add_out", shape, INT8))
-    dfg.add_node(
-        make_elementwise_op("add_skip", [c2, "x"], "add_out", shape, PayloadKind.ADD)
-    )
-    r2 = _relu(dfg, 1, "add_out", shape)
-    dfg.graph_outputs.append(r2)
-    return dfg
+    return Sequential(
+        [
+            Residual([Conv2D(c), ReLU(), Conv2D(c)],
+                     name="add_skip", out="add_out"),
+            ReLU(),
+        ],
+        input_shape=(1, n_size, n_size, c),
+        name=f"residual_block_{n_size}",
+    ).build()
 
 
 def linear(batch: int = 512, d_in: int = 128, d_out: int = 256) -> DFG:
     """'Linear 512x128' (Table II): batch 512, features 128→256."""
-    dfg = DFG("linear")
-    dfg.add_value(Value("x", (batch, d_in), INT8))
-    dfg.add_value(Value("w0", (d_in, d_out), INT8, is_constant=True))
-    dfg.add_value(Value("y", (batch, d_out), INT8))
-    dfg.graph_inputs.append("x")
-    dfg.add_node(
-        make_matmul_op("linear0", "x", "w0", "y", m=batch, k=d_in, n_out=d_out)
-    )
-    dfg.graph_outputs.append("y")
-    return dfg
+    return Sequential(
+        [Dense(d_out, out="y")],
+        input_shape=(batch, d_in),
+        name="linear",
+    ).build()
 
 
 def feed_forward(batch: int = 512, d_in: int = 128, d_hidden: int = 256) -> DFG:
     """Two cascading Linear layers with ReLU (Table II 'Feed Forward')."""
-    dfg = DFG("feed_forward")
-    dfg.add_value(Value("x", (batch, d_in), INT8))
-    dfg.add_value(Value("w0", (d_in, d_hidden), INT8, is_constant=True))
-    dfg.add_value(Value("h", (batch, d_hidden), INT8))
-    dfg.graph_inputs.append("x")
-    dfg.add_node(
-        make_matmul_op("linear0", "x", "w0", "h", m=batch, k=d_in, n_out=d_hidden)
-    )
-    hr = _relu(dfg, 0, "h", (batch, d_hidden))
-    dfg.add_value(Value("w1", (d_hidden, d_in), INT8, is_constant=True))
-    dfg.add_value(Value("y", (batch, d_in), INT8))
-    dfg.add_node(
-        make_matmul_op("linear1", hr, "w1", "y", m=batch, k=d_hidden, n_out=d_in)
-    )
-    dfg.graph_outputs.append("y")
-    return dfg
+    return Sequential(
+        [Dense(d_hidden, out="h"), ReLU(), Dense(d_in, out="y")],
+        input_shape=(batch, d_in),
+        name="feed_forward",
+    ).build()
 
 
 def deep_cascade(n_size: int = 32, c_in: int = 3, c_mid: int = 136,
@@ -151,38 +100,35 @@ def deep_cascade(n_size: int = 32, c_in: int = 3, c_mid: int = 136,
     graph only maps via ``repro.passes.partition_layer_groups``.  At 32²
     the line buffers shrink (~5 blocks each) and the whole graph fits.
     """
-    dfg = DFG(f"deep_cascade_{n_size}")
-    dfg.add_value(Value("x", (1, n_size, n_size, c_in), INT8))
-    dfg.graph_inputs.append("x")
-    cur, c_prev = "x", c_in
-    for i in range(n_layers):
-        cur = _conv(dfg, i, cur, 1, n_size, n_size, c_prev, c_mid)
-        cur = _relu(dfg, i, cur, (1, n_size, n_size, c_mid))
-        c_prev = c_mid
-    dfg.graph_outputs.append(cur)
-    return dfg
+    layers = [l for _ in range(n_layers) for l in (Conv2D(c_mid), ReLU())]
+    return Sequential(
+        layers,
+        input_shape=(1, n_size, n_size, c_in),
+        name=f"deep_cascade_{n_size}",
+    ).build()
 
 
 def conv_pool(n_size: int = 32, c_in: int = 3, c_out: int = 16) -> DFG:
     """Conv3×3 + ReLU + MaxPool2×2 (stride 2) — the conv+pool fusion
     showcase: after the pass pipeline the pool rides the conv's epilogue
     as a windowed FusedEpilogue and its process/FIFO disappear."""
-    assert n_size % 2 == 0, "pool2x2 needs even spatial extents"
-    dfg = DFG(f"conv_pool_{n_size}")
-    dfg.add_value(Value("x", (1, n_size, n_size, c_in), INT8))
-    dfg.graph_inputs.append("x")
-    c1 = _conv(dfg, 0, "x", 1, n_size, n_size, c_in, c_out)
-    r1 = _relu(dfg, 0, c1, (1, n_size, n_size, c_out))
-    h = n_size // 2
-    dfg.add_value(Value("pool0_out", (1, h, h, c_out), INT8))
-    dfg.add_node(
-        make_pool2d_op(
-            "pool0", r1, "pool0_out",
-            n=1, h_out=h, w_out=h, c=c_out, kh=2, kw=2, stride=2,
-        )
-    )
-    dfg.graph_outputs.append("pool0_out")
-    return dfg
+    return Sequential(
+        [Conv2D(c_out), ReLU(), MaxPool(2)],
+        input_shape=(1, n_size, n_size, c_in),
+        name=f"conv_pool_{n_size}",
+    ).build()
+
+
+def conv_avgpool(n_size: int = 32, c_in: int = 3, c_out: int = 16) -> DFG:
+    """Conv3×3 + ReLU + AvgPool2×2 (stride 2) — the avg-pool epilogue
+    showcase (ISSUE 4 satellite): fuses like the max pool but carries
+    the DIV exit path on the stream-exit datapath, which the resource
+    model charges as one constant-divider DSP."""
+    return Sequential(
+        [Conv2D(c_out), ReLU(), AvgPool(2)],
+        input_shape=(1, n_size, n_size, c_in),
+        name=f"conv_avgpool_{n_size}",
+    ).build()
 
 
 def fat_conv(n_size: int = 16, c: int = 288) -> DFG:
@@ -190,13 +136,11 @@ def fat_conv(n_size: int = 16, c: int = 288) -> DFG:
     budget (3·3·288·288 int8 ≈ 324 RAM18K > 288): no cut can help, so it
     is only schedulable via partial weight streaming — the graph that
     hard-failed with ``PartitionError`` before the weight-tiles knob."""
-    dfg = DFG(f"fat_conv_{n_size}")
-    dfg.add_value(Value("x", (1, n_size, n_size, c), INT8))
-    dfg.graph_inputs.append("x")
-    c1 = _conv(dfg, 0, "x", 1, n_size, n_size, c, c)
-    r1 = _relu(dfg, 0, c1, (1, n_size, n_size, c))
-    dfg.graph_outputs.append(r1)
-    return dfg
+    return Sequential(
+        [Conv2D(c), ReLU()],
+        input_shape=(1, n_size, n_size, c),
+        name=f"fat_conv_{n_size}",
+    ).build()
 
 
 def fat_cascade(n_size: int = 16, c: int = 288, n_layers: int = 2) -> DFG:
@@ -209,15 +153,12 @@ def fat_cascade(n_size: int = 16, c: int = 288, n_layers: int = 2) -> DFG:
     must price spill boundaries against DRAM tile traffic — the
     cost-aware streaming showcase (ISSUE 3), unreachable through the
     PR 2 single-node rescue."""
-    dfg = DFG(f"fat_cascade_{n_size}")
-    dfg.add_value(Value("x", (1, n_size, n_size, c), INT8))
-    dfg.graph_inputs.append("x")
-    cur = "x"
-    for i in range(n_layers):
-        cur = _conv(dfg, i, cur, 1, n_size, n_size, c, c)
-        cur = _relu(dfg, i, cur, (1, n_size, n_size, c))
-    dfg.graph_outputs.append(cur)
-    return dfg
+    layers = [l for _ in range(n_layers) for l in (Conv2D(c), ReLU())]
+    return Sequential(
+        layers,
+        input_shape=(1, n_size, n_size, c),
+        name=f"fat_cascade_{n_size}",
+    ).build()
 
 
 PAPER_SUITE = {

@@ -13,17 +13,28 @@ explicit **schedule IR**:
 * :class:`CompiledDesign` — the ordered list of ``GroupSchedule``s plus
   the spill ledger and whole-design accounting.  A single-group design
   is just the degenerate case (``partitioned == False``).
-* :func:`compile` — ``compile(dfg, target) -> CompiledDesign``: pass
-  pipeline → cycle-balanced partitioning → per-group streaming + DSE.
+* :func:`compile_design` — ``compile_design(dfg, target) ->
+  CompiledDesign``: pass pipeline → cycle-balanced partitioning →
+  per-group streaming + DSE.  (``compile`` is kept as a deprecating
+  alias; the public name no longer shadows the Python builtin.)
+* :class:`CompileOptions` — the one frozen knob bundle (target preset
+  or custom :class:`Target`, partition strategy, pass-pipeline
+  selection, weight-streaming policy, DSE unroll cap), validated at
+  construction and threaded through the driver, the partition DP
+  (``repro.passes.partition``), and the ILP
+  (``repro.core.dse.solve_ilp``) instead of loose positional kwargs.
 
 Every backend works off the one ``CompiledDesign``:
 ``repro.core.emit_hls.emit_design`` (Vitis C++, one kernel per group +
 host schedule), ``repro.kernels.ops.run_compiled`` (one fused Pallas/XLA
 executable per group), and ``benchmarks/paper_tables`` (reporting).
+The user-facing handle wrapping all of this is
+``repro.api.CompiledArtifact``.
 """
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional, TYPE_CHECKING
 
@@ -67,6 +78,107 @@ ZU3EG = Target(name="zu3eg", d_total=ZU3EG_DSP, b_total=ZU3EG_BRAM18K)
 
 #: device presets the multi-target sweep iterates over
 TARGETS: dict[str, Target] = {t.name: t for t in (KV260, ZU3EG)}
+
+
+# ---------------------------------------------------------------------------
+# CompileOptions: the one validated knob bundle
+# ---------------------------------------------------------------------------
+
+_STRATEGIES = ("balanced", "greedy")
+_WEIGHT_STREAMING = ("auto", "off")
+
+
+@dataclass(frozen=True)
+class CompileOptions:
+    """Everything a compile can be configured with, validated up front.
+
+    ``target``
+        A :class:`Target` or a preset name from :data:`TARGETS`
+        (``"kv260"`` / ``"zu3eg"``); names resolve at construction.
+    ``strategy``
+        Partitioner: ``"balanced"`` (min-max DP) or ``"greedy"``
+        (PR 1 prefix cut, kept for regression comparison).
+    ``passes``
+        Pass-pipeline selection: ``None`` → the default pipeline;
+        ``()`` → skip rewrites entirely; a tuple of registry names
+        (``repro.passes.PASS_REGISTRY``) → that exact pipeline, in that
+        order.  Unknown names fail here, not mid-compile.
+    ``weight_streaming``
+        ``"auto"`` (the partitioner may re-solve over-budget slices
+        with DRAM-streamed weight tiles) or ``"off"`` (resident weights
+        only — graphs like ``fat_conv`` then raise
+        :class:`~repro.passes.partition.PartitionError`).
+    ``max_unroll``
+        DSE search cap per node; ``None`` defers to the target's
+        ``max_unroll``.
+    ``verify``
+        Run the structural verifier between passes (PassManager
+        contract); only worth disabling in tight benchmark loops.
+    """
+
+    target: Target | str = "kv260"
+    strategy: str = "balanced"
+    passes: Optional[tuple[str, ...]] = None
+    weight_streaming: str = "auto"
+    max_unroll: Optional[int] = None
+    verify: bool = True
+
+    def __post_init__(self) -> None:
+        t = self.target
+        if isinstance(t, str):
+            if t not in TARGETS:
+                raise ValueError(
+                    f"unknown target preset {t!r} — available: "
+                    f"{sorted(TARGETS)} (or pass a repro.core.Target)"
+                )
+            object.__setattr__(self, "target", TARGETS[t])
+        elif not isinstance(t, Target):
+            raise ValueError(
+                f"target must be a Target or preset name, got "
+                f"{type(t).__name__}"
+            )
+        if self.strategy not in _STRATEGIES:
+            raise ValueError(
+                f"unknown partition strategy {self.strategy!r} — "
+                f"one of {_STRATEGIES}"
+            )
+        if self.weight_streaming not in _WEIGHT_STREAMING:
+            raise ValueError(
+                f"weight_streaming must be one of {_WEIGHT_STREAMING}, "
+                f"got {self.weight_streaming!r}"
+            )
+        if self.max_unroll is not None and self.max_unroll < 1:
+            raise ValueError(f"max_unroll must be >= 1, got {self.max_unroll}")
+        if self.passes is not None:
+            names = tuple(self.passes)
+            object.__setattr__(self, "passes", names)
+            from repro.passes import validate_pass_names
+
+            validate_pass_names(names)
+
+    # -- resolved views ------------------------------------------------------
+
+    @property
+    def resolved_max_unroll(self) -> int:
+        return self.max_unroll if self.max_unroll is not None \
+            else self.target.max_unroll
+
+    def run_pipeline(self, dfg: DFG):
+        """Run the selected pass pipeline over ``dfg`` (clone-first, as
+        PassManager always does).  Returns a ``PipelineResult`` or
+        ``None`` when ``passes == ()``."""
+        from repro.passes import (
+            PassManager,
+            pipeline_from_names,
+            run_default_pipeline,
+        )
+
+        if self.passes is None:
+            return run_default_pipeline(dfg, verify=self.verify)
+        if not self.passes:
+            return None
+        pm = PassManager(pipeline_from_names(self.passes), verify=self.verify)
+        return pm.run(dfg)
 
 
 # ---------------------------------------------------------------------------
@@ -149,6 +261,9 @@ class CompiledDesign:
     target: Optional[Target] = None
     original: Optional[DFG] = None
     pass_result: Optional["PipelineResult"] = None
+    #: the validated knob bundle this design was compiled under (None
+    #: for designs built through the bare partitioner API)
+    options: Optional[CompileOptions] = None
 
     # -- group-level accounting ---------------------------------------------
 
@@ -259,37 +374,62 @@ class CompiledDesign:
 # ---------------------------------------------------------------------------
 
 
-def compile(
+def compile_design(
     dfg: DFG,
-    target: Target = KV260,
+    target: Optional[Target | str] = None,
     *,
-    strategy: str = "balanced",
-    run_passes: bool = True,
+    options: Optional[CompileOptions] = None,
+    strategy: Optional[str] = None,
+    run_passes: Optional[bool] = None,
 ) -> CompiledDesign:
-    """Lower ``dfg`` to a :class:`CompiledDesign` for ``target``.
+    """Lower ``dfg`` to a :class:`CompiledDesign`.
 
-    Stages: (1) the default pass pipeline (canonicalize / DCE / CSE /
-    fusion, unless ``run_passes=False``); (2) whole-graph streaming +
-    ILP; (3) if over budget resident, the cost-aware balanced
-    partitioner (``repro.passes.partition``) — which may keep any slice
-    whole with streamed weight tiles instead of cutting it, pricing
-    DRAM tile traffic against overlapped spill boundaries.
-    ``strategy`` selects the partitioner ("balanced" DP or the PR 1
-    "greedy" prefix cut, kept for regression comparison).
+    Configuration comes from one :class:`CompileOptions` (preferred) or
+    the legacy kwargs (``target`` / ``strategy`` / ``run_passes``),
+    which are folded into an options bundle — mixing both is an error.
+
+    Stages: (1) the selected pass pipeline (default: canonicalize /
+    DCE / CSE / fusion); (2) whole-graph streaming + ILP; (3) if over
+    budget resident, the cost-aware balanced partitioner
+    (``repro.passes.partition``) — which may keep any slice whole with
+    streamed weight tiles instead of cutting it (unless
+    ``weight_streaming="off"``), pricing DRAM tile traffic against
+    overlapped spill boundaries.
     """
-    from repro.passes import partition_layer_groups, run_default_pipeline
+    from repro.passes import partition_layer_groups
 
-    pass_result = run_default_pipeline(dfg) if run_passes else None
+    if options is None:
+        options = CompileOptions(
+            target=target if target is not None else KV260,
+            strategy=strategy if strategy is not None else "balanced",
+            passes=() if run_passes is False else None,
+        )
+    elif target is not None or strategy is not None or run_passes is not None:
+        raise ValueError(
+            "pass either options=CompileOptions(...) or the legacy "
+            "target/strategy/run_passes kwargs, not both"
+        )
+
+    pass_result = options.run_pipeline(dfg)
     lowered = pass_result.dfg if pass_result is not None else dfg
-    design = partition_layer_groups(
-        lowered,
-        d_total=target.d_total,
-        b_total=target.b_total,
-        model=target.model(),
-        max_unroll=target.max_unroll,
-        strategy=strategy,
-    )
-    design.target = target
+    design = partition_layer_groups(lowered, options=options)
+    design.target = options.target
     design.original = dfg
     design.pass_result = pass_result
+    design.options = options
     return design
+
+
+def compile(dfg: DFG, target: Target = KV260, *,
+            strategy: str = "balanced",
+            run_passes: bool = True) -> CompiledDesign:  # noqa: A001
+    """Deprecated alias for :func:`compile_design` (the old name shadows
+    the Python builtin)."""
+    warnings.warn(
+        "repro.core.compile_driver.compile is deprecated; use "
+        "compile_design (same semantics, no builtin shadowing)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return compile_design(dfg, target, strategy=strategy,
+                          run_passes=run_passes)

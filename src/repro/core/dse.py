@@ -178,13 +178,22 @@ class DseResult:
 def solve_ilp(
     plan: StreamingPlan,
     *,
-    d_total: int = KV260_DSP,
-    b_total: int = KV260_BRAM18K,
+    options=None,
+    d_total: int | None = None,
+    b_total: int | None = None,
     model: FpgaResourceModel | None = None,
-    max_unroll: int = 4096,
+    max_unroll: int | None = None,
     weight_streaming: bool = False,
 ) -> DseResult:
     """Solve Eq. (1) exactly for the STREAMING (MING) mode.
+
+    ``options`` (a :class:`repro.core.CompileOptions`, duck-typed here
+    to keep ``core.dse`` import-light) supplies the budgets, resource
+    model, and unroll cap from its target — the same bundle the driver
+    and the partition DP consume, so a caller never has to unpack the
+    knobs positionally.  ``weight_streaming`` stays a per-solve flag:
+    the partitioner flips it per slice (see below), independent of the
+    bundle's policy.
 
     Inter-process FIFO BRAM (see
     :meth:`FpgaResourceModel.stream_fifo_blocks`) is assignment-independent
@@ -200,6 +209,19 @@ def solve_ilp(
     streamed groups a first-class choice its DP prices against cutting
     (ISSUE 3), while graphs that fit resident never pick up tiles.
     """
+    if options is not None:
+        if any(v is not None for v in (d_total, b_total, model, max_unroll)):
+            raise ValueError(
+                "pass either options=CompileOptions(...) or the loose "
+                "d_total/b_total/model/max_unroll kwargs, not both"
+            )
+        tgt = options.target
+        d_total, b_total = tgt.d_total, tgt.b_total
+        model = tgt.model()
+        max_unroll = options.resolved_max_unroll
+    d_total = KV260_DSP if d_total is None else d_total
+    b_total = KV260_BRAM18K if b_total is None else b_total
+    max_unroll = 4096 if max_unroll is None else max_unroll
     model = model or FpgaResourceModel()
     nodes = plan.node_order()
     fifo_bram = model.stream_fifo_blocks(plan)

@@ -39,6 +39,7 @@ _PAYLOAD_EXPR = {
     PayloadKind.MAC: "acc += (accum_t)win[i] * (accum_t)wgt[i];",
     PayloadKind.ADD: "out_v = a_v + b_v;",
     PayloadKind.MAX: "out_v = (a_v > b_v) ? a_v : b_v;",
+    PayloadKind.AVG: "acc += (accum_t)win[i];  // avg-pool accumulate",
     PayloadKind.RELU: "out_v = (in_v > 0) ? in_v : (elem_t)0;",
     PayloadKind.SQUARED_RELU: "out_v = (in_v > 0) ? (elem_t)(in_v * in_v) : (elem_t)0;",
     PayloadKind.IDENTITY: "out_v = in_v;",
@@ -59,20 +60,58 @@ _EPILOGUE_EXPR = {
 }
 
 
+def _floor_div_stmt(var: str, pts: int) -> str:
+    """The DIV exit path as *floor* division — C's `/` truncates toward
+    zero, which would diverge from ``ref.pool_reduce`` by 1 LSB on
+    negative sums.  Power-of-two windows (the common 2×2/4×4 pools) are
+    an arithmetic right shift, which floors exactly; other factors get
+    the explicit remainder adjustment."""
+    if pts & (pts - 1) == 0:
+        return f"{var} >>= {pts.bit_length() - 1};"
+    return f"{var} = ({var} - ((({var} % {pts}) + {pts}) % {pts})) / {pts};"
+
+
 def _emit_epilogue(op, indent: str) -> list[str]:
     """Fused-epilogue lines applied to the result before stream write."""
-    var = "acc" if op.payload == PayloadKind.MAC else "out_v"
+    var = "acc" if op.payload in (PayloadKind.MAC, PayloadKind.AVG) else "out_v"
     lines = []
+    if op.payload == PayloadKind.AVG:
+        # standalone avg pool: the divide rides the stream-exit datapath
+        # once per output point, after the window accumulation completes
+        pts = math.prod(op.dim_sizes[d] for d in op.reduction_dims)
+        lines.append(
+            f"{indent}{_floor_div_stmt(var, pts)}  "
+            f"// avg-pool DIV exit path (/{pts}, floor)"
+        )
     for e in op.epilogue:
         if e.window:
             # windowed (pooling) entry: the row buffer holds partial
             # reductions until the window's leading axis fills
             f = "x".join(str(x) for x in e.window if x > 1)
-            lines.append(
-                f"{indent}pool_line[o % POOL_LINE] = "
-                f"({var} > pool_line[o % POOL_LINE]) ? {var} : "
-                f"pool_line[o % POOL_LINE];  // fused {e.kind.value}-pool /{f}"
-            )
+            if e.kind == PayloadKind.MAX:
+                lines.append(
+                    f"{indent}pool_line[o % POOL_LINE] = "
+                    f"({var} > pool_line[o % POOL_LINE]) ? {var} : "
+                    f"pool_line[o % POOL_LINE];  // fused {e.kind.value}-pool /{f}"
+                )
+            else:  # ADD / AVG: accumulate into the partial row
+                lines.append(
+                    f"{indent}pool_line[o % POOL_LINE] += {var};  "
+                    f"// fused {e.kind.value}-pool /{f}"
+                )
+                if e.kind == PayloadKind.AVG:
+                    # divide exactly once per pooled output — on the
+                    # window's last row, when the slot has received all
+                    # prod(window) contributions (dividing every step
+                    # would divide partial sums repeatedly)
+                    pts = math.prod(e.window)
+                    lead = next(x for x in e.window if x > 1)
+                    div = _floor_div_stmt(f"pool_line[o % POOL_LINE]", pts)
+                    lines.append(
+                        f"{indent}if ((o / POOL_LINE) % {lead} == {lead - 1}) "
+                        f"{div}  "
+                        f"// avg-pool DIV exit path (/{pts}, floor, window full)"
+                    )
             continue
         # `o` is the flat output-point index, same schematic convention
         # as the payload's `win[i]`/`wgt[i]` accesses
@@ -235,9 +274,10 @@ def emit_node(plan: NodePlan, unroll: int, width: int,
             if inner_acc == 0:
                 lines.extend(_emit_epilogue(op, indent))
     inner_acc = min(inner_acc, max(depth - 1, 0))
+    has_exit = bool(op.epilogue) or op.payload == PayloadKind.AVG
     for j, i in enumerate(range(depth, 0, -1)):
         lines.append("  " * i + "}")
-        if op.epilogue and inner_acc and j + 1 == inner_acc:
+        if has_exit and inner_acc and j + 1 == inner_acc:
             # just closed the accumulation loops: acc is final here
             lines.extend(_emit_epilogue(op, "  " * i))
     lines.append("}")
@@ -449,10 +489,14 @@ def emit_host_schedule(pp) -> str:
             )
             for v in g.spill_out:
                 b = math.ceil(src.values[v].total_bits / 8)
-                lines.append(f"  dma_write_async(spill_{v}, {b});")
+                lines.append(f"  dma_write_async({ref(v)}, {b});")
             for v in nxt.spill_in:
+                # a spill_in that is also a graph output was written to
+                # its host-visible buffer (a run_* parameter), not to a
+                # spill_* staging buffer — read whichever buffer the
+                # next kernel call actually receives
                 b = math.ceil(src.values[v].total_bits / 8)
-                lines.append(f"  dma_read_async(spill_{v}, {b});")
+                lines.append(f"  dma_read_async({ref(v)}, {b});")
             lines.append("  dma_join();")
     lines.append("}")
     lines.append("")

@@ -158,6 +158,9 @@ class PayloadKind(str, enum.Enum):
     MAC = "mac"               # out += in0 * in1   (conv / matmul)
     ADD = "add"               # out = in0 + in1
     MAX = "max"               # out = max(in0, in1) (pooling)
+    AVG = "avg"               # out = mean over window (avg pooling):
+    #                           accumulate ADDs, divide once on the
+    #                           stream-exit datapath (the DIV exit path)
     RELU = "relu"             # out = max(in0, 0)
     SQUARED_RELU = "squared_relu"
     IDENTITY = "identity"
@@ -170,6 +173,9 @@ PAYLOAD_COSTS: dict[PayloadKind, tuple[int, int]] = {
     PayloadKind.MAC: (1, 1),
     PayloadKind.ADD: (0, 1),
     PayloadKind.MAX: (0, 1),
+    # avg pool: one add per window point plus the exit divide, realized
+    # as a constant-reciprocal multiply (Vitis lowers /const to mul+shift)
+    PayloadKind.AVG: (1, 1),
     PayloadKind.RELU: (0, 1),
     PayloadKind.SQUARED_RELU: (1, 1),
     PayloadKind.IDENTITY: (0, 0),

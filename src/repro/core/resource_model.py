@@ -204,9 +204,18 @@ class FpgaResourceModel:
         mults, adds = PAYLOAD_COSTS[plan.op.payload]
         # fused epilogue ops run once per output element on the stream-exit
         # datapath: multiplies there need DSPs (one instance, not scaled by
-        # the reduction unroll), adds/compares go to LUT fabric.
+        # the reduction unroll), adds/compares go to LUT fabric.  An AVG
+        # entry's DIV exit path counts as one multiply (Vitis lowers
+        # division by a compile-time constant to multiply+shift).
         epi = sum(PAYLOAD_COSTS[e.kind][0] for e in plan.op.epilogue)
         epi_dsp = math.ceil(epi * dsp_per_mult(plan.op.elem_bits)) if epi else 0
+        if plan.op.payload == PayloadKind.AVG:
+            # standalone avg pool: the window accumulates are LUT adders
+            # (like ADD/MAX), and the DIV exit path is ONE divider
+            # instance regardless of unroll — the same single
+            # constant-reciprocal multiply the fused-epilogue form is
+            # charged, so fusing never changes the modeled DSP cost.
+            return epi_dsp + math.ceil(dsp_per_mult(plan.op.elem_bits))
         if mults == 0:
             # pure adds/max/relu synthesize to LUT fabric — no DSP, and no
             # DSP-based address arithmetic either (paper Vanilla column:

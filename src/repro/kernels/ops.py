@@ -241,10 +241,17 @@ def _lower_node(op, dfg, env, interpret: bool, weight_tiles: int = 1):
             out = _ref.conv2d(env[stream[0]], env[const[0]],
                               stride=info.stride, padding="SAME")
             return _ref.apply_epilogue(out, op.epilogue, env)
-        if op.payload == PayloadKind.MAX and len(op.inputs) == 1:
+        if (
+            op.payload in (PayloadKind.MAX, PayloadKind.AVG)
+            and len(op.inputs) == 1
+        ):
             geo = window_geometry(op, info)
             kh, kw = geo.window_extents
-            out = _ref.maxpool2d(env[op.inputs[0]], kh, kw, info.stride)
+            pool = (
+                _ref.maxpool2d if op.payload == PayloadKind.MAX
+                else _ref.avgpool2d
+            )
+            out = pool(env[op.inputs[0]], kh, kw, info.stride)
             return _ref.apply_epilogue(out, op.epilogue, env)
         raise NotImplementedError(f"{op.name}: unsupported sliding window")
     if info.kernel_class == KernelClass.REGULAR_REDUCTION:

@@ -85,21 +85,42 @@ def binary(kind: str, a: jax.Array, b: jax.Array) -> jax.Array:
     raise NotImplementedError(f"binary payload {kind}")
 
 
+def _div_exact(x: jax.Array, n: int) -> jax.Array:
+    """The DIV exit path shared by every avg-pool realization: floor
+    division for integer accumulators (the int8 PTQ regime — identical
+    semantics in the interpreter, the Pallas lowering, and the modeled
+    HLS datapath), true division for floats."""
+    if n == 1:
+        return x
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        return x // n
+    return x / n
+
+
 def pool_reduce(kind: str, x: jax.Array, window: tuple[int, ...]) -> jax.Array:
     """Non-overlapping window reduction: axis ``i`` shrinks by
     ``window[i]`` and ``kind`` combines each tile (a fused pool
-    epilogue's semantics — max pool for kind="max")."""
-    reducer = {"max": jnp.max, "add": jnp.sum}.get(kind)
+    epilogue's semantics — max pool for kind="max").
+
+    ``kind="avg"`` accumulates with ADD and takes the DIV exit path
+    *once*, over the whole window product — not per axis — so integer
+    floor division matches the single divider on the stream-exit
+    datapath."""
+    reducer = {"max": jnp.max, "add": jnp.sum, "avg": jnp.sum}.get(kind)
     if reducer is None:
         raise NotImplementedError(f"pool payload {kind}")
+    count = 1
     for ax in range(x.ndim - 1, -1, -1):
         f = window[ax]
         if f <= 1:
             continue
+        count *= f
         shp = x.shape
         assert shp[ax] % f == 0, (shp, window)
         x = x.reshape(shp[:ax] + (shp[ax] // f, f) + shp[ax + 1:])
         x = reducer(x, axis=ax + 1)
+    if kind == "avg":
+        x = _div_exact(x, count)
     return x
 
 
@@ -116,6 +137,25 @@ def maxpool2d(x: jax.Array, kh: int, kw: int, stride: int) -> jax.Array:
         window_strides=(1, stride, stride, 1),
         padding="VALID",
     )
+
+
+def avgpool2d(x: jax.Array, kh: int, kw: int, stride: int) -> jax.Array:
+    """Standalone NHWC average pool (VALID padding): window ADDs in the
+    accumulator dtype, then the shared DIV exit path — the unfused
+    oracle the conv+avg-pool fusion is checked against."""
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        acc = x.astype(jnp.int32)
+        init = jnp.int32(0)
+    else:
+        acc = x.astype(jnp.float32)
+        init = jnp.float32(0)
+    summed = lax.reduce_window(
+        acc, init, lax.add,
+        window_dimensions=(1, kh, kw, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+    return _div_exact(summed, kh * kw)
 
 
 def apply_epilogue(out: jax.Array, epilogue, env) -> jax.Array:

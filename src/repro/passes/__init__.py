@@ -4,7 +4,7 @@ The compiler-infrastructure layer between the frontends
 (``repro.core.cnn_graphs``) and the unified compile driver
 (``repro.core.compile_driver``, paper Fig. 4 extended):
 
-    cnn_graphs → [canonicalize → dce → cse → fusion → dce] → compile
+    cnn_graphs → [canonicalize → dce → cse → fusion → dce] → compile_design
                                                                │
                      ┌─────────────────────────────────────────┘
                      ▼
@@ -46,6 +46,39 @@ from .verifier import VerificationError, verify_dfg
 from repro.core.resource_model import DRAM_BYTES_PER_CYCLE
 
 
+#: registered rewrites, keyed by their Pass.name — the vocabulary
+#: ``repro.core.CompileOptions.passes`` selects pipelines from
+PASS_REGISTRY: dict[str, type[Pass]] = {
+    cls.name: cls
+    for cls in (
+        Canonicalize,
+        DeadCodeElimination,
+        CommonSubexprElimination,
+        ElementwiseChainFusion,
+        ConvActivationFusion,
+        ConvPoolFusion,
+    )
+}
+
+
+def validate_pass_names(names) -> None:
+    """Reject unknown registry names — the one error message both
+    ``CompileOptions`` (at construction) and :func:`pipeline_from_names`
+    (at instantiation) raise."""
+    unknown = [n for n in names if n not in PASS_REGISTRY]
+    if unknown:
+        raise ValueError(
+            f"unknown pass name(s) {unknown} — available: "
+            f"{sorted(PASS_REGISTRY)}"
+        )
+
+
+def pipeline_from_names(names) -> list[Pass]:
+    """Instantiate a pipeline from registry names, in the given order."""
+    validate_pass_names(names)
+    return [PASS_REGISTRY[n]() for n in names]
+
+
 def default_pipeline() -> list[Pass]:
     """Canonicalize, strip dead code, dedup, fuse, clean up, re-canonicalize."""
     return [
@@ -81,6 +114,9 @@ __all__ = [
     "fuse",
     "fuse_pool",
     "DRAM_BYTES_PER_CYCLE",
+    "PASS_REGISTRY",
+    "pipeline_from_names",
+    "validate_pass_names",
     "LayerGroup",
     "PartitionError",
     "PartitionPlan",

@@ -150,11 +150,13 @@ def pool_window_factors(dfg: DFG, pool: GenericOp) -> tuple[int, ...] | None:
     """Per-output-axis pool factors for a *fusible* pool op, else None.
 
     Legality (beyond what :func:`can_fuse_pool` checks on the producer
-    side): the op is a single-input sliding-window MAX reduction whose
-    stride equals every window extent (non-overlapping — "stride
+    side): the op is a single-input sliding-window MAX or AVG reduction
+    whose stride equals every window extent (non-overlapping — "stride
     aligned"), and whose input extents divide exactly.
     """
-    if pool.payload != PayloadKind.MAX or len(pool.inputs) != 1:
+    if pool.payload not in (PayloadKind.MAX, PayloadKind.AVG):
+        return None
+    if len(pool.inputs) != 1:
         return None
     info = classify_kernel(pool)
     if info.kernel_class != KernelClass.SLIDING_WINDOW:
@@ -221,9 +223,11 @@ def fuse_pool(dfg: DFG, producer: GenericOp, pool: GenericOp) -> None:
 
 
 class ConvPoolFusion(Pass):
-    """A 2×2 (or any non-overlapping) max pool folds into the producing
-    conv's epilogue: one fewer process, one fewer BRAM-bound FIFO, and
-    the group's output stream shrinks by the pool factor."""
+    """A 2×2 (or any non-overlapping) max or average pool folds into the
+    producing conv's epilogue: one fewer process, one fewer BRAM-bound
+    FIFO, and the group's output stream shrinks by the pool factor.
+    Average pools additionally carry the DIV exit path (one divide per
+    pooled output point, charged by the resource model)."""
 
     name = "conv-pool-fusion"
 

@@ -57,13 +57,14 @@ def _conv2d(op: GenericOp, dfg: DFG, env: Mapping[str, jax.Array]):
                       padding="SAME")
 
 
-def _maxpool(op: GenericOp, env: Mapping[str, jax.Array]):
+def _pool2d(op: GenericOp, env: Mapping[str, jax.Array]):
     info = classify_kernel(op)
     geo = window_geometry(op, info)
     if op.n_dims != 6 or len(geo.window_extents) != 2 or info.dilation != 1:
         raise NotImplementedError(f"{op.name}: unsupported pool shape")
     kh, kw = geo.window_extents
-    return ref.maxpool2d(env[op.inputs[0]], kh, kw, info.stride)
+    pool = ref.maxpool2d if op.payload == PayloadKind.MAX else ref.avgpool2d
+    return pool(env[op.inputs[0]], kh, kw, info.stride)
 
 
 def execute_node(op: GenericOp, dfg: DFG, env: Mapping[str, jax.Array]):
@@ -83,8 +84,11 @@ def execute_node(op: GenericOp, dfg: DFG, env: Mapping[str, jax.Array]):
     else:  # SLIDING_WINDOW
         if op.payload == PayloadKind.MAC:
             out = _conv2d(op, dfg, env)
-        elif op.payload == PayloadKind.MAX and len(op.inputs) == 1:
-            out = _maxpool(op, env)
+        elif (
+            op.payload in (PayloadKind.MAX, PayloadKind.AVG)
+            and len(op.inputs) == 1
+        ):
+            out = _pool2d(op, env)
         else:
             raise NotImplementedError(f"{op.name}: unsupported sliding window")
     return _apply_epilogue(op, out, env)

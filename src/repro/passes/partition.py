@@ -41,7 +41,10 @@ from __future__ import annotations
 from typing import Optional
 
 from repro.core.compile_driver import (
+    _STRATEGIES,
+    _WEIGHT_STREAMING,
     CompiledDesign,
+    CompileOptions,
     GroupSchedule,
     SpillBuffer,
     boundary_bytes,
@@ -77,13 +80,15 @@ class _GroupPlanner:
     """
 
     def __init__(self, dfg: DFG, *, d_total: int, b_total: int,
-                 model: Optional[FpgaResourceModel], max_unroll: int) -> None:
+                 model: Optional[FpgaResourceModel], max_unroll: int,
+                 weight_streaming: str = "auto") -> None:
         self.dfg = dfg
         self.order = [n.name for n in dfg.topo_order()]
         self.d_total = d_total
         self.b_total = b_total
         self.model = model
         self.max_unroll = max_unroll
+        self.weight_streaming = weight_streaming
         self._resident: dict[tuple[int, int], tuple] = {}
         self._cache: dict[tuple[int, int], GroupSchedule] = {}
 
@@ -117,7 +122,7 @@ class _GroupPlanner:
         g = self._cache.get(key)
         if g is None:
             sub, plan, dse = self._resident_plan(i, j)
-            if not dse.feasible:
+            if not dse.feasible and self.weight_streaming != "off":
                 streamed = self._solve(plan, weight_streaming=True)
                 if streamed.feasible:
                     dse = streamed
@@ -151,10 +156,15 @@ class _GroupPlanner:
 
     def _check_first(self, i: int) -> None:
         if not self.group(i, i + 1).dse.feasible:
+            how = (
+                "even with streamed weights"
+                if self.weight_streaming != "off"
+                else "with resident weights (weight_streaming='off')"
+            )
             raise PartitionError(
                 f"{self.dfg.name}: node {self.order[i]} alone exceeds the "
-                f"budgets (DSP={self.d_total}, BRAM={self.b_total}) even "
-                "with streamed weights — partitioning cannot help"
+                f"budgets (DSP={self.d_total}, BRAM={self.b_total}) {how} "
+                "— partitioning cannot help"
             )
 
     def max_feasible_end(self, i: int) -> int:
@@ -249,30 +259,72 @@ def _greedy_cuts(planner: _GroupPlanner) -> list[tuple[int, int]]:
 def partition_layer_groups(
     dfg: DFG,
     *,
-    d_total: int = KV260_DSP,
-    b_total: int = KV260_BRAM18K,
+    options: Optional[CompileOptions] = None,
+    d_total: Optional[int] = None,
+    b_total: Optional[int] = None,
     model: Optional[FpgaResourceModel] = None,
-    max_unroll: int = 4096,
-    strategy: str = "balanced",
+    max_unroll: Optional[int] = None,
+    strategy: Optional[str] = None,
+    weight_streaming: Optional[str] = None,
 ) -> CompiledDesign:
     """Whole graph if it fits resident; otherwise cost-aware balanced
     topological layer groups (or the greedy PR 1 cut,
     ``strategy="greedy"``) — where the balanced DP may keep a slice
-    whole with streamed weight tiles instead of cutting it."""
-    if strategy not in ("balanced", "greedy"):
-        raise ValueError(f"unknown partition strategy {strategy!r}")
+    whole with streamed weight tiles instead of cutting it (disable
+    with ``weight_streaming="off"``).
+
+    An ``options`` bundle (:class:`repro.core.CompileOptions`) is the
+    single source of truth ``compile_design`` threads through the whole
+    stack: budgets and the resource model come from its target, the
+    strategy, unroll cap, and streaming policy from its fields.  Mixing
+    it with loose kwargs is an error (never a silent override)."""
+    if options is not None:
+        loose = (d_total, b_total, model, max_unroll, strategy,
+                 weight_streaming)
+        if any(v is not None for v in loose):
+            raise ValueError(
+                "pass either options=CompileOptions(...) or the loose "
+                "d_total/b_total/model/max_unroll/strategy/"
+                "weight_streaming kwargs, not both"
+            )
+        tgt = options.target
+        d_total, b_total = tgt.d_total, tgt.b_total
+        model = tgt.model()
+        max_unroll = options.resolved_max_unroll
+        strategy = options.strategy
+        weight_streaming = options.weight_streaming
+    else:
+        d_total = KV260_DSP if d_total is None else d_total
+        b_total = KV260_BRAM18K if b_total is None else b_total
+        max_unroll = 4096 if max_unroll is None else max_unroll
+        strategy = "balanced" if strategy is None else strategy
+        weight_streaming = (
+            "auto" if weight_streaming is None else weight_streaming
+        )
+    if strategy not in _STRATEGIES:
+        raise ValueError(
+            f"unknown partition strategy {strategy!r} — one of {_STRATEGIES}"
+        )
+    if weight_streaming not in _WEIGHT_STREAMING:
+        # a policy string, NOT solve_ilp's per-solve bool — catch e.g.
+        # weight_streaming=False before it silently behaves as "auto"
+        raise ValueError(
+            f"weight_streaming must be one of {_WEIGHT_STREAMING}, got "
+            f"{weight_streaming!r}"
+        )
     planner = _GroupPlanner(
         dfg, d_total=d_total, b_total=b_total, model=model,
-        max_unroll=max_unroll,
+        max_unroll=max_unroll, weight_streaming=weight_streaming,
     )
     n = len(planner.order)
     if planner.resident_feasible(0, n):
         # fits whole with weights on-chip: never cut a feasible graph
         # (the ROADMAP reconfiguration-cost item gates that trade)
         return CompiledDesign(dfg, [planner.renamed(0, n, 0)],
-                              d_total, b_total, whole_graph_feasible=True)
+                              d_total, b_total, whole_graph_feasible=True,
+                              options=options)
 
     cuts = (_balanced_cuts if strategy == "balanced" else _greedy_cuts)(planner)
     groups = [planner.renamed(i, j, idx) for idx, (i, j) in enumerate(cuts)]
     return CompiledDesign(dfg, groups, d_total, b_total,
-                          whole_graph_feasible=False)
+                          whole_graph_feasible=False, options=options)

@@ -1,54 +1,245 @@
-"""Stand-ins for ``hypothesis`` when the optional dep is not installed.
+"""A vendored minimal property-testing engine for when ``hypothesis``
+is not installed.
 
-The property-based tests import ``given``/``settings``/``st`` at module
-scope; a bare ``pytest.importorskip`` would skip *every* test in those
-modules, including the ~60 plain unit tests.  Instead the test modules
-fall back to these no-ops: ``@given(...)`` marks just the property tests
-as skipped, strategies become inert placeholders, and the rest of the
-module runs normally.  Install the real thing via ``requirements-dev.txt``
-to run the property tests too.
+Historically this module stubbed ``given``/``settings``/``st`` with
+no-ops that *skipped* every property test — so CI environments without
+the optional dep never fuzzed at all (ROADMAP follow-up).  It is now a
+tiny real engine:
+
+* ``st.integers`` / ``st.sampled_from`` / ``st.lists`` /
+  ``st.composite`` draw actual values from a deterministic RNG (seeded
+  per test, so CI runs are reproducible);
+* ``@given(...)`` runs ``max_examples`` drawn examples through the test
+  body;
+* on failure, a greedy **shrinker** minimizes the counterexample —
+  integers walk toward their lower bound (binary steps, then -1), lists
+  drop elements toward ``min_size`` and shrink element-wise — and the
+  minimal failing example is printed before the original failure
+  re-raises.
+
+Only the strategy surface this repo's tests use is implemented.  The
+real thing (``pip install -r requirements-dev.txt``) is strictly
+better — richer strategies, database replay, targeted shrinking — and
+takes over automatically when importable.
 """
 from __future__ import annotations
 
-import pytest
+import functools
+import random
 
-_SKIP = pytest.mark.skip(reason="hypothesis not installed "
-                                "(pip install -r requirements-dev.txt)")
-
-
-def given(*_args, **_kwargs):
-    def deco(fn):
-        return _SKIP(fn)
-
-    return deco
+#: shrink-phase budget: total extra test invocations per failure
+_SHRINK_BUDGET = 200
+#: default examples when no @settings decorates the test
+_DEFAULT_MAX_EXAMPLES = 50
 
 
-class settings:  # noqa: N801 - mirrors hypothesis.settings
-    def __init__(self, *_args, **_kwargs) -> None:
-        pass
-
-    def __call__(self, fn):
-        return fn
+# ---------------------------------------------------------------------------
+# Strategies
+# ---------------------------------------------------------------------------
 
 
 class _Strategy:
-    """Inert placeholder: callable, chainable, never drawn from."""
+    def example(self, rng: random.Random):
+        raise NotImplementedError
 
-    def __call__(self, *_args, **_kwargs) -> "_Strategy":
-        return self
+    def shrink_candidates(self, value):
+        """Smaller candidates to try, most aggressive first."""
+        return []
 
-    def __getattr__(self, _name) -> "_Strategy":
-        return self
+
+class _Integers(_Strategy):
+    def __init__(self, min_value=None, max_value=None) -> None:
+        self.min_value = -(2 ** 16) if min_value is None else min_value
+        self.max_value = 2 ** 16 if max_value is None else max_value
+        if self.min_value > self.max_value:
+            raise ValueError(f"empty integer range [{min_value}, {max_value}]")
+
+    def example(self, rng: random.Random) -> int:
+        return rng.randint(self.min_value, self.max_value)
+
+    def shrink_candidates(self, value: int):
+        # shrink toward the smallest-magnitude legal value (hypothesis
+        # shrinks toward 0 when in range, else toward the bound)
+        target = min(max(0, self.min_value), self.max_value)
+        out = []
+        if value != target:
+            out.append(target)
+            mid = target + (value - target) // 2
+            if mid not in (value, target):
+                out.append(mid)
+            step = value - 1 if value > target else value + 1
+            if step != target:
+                out.append(step)
+        return out
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements) -> None:
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from needs at least one element")
+
+    def example(self, rng: random.Random):
+        return rng.choice(self.elements)
+
+    def shrink_candidates(self, value):
+        # earlier elements are "simpler" (hypothesis convention)
+        try:
+            i = self.elements.index(value)
+        except ValueError:
+            return []
+        return [self.elements[0]] if i > 0 else []
+
+
+class _Lists(_Strategy):
+    def __init__(self, elements: _Strategy, min_size=0, max_size=None) -> None:
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def example(self, rng: random.Random) -> list:
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elements.example(rng) for _ in range(n)]
+
+    def shrink_candidates(self, value: list):
+        out = []
+        if len(value) > self.min_size:
+            out.append(value[: self.min_size])
+            out.append(value[:-1])
+        for i, v in enumerate(value):
+            for cand in self.elements.shrink_candidates(v):
+                out.append(value[:i] + [cand] + value[i + 1:])
+                break  # one element-wise step per position is plenty
+        return out
+
+
+class _CompositeStrategy(_Strategy):
+    """Re-runs the @st.composite builder with a fresh draw function.
+
+    Composite draws do NOT shrink (that needs choice-sequence
+    navigation, which real hypothesis provides); a composite
+    counterexample is reported as drawn."""
+
+    def __init__(self, fn, args, kwargs) -> None:
+        self.fn = fn
+        self.args = args
+        self.kwargs = kwargs
+
+    def example(self, rng: random.Random):
+        return self.fn(lambda s: s.example(rng), *self.args, **self.kwargs)
 
 
 class _Strategies:
-    def composite(self, fn):
-        # the decorated builder is never executed; calling it must just
-        # return a strategy placeholder for @given(...)
-        return _Strategy()
+    @staticmethod
+    def integers(min_value=None, max_value=None) -> _Integers:
+        return _Integers(min_value, max_value)
 
-    def __getattr__(self, _name) -> _Strategy:
-        return _Strategy()
+    @staticmethod
+    def sampled_from(elements) -> _SampledFrom:
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=None) -> _Lists:
+        return _Lists(elements, min_size, max_size)
+
+    @staticmethod
+    def composite(fn):
+        def make(*args, **kwargs):
+            return _CompositeStrategy(fn, args, kwargs)
+
+        return functools.wraps(fn)(make)
 
 
 st = _Strategies()
+
+
+# ---------------------------------------------------------------------------
+# settings / given
+# ---------------------------------------------------------------------------
+
+
+class settings:  # noqa: N801 - mirrors hypothesis.settings
+    """Records max_examples; every other knob is accepted and ignored."""
+
+    def __init__(self, *_args, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+                 **_kwargs) -> None:
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        # works in either decorator order: attribute travels with the
+        # function object @given wraps (or with the wrapper itself)
+        fn._fb_settings = self
+        return fn
+
+
+def _fails_like(fn, args, kwargs, vals, exc_type) -> bool:
+    """True iff the call raises the *same exception type* the original
+    draw did — a candidate that blows up differently (e.g. a shrunk
+    input tripping validation instead of the assertion under test) must
+    not be latched onto as the 'minimal' counterexample."""
+    try:
+        fn(*args, *vals, **kwargs)
+        return False
+    except exc_type:
+        return True
+    except Exception:
+        return False
+
+
+def _shrink(fn, args, kwargs, strategies, vals: list, exc_type) -> list:
+    """Greedy minimization: keep applying the first candidate that still
+    fails with the original exception type, within the shrink budget."""
+    budget = _SHRINK_BUDGET
+    improved = True
+    while improved and budget > 0:
+        improved = False
+        for i, strat in enumerate(strategies):
+            for cand in strat.shrink_candidates(vals[i]):
+                if budget <= 0:
+                    break
+                budget -= 1
+                trial = list(vals)
+                trial[i] = cand
+                if _fails_like(fn, args, kwargs, trial, exc_type):
+                    vals = trial
+                    improved = True
+                    break
+    return vals
+
+
+def given(*strategies):
+    def deco(fn):
+        # NOT functools.wraps: copying __wrapped__ would make pytest
+        # inspect the original signature and demand the drawn params as
+        # fixtures; the wrapper must present a bare (*args) signature.
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_fb_settings", None) or getattr(
+                fn, "_fb_settings", None
+            )
+            max_examples = cfg.max_examples if cfg else _DEFAULT_MAX_EXAMPLES
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(max_examples):
+                vals = [s.example(rng) for s in strategies]
+                try:
+                    fn(*args, *vals, **kwargs)
+                except Exception as e:
+                    minimal = _shrink(fn, args, kwargs, strategies,
+                                      list(vals), type(e))
+                    how = (
+                        "shrunk by the vendored engine"
+                        if minimal != vals else "as drawn, not shrunk"
+                    )
+                    print(
+                        f"\nFalsifying example ({fn.__qualname__}, {how}): "
+                        f"{minimal!r}"
+                    )
+                    fn(*args, *minimal, **kwargs)  # re-raise minimally
+                    raise  # pragma: no cover - minimal example passed?!
+
+        for attr in ("__name__", "__qualname__", "__module__", "__doc__"):
+            setattr(wrapper, attr, getattr(fn, attr, None))
+        wrapper._fb_settings = getattr(fn, "_fb_settings", None)
+        wrapper._fb_property = True
+        return wrapper
+
+    return deco

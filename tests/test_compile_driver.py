@@ -11,7 +11,7 @@ from repro.core.compile_driver import (
     CompiledDesign,
     GroupSchedule,
     Target,
-    compile as compile_design,
+    compile_design,
 )
 from repro.core.dse import solve_ilp
 from repro.core.emit_hls import emit_design

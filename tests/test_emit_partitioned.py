@@ -36,8 +36,7 @@ class TestGolden:
         """The ZU3EG budget flips fat_conv from weight-streamed (KV260)
         to resident weights: the emitted kernel must carry no wtile
         ping/pong loop and no m_axi weight pointer."""
-        from repro.core.compile_driver import ZU3EG
-        from repro.core.compile_driver import compile as compile_design
+        from repro.core.compile_driver import ZU3EG, compile_design
 
         d = compile_design(cnn_graphs.fat_conv(), ZU3EG)
         assert not d.weight_streamed and len(d.groups) == 1

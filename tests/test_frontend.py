@@ -1,0 +1,450 @@
+"""Layer-builder frontend (ISSUE 4 tentpole): shape inference,
+validating errors, and — the load-bearing contract — *node-for-node
+equality* with the historical hand-built graphs.
+
+The legacy constructors below are verbatim copies of the pre-ISSUE-4
+``cnn_graphs`` bodies (hand-assembled ``Value`` + ``make_*_op``).  The
+shipped constructors are now thin wrappers over
+``repro.api.builder.Sequential``; every suite graph must compare equal
+(values, nodes, maps, iterator types, boundary lists — dataclass
+equality covers all of it) so nothing downstream (goldens, BENCH rows,
+partition cuts) can move.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.api.builder import (
+    AvgPool,
+    Conv2D,
+    Dense,
+    FrontendError,
+    Graph,
+    MaxPool,
+    ReLU,
+    Residual,
+    Sequential,
+)
+from repro.core import cnn_graphs
+from repro.core.ir import (
+    DFG,
+    PayloadKind,
+    Value,
+    make_conv2d_op,
+    make_elementwise_op,
+    make_matmul_op,
+    make_pool2d_op,
+)
+
+INT8 = 8
+
+
+# ---------------------------------------------------------------------------
+# The legacy hand-built constructors (pre-ISSUE-4 cnn_graphs, verbatim)
+# ---------------------------------------------------------------------------
+
+
+def _conv(dfg, idx, in_name, n, h, w, c_in, c_out, k=3):
+    wname = f"w{idx}"
+    oname = f"conv{idx}_out"
+    dfg.add_value(Value(wname, (k, k, c_in, c_out), INT8, is_constant=True))
+    dfg.add_value(Value(oname, (n, h, w, c_out), INT8))
+    dfg.add_node(
+        make_conv2d_op(
+            f"conv{idx}", in_name, wname, oname,
+            n=n, h_out=h, w_out=w, c_out=c_out, kh=k, kw=k, c_in=c_in,
+        )
+    )
+    return oname
+
+
+def _relu(dfg, idx, in_name, shape):
+    oname = f"relu{idx}_out"
+    dfg.add_value(Value(oname, shape, INT8))
+    dfg.add_node(
+        make_elementwise_op(f"relu{idx}", [in_name], oname, shape,
+                            PayloadKind.RELU)
+    )
+    return oname
+
+
+def legacy_conv_relu(n_size=32, c_in=3, c_out=16):
+    dfg = DFG(f"conv_relu_{n_size}")
+    shape = (1, n_size, n_size, c_in)
+    dfg.add_value(Value("x", shape, INT8))
+    dfg.graph_inputs.append("x")
+    c1 = _conv(dfg, 0, "x", 1, n_size, n_size, c_in, c_out)
+    r1 = _relu(dfg, 0, c1, (1, n_size, n_size, c_out))
+    dfg.graph_outputs.append(r1)
+    return dfg
+
+
+def legacy_cascade_conv(n_size=32, c_in=3, c_mid=16):
+    dfg = DFG(f"cascade_conv_{n_size}")
+    dfg.add_value(Value("x", (1, n_size, n_size, c_in), INT8))
+    dfg.graph_inputs.append("x")
+    c1 = _conv(dfg, 0, "x", 1, n_size, n_size, c_in, c_mid)
+    r1 = _relu(dfg, 0, c1, (1, n_size, n_size, c_mid))
+    c2 = _conv(dfg, 1, r1, 1, n_size, n_size, c_mid, c_mid)
+    r2 = _relu(dfg, 1, c2, (1, n_size, n_size, c_mid))
+    dfg.graph_outputs.append(r2)
+    return dfg
+
+
+def legacy_residual_block(n_size=32, c=16):
+    dfg = DFG(f"residual_block_{n_size}")
+    shape = (1, n_size, n_size, c)
+    dfg.add_value(Value("x", shape, INT8))
+    dfg.graph_inputs.append("x")
+    c1 = _conv(dfg, 0, "x", 1, n_size, n_size, c, c)
+    r1 = _relu(dfg, 0, c1, shape)
+    c2 = _conv(dfg, 1, r1, 1, n_size, n_size, c, c)
+    dfg.add_value(Value("add_out", shape, INT8))
+    dfg.add_node(
+        make_elementwise_op("add_skip", [c2, "x"], "add_out", shape,
+                            PayloadKind.ADD)
+    )
+    r2 = _relu(dfg, 1, "add_out", shape)
+    dfg.graph_outputs.append(r2)
+    return dfg
+
+
+def legacy_linear(batch=512, d_in=128, d_out=256):
+    dfg = DFG("linear")
+    dfg.add_value(Value("x", (batch, d_in), INT8))
+    dfg.add_value(Value("w0", (d_in, d_out), INT8, is_constant=True))
+    dfg.add_value(Value("y", (batch, d_out), INT8))
+    dfg.graph_inputs.append("x")
+    dfg.add_node(
+        make_matmul_op("linear0", "x", "w0", "y", m=batch, k=d_in,
+                       n_out=d_out)
+    )
+    dfg.graph_outputs.append("y")
+    return dfg
+
+
+def legacy_feed_forward(batch=512, d_in=128, d_hidden=256):
+    dfg = DFG("feed_forward")
+    dfg.add_value(Value("x", (batch, d_in), INT8))
+    dfg.add_value(Value("w0", (d_in, d_hidden), INT8, is_constant=True))
+    dfg.add_value(Value("h", (batch, d_hidden), INT8))
+    dfg.graph_inputs.append("x")
+    dfg.add_node(
+        make_matmul_op("linear0", "x", "w0", "h", m=batch, k=d_in,
+                       n_out=d_hidden)
+    )
+    hr = _relu(dfg, 0, "h", (batch, d_hidden))
+    dfg.add_value(Value("w1", (d_hidden, d_in), INT8, is_constant=True))
+    dfg.add_value(Value("y", (batch, d_in), INT8))
+    dfg.add_node(
+        make_matmul_op("linear1", hr, "w1", "y", m=batch, k=d_hidden,
+                       n_out=d_in)
+    )
+    dfg.graph_outputs.append("y")
+    return dfg
+
+
+def legacy_deep_cascade(n_size=32, c_in=3, c_mid=136, n_layers=4):
+    dfg = DFG(f"deep_cascade_{n_size}")
+    dfg.add_value(Value("x", (1, n_size, n_size, c_in), INT8))
+    dfg.graph_inputs.append("x")
+    cur, c_prev = "x", c_in
+    for i in range(n_layers):
+        cur = _conv(dfg, i, cur, 1, n_size, n_size, c_prev, c_mid)
+        cur = _relu(dfg, i, cur, (1, n_size, n_size, c_mid))
+        c_prev = c_mid
+    dfg.graph_outputs.append(cur)
+    return dfg
+
+
+def legacy_conv_pool(n_size=32, c_in=3, c_out=16):
+    assert n_size % 2 == 0
+    dfg = DFG(f"conv_pool_{n_size}")
+    dfg.add_value(Value("x", (1, n_size, n_size, c_in), INT8))
+    dfg.graph_inputs.append("x")
+    c1 = _conv(dfg, 0, "x", 1, n_size, n_size, c_in, c_out)
+    r1 = _relu(dfg, 0, c1, (1, n_size, n_size, c_out))
+    h = n_size // 2
+    dfg.add_value(Value("pool0_out", (1, h, h, c_out), INT8))
+    dfg.add_node(
+        make_pool2d_op(
+            "pool0", r1, "pool0_out",
+            n=1, h_out=h, w_out=h, c=c_out, kh=2, kw=2, stride=2,
+        )
+    )
+    dfg.graph_outputs.append("pool0_out")
+    return dfg
+
+
+def legacy_fat_conv(n_size=16, c=288):
+    dfg = DFG(f"fat_conv_{n_size}")
+    dfg.add_value(Value("x", (1, n_size, n_size, c), INT8))
+    dfg.graph_inputs.append("x")
+    c1 = _conv(dfg, 0, "x", 1, n_size, n_size, c, c)
+    r1 = _relu(dfg, 0, c1, (1, n_size, n_size, c))
+    dfg.graph_outputs.append(r1)
+    return dfg
+
+
+def legacy_fat_cascade(n_size=16, c=288, n_layers=2):
+    dfg = DFG(f"fat_cascade_{n_size}")
+    dfg.add_value(Value("x", (1, n_size, n_size, c), INT8))
+    dfg.graph_inputs.append("x")
+    cur = "x"
+    for i in range(n_layers):
+        cur = _conv(dfg, i, cur, 1, n_size, n_size, c, c)
+        cur = _relu(dfg, i, cur, (1, n_size, n_size, c))
+    dfg.graph_outputs.append(cur)
+    return dfg
+
+
+LEGACY = {
+    "conv_relu_32": legacy_conv_relu,
+    "conv_relu_224": lambda: legacy_conv_relu(224),
+    "cascade_conv_32": legacy_cascade_conv,
+    "cascade_conv_224": lambda: legacy_cascade_conv(224),
+    "residual_block_32": legacy_residual_block,
+    "residual_block_224": lambda: legacy_residual_block(224),
+    "linear": legacy_linear,
+    "feed_forward": legacy_feed_forward,
+    "deep_cascade_32": legacy_deep_cascade,
+    "deep_cascade_224": lambda: legacy_deep_cascade(224),
+    "conv_pool_32": legacy_conv_pool,
+    "fat_conv_16": legacy_fat_conv,
+    "fat_cascade_16": legacy_fat_cascade,
+}
+
+BUILT = {
+    "conv_relu_32": cnn_graphs.conv_relu,
+    "conv_relu_224": lambda: cnn_graphs.conv_relu(224),
+    "cascade_conv_32": cnn_graphs.cascade_conv,
+    "cascade_conv_224": lambda: cnn_graphs.cascade_conv(224),
+    "residual_block_32": cnn_graphs.residual_block,
+    "residual_block_224": lambda: cnn_graphs.residual_block(224),
+    "linear": cnn_graphs.linear,
+    "feed_forward": cnn_graphs.feed_forward,
+    "deep_cascade_32": cnn_graphs.deep_cascade,
+    "deep_cascade_224": lambda: cnn_graphs.deep_cascade(224),
+    "conv_pool_32": cnn_graphs.conv_pool,
+    "fat_conv_16": cnn_graphs.fat_conv,
+    "fat_cascade_16": cnn_graphs.fat_cascade,
+}
+
+
+def assert_dfg_equal(a: DFG, b: DFG) -> None:
+    """Node-for-node, value-for-value equality with readable diffs."""
+    assert a.name == b.name
+    assert a.graph_inputs == b.graph_inputs
+    assert a.graph_outputs == b.graph_outputs
+    assert sorted(a.values) == sorted(b.values)
+    for k in a.values:
+        assert a.values[k] == b.values[k], k
+    assert len(a.nodes) == len(b.nodes)
+    for na, nb in zip(a.nodes, b.nodes):
+        assert na == nb, na.name
+    assert a == b  # and the whole-dataclass check agrees
+
+
+class TestSuiteEquality:
+    """Every suite graph: builder wrapper == legacy hand-built."""
+
+    @pytest.mark.parametrize("name", sorted(LEGACY))
+    def test_builder_equals_legacy(self, name):
+        assert_dfg_equal(BUILT[name](), LEGACY[name]())
+
+    def test_paper_suite_is_builder_built(self):
+        for name, make in cnn_graphs.PAPER_SUITE.items():
+            g = make()
+            assert g.name.startswith(name.rsplit("_", 1)[0]) or g.name == name
+            g.topo_order()  # well-formed
+
+
+class TestPropertyEquality:
+    """Random conv/relu cascades built both ways stay identical."""
+
+    @given(st.integers(4, 32), st.integers(1, 8), st.integers(1, 4))
+    @settings(max_examples=25, deadline=None)
+    def test_random_cascades_equal(self, n, c, layers):
+        built = cnn_graphs.deep_cascade(n, c_in=3, c_mid=c, n_layers=layers)
+        legacy = legacy_deep_cascade(n, c_in=3, c_mid=c, n_layers=layers)
+        assert_dfg_equal(built, legacy)
+
+    @given(st.integers(2, 16), st.integers(1, 8))
+    @settings(max_examples=15, deadline=None)
+    def test_random_even_conv_pools_equal(self, half, c_out):
+        n = 2 * half
+        assert_dfg_equal(
+            cnn_graphs.conv_pool(n, c_out=c_out),
+            legacy_conv_pool(n, c_out=c_out),
+        )
+
+
+class TestShapeInference:
+    def test_conv_infers_same_padding_shape(self):
+        g = Graph("t")
+        x = g.input((1, 9, 9, 3))
+        y = g.conv2d(x, 5, kernel=3, stride=2)
+        assert y.shape == (1, 5, 5, 5)
+
+    def test_pool_infers_valid_shape(self):
+        g = Graph("t")
+        x = g.input((1, 10, 10, 2))
+        y = g.max_pool(x, window=2)
+        assert y.shape == (1, 5, 5, 2)
+
+    def test_dense_infers_units(self):
+        g = Graph("t")
+        x = g.input((4, 8))
+        y = g.dense(x, 16)
+        assert y.shape == (4, 16)
+
+    def test_wrong_rank_input_to_conv(self):
+        g = Graph("t")
+        x = g.input((4, 8))
+        with pytest.raises(FrontendError, match="rank-4 NHWC"):
+            g.conv2d(x, 16)
+
+    def test_wrong_rank_input_to_dense(self):
+        g = Graph("t")
+        x = g.input((1, 8, 8, 3))
+        with pytest.raises(FrontendError, match="rank-2"):
+            g.dense(x, 16)
+
+    def test_channel_mismatch_in_residual(self):
+        net = Sequential(
+            [Residual([Conv2D(8)])],  # body changes 4 -> 8 channels
+            input_shape=(1, 8, 8, 4), name="bad",
+        )
+        with pytest.raises(FrontendError, match="shapes differ"):
+            net.build()
+
+    def test_illegal_pool_window(self):
+        g = Graph("t")
+        x = g.input((1, 9, 9, 2))
+        with pytest.raises(FrontendError, match="illegal pool window"):
+            g.max_pool(x, window=2)  # (9-2) % 2 != 0
+
+    def test_pool_window_larger_than_input(self):
+        g = Graph("t")
+        x = g.input((1, 4, 4, 2))
+        with pytest.raises(FrontendError, match="exceeds the spatial"):
+            g.avg_pool(x, window=8)
+
+    def test_empty_residual_body(self):
+        net = Sequential([Residual([])], input_shape=(1, 4, 4, 2),
+                         name="bad")
+        with pytest.raises(FrontendError, match="at least one body layer"):
+            net.build()
+
+    def test_weight_streaming_policy_is_a_string_not_a_bool(self):
+        from repro.passes import partition_layer_groups
+
+        with pytest.raises(ValueError, match="weight_streaming"):
+            partition_layer_groups(cnn_graphs.conv_relu(8, c_out=4),
+                                   weight_streaming=False)
+
+    def test_unknown_layer_object(self):
+        with pytest.raises(FrontendError, match="not a layer"):
+            Sequential(["relu"], input_shape=(1, 4, 4, 1), name="bad").build()
+
+    def test_graph_without_outputs(self):
+        g = Graph("t")
+        g.input((1, 4, 4, 1))
+        with pytest.raises(FrontendError, match="no outputs"):
+            g.build()
+
+    def test_foreign_tensor_ref_rejected(self):
+        g1, g2 = Graph("a"), Graph("b")
+        x = g1.input((1, 4, 4, 1))
+        g2.input((1, 4, 4, 1), name="other")
+        with pytest.raises(FrontendError, match="not a value of graph"):
+            g2.relu(x)
+
+
+class TestAvgPool:
+    """ISSUE 4 satellite: AvgPool through builder, fusion, both
+    executors, the emitter, and the resource model."""
+
+    def test_builder_emits_avg_payload(self):
+        dfg = cnn_graphs.conv_avgpool(8, c_out=4)
+        pool = dfg.node("pool0")
+        assert pool.payload == PayloadKind.AVG
+
+    def test_fusion_folds_avg_pool_as_windowed_epilogue(self):
+        from repro.passes import run_default_pipeline
+
+        res = run_default_pipeline(cnn_graphs.conv_avgpool(8, c_out=4))
+        (node,) = res.dfg.nodes
+        kinds = [e.kind for e in node.epilogue]
+        assert PayloadKind.AVG in kinds
+        assert any(e.window for e in node.epilogue if e.kind == PayloadKind.AVG)
+
+    def test_fused_equals_unfused_interp(self):
+        import numpy as np
+
+        from repro.passes import interp, run_default_pipeline
+
+        dfg = cnn_graphs.conv_avgpool(8, c_out=4)
+        env = interp.random_env(dfg, seed=1)
+        want = interp.graph_outputs(dfg, env)["pool0_out"]
+        fused = run_default_pipeline(dfg).dfg
+        got = interp.graph_outputs(fused, env)["pool0_out"]
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+    def test_run_compiled_matches_interp(self):
+        import numpy as np
+
+        from repro.core.compile_driver import compile_design
+        from repro.kernels import ops
+        from repro.passes import interp
+
+        d = compile_design(cnn_graphs.conv_avgpool(8, c_out=4))
+        env = interp.random_env(d.source, seed=2)
+        want = interp.graph_outputs(d.source, env)
+        got = ops.run_compiled(d, env, interpret=True)
+        for k in want:
+            np.testing.assert_array_equal(np.asarray(want[k]),
+                                          np.asarray(got[k]))
+
+    def test_emitter_charges_div_exit_path(self):
+        from repro.core.compile_driver import compile_design
+        from repro.core.emit_hls import emit_design
+
+        # fused: DIV rides the conv's windowed epilogue
+        d = compile_design(cnn_graphs.conv_avgpool(8, c_out=4))
+        cpp = emit_design(d)[f"{d.groups[0].name}.cpp"]
+        assert "DIV exit path" in cpp
+        # unfused: the standalone AVG node accumulates then divides
+        d2 = compile_design(cnn_graphs.conv_avgpool(8, c_out=4),
+                            run_passes=False)
+        cpp2 = emit_design(d2)[f"{d2.groups[0].name}.cpp"]
+        assert "avg-pool accumulate" in cpp2
+        assert "DIV exit path" in cpp2
+
+    def test_resource_model_charges_divider(self):
+        """The fused avg pool costs (at least) one more DSP than the max
+        pool — the constant-reciprocal divider on the exit datapath."""
+        from repro.core.compile_driver import compile_design
+
+        avg = compile_design(cnn_graphs.conv_avgpool(8, c_out=4))
+        mx = compile_design(cnn_graphs.conv_pool(8, c_out=4))
+        assert avg.max_dsp > mx.max_dsp
+
+    def test_pool_reduce_avg_is_floor_division_once(self):
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.kernels import ref
+
+        x = jnp.arange(16, dtype=jnp.int32).reshape(1, 4, 4, 1)
+        out = ref.pool_reduce("avg", x, (1, 2, 2, 1))
+        want = np.array([[[[2], [4]], [[10], [12]]]])  # floor(sum/4)
+        np.testing.assert_array_equal(np.asarray(out), want)
+        # float path divides exactly
+        xf = x.astype(jnp.float32)
+        outf = ref.pool_reduce("avg", xf, (1, 2, 2, 1))
+        np.testing.assert_allclose(np.asarray(outf),
+                                   want.astype(np.float32) + 0.5)
