@@ -30,6 +30,17 @@ test -s "$CLI_OUT/conv_relu_32_g0.cpp"
 test -s "$CLI_OUT/host_schedule.cpp"
 rm -rf "$CLI_OUT"
 
+# importer smoke (ISSUE 5): a zoo model card must compile -> emit -> run
+# end to end through `python -m repro compile <file>` (repro.frontends)
+ZOO_OUT="$(mktemp -d)"
+python -m repro zoo > /dev/null
+RUN_LOG="$(python -m repro compile examples/lenet5.json --target kv260 \
+  --emit "$ZOO_OUT" --run --quiet)"
+echo "$RUN_LOG" | grep -q "ran OK"
+test -s "$ZOO_OUT/lenet5_g0.cpp"
+test -s "$ZOO_OUT/host_schedule.cpp"
+rm -rf "$ZOO_OUT"
+
 if [ "$FULL" = 1 ]; then
   python -m benchmarks.run          # includes kernel interpret-mode checks
 else

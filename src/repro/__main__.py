@@ -3,15 +3,20 @@
 Subcommands:
 
 * ``list``
-    Named graphs (the paper suite + showcases) and device targets.
-* ``compile <graph> [--target kv260] [--strategy balanced]
-  [--weight-streaming auto|off] [--max-unroll N] [--no-passes]
-  [--emit DIR] [--save FILE] [--run] [--quiet]``
-    Build the named graph through the declarative frontend, compile it
-    under one :class:`repro.api.CompileOptions`, print the
-    cycles/BRAM/DSP/spill report, and optionally emit the HLS C++
-    kernels, persist the artifact, or execute the Pallas path
-    (interpret mode) as a numeric smoke check.
+    Named graphs (the paper suite + showcases + zoo) and device targets.
+* ``compile <graph | model.onnx | model.json> [--target kv260]
+  [--strategy balanced] [--weight-streaming auto|off] [--max-unroll N]
+  [--no-passes] [--emit DIR] [--save FILE] [--run] [--quiet]``
+    Build the named suite graph — or **import** an ONNX model / JSON
+    model card (``repro.frontends``) — compile it under one
+    :class:`repro.api.CompileOptions`, print the cycles/BRAM/DSP/spill
+    report, and optionally emit the HLS C++ kernels, persist the
+    artifact, or execute the Pallas path (interpret mode) as a numeric
+    smoke check.  Imported weights ride along into ``--run``.
+* ``zoo [--export DIR]``
+    The bundled model zoo (LeNet-5, tiny-VGG, residual edge model);
+    ``--export`` writes each model's JSON card (``examples/lenet5.json``
+    is one of these).
 
 Exit status: 0 on success, 1 on an infeasible design or failed run,
 2 on bad arguments (argparse convention).
@@ -19,6 +24,7 @@ Exit status: 0 on success, 1 on an infeasible design or failed run,
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 
 
@@ -34,13 +40,66 @@ def _cmd_list() -> int:
     return 0
 
 
-def _cmd_compile(args: argparse.Namespace) -> int:
+def _cmd_zoo(args: argparse.Namespace) -> int:
+    from repro.frontends import zoo
+
+    print("zoo models (compile with `python -m repro compile <name>`):")
+    for name, make in sorted(zoo.ZOO.items()):
+        dfg = make()
+        consts = sum(
+            v.num_elements for v in dfg.values.values() if v.is_constant
+        )
+        print(f"  {name:<18} {len(dfg.nodes):>2} layers, "
+              f"{consts / 1024:.1f} Ki params, "
+              f"input {dfg.values[dfg.graph_inputs[0]].shape}")
+    if args.export:
+        os.makedirs(args.export, exist_ok=True)
+        for name in sorted(zoo.ZOO):
+            path = os.path.join(args.export, f"{name}.json")
+            with open(path, "w") as f:
+                f.write(zoo.card_json(name))
+            print(f"exported {path}")
+    return 0
+
+
+def _load_graph(spec: str, quiet: bool = False):
+    """(dfg, params) for a suite name or an importable model file.
+
+    Suite names win over same-named filesystem entries (a stray
+    ``lenet5/`` directory in cwd must not shadow the zoo graph);
+    model files are recognized by extension or an explicit path.
+    """
     from repro import api
 
     graphs = api.suite()
-    if args.graph not in graphs:
-        print(f"error: unknown graph {args.graph!r} — run "
-              "`python -m repro list`", file=sys.stderr)
+    ext = os.path.splitext(spec)[1].lower()
+    if spec in graphs and ext not in (".onnx", ".json"):
+        return graphs[spec](), {}
+    if ext in (".onnx", ".json") or os.path.exists(spec):
+        from repro import frontends
+
+        model = frontends.import_model(spec)
+        missing = model.missing_params()
+        if missing and not quiet:
+            print(f"# note: {len(missing)} constant(s) have no imported "
+                  f"weights (random init): {', '.join(missing[:6])}"
+                  f"{', …' if len(missing) > 6 else ''}")
+        return model.dfg, model.params
+    raise ValueError(
+        f"unknown graph {spec!r} — run `python -m repro list`, or "
+        "pass a .onnx / .json model file"
+    )
+
+
+def _cmd_compile(args: argparse.Namespace) -> int:
+    from repro import api
+
+    try:
+        dfg, params = _load_graph(args.graph, quiet=args.quiet)
+    except OSError as e:
+        # missing file, directory-instead-of-file, unreadable path, …:
+        # all bad arguments (exit 2), never a raw traceback
+        print(f"error: {e}", file=sys.stderr)
         return 2
     options = api.CompileOptions(
         target=args.target,
@@ -49,7 +108,7 @@ def _cmd_compile(args: argparse.Namespace) -> int:
         max_unroll=args.max_unroll,
         passes=() if args.no_passes else None,
     )
-    art = api.compile_graph(graphs[args.graph](), options)
+    art = api.compile_graph(dfg, options)
     if not args.quiet:
         print(art.report())
     if args.emit:
@@ -58,7 +117,7 @@ def _cmd_compile(args: argparse.Namespace) -> int:
     if args.save:
         print(f"saved {art.save(args.save)}")
     if args.run:
-        out = art.run(interpret=True)
+        out = art.run(params=params or None, interpret=True)
         outs = out if isinstance(out, dict) else {"output": out}
         for name, arr in outs.items():
             print(f"ran OK: {name} shape {tuple(arr.shape)} dtype {arr.dtype}")
@@ -68,13 +127,19 @@ def _cmd_compile(args: argparse.Namespace) -> int:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro",
-        description="MING reproduction CLI: build + compile + emit "
+        description="MING reproduction CLI: build/import + compile + emit "
                     "through the public API",
     )
     sub = ap.add_subparsers(dest="cmd", required=True)
     sub.add_parser("list", help="named graphs and device targets")
-    c = sub.add_parser("compile", help="compile a named graph")
-    c.add_argument("graph", help="suite graph name (see `list`)")
+    z = sub.add_parser("zoo", help="the bundled model zoo")
+    z.add_argument("--export", metavar="DIR",
+                   help="write each zoo model's JSON card here")
+    c = sub.add_parser("compile",
+                       help="compile a named graph or model file")
+    c.add_argument("graph",
+                   help="suite graph name (see `list`), or a path to a "
+                        ".onnx model / .json model card")
     c.add_argument("--target", default="kv260",
                    help="device preset (kv260 | zu3eg)")
     c.add_argument("--strategy", default="balanced",
@@ -89,12 +154,15 @@ def main(argv=None) -> int:
     c.add_argument("--save", metavar="FILE",
                    help="persist the CompiledArtifact (pickle)")
     c.add_argument("--run", action="store_true",
-                   help="execute the Pallas path (interpret mode)")
+                   help="execute the Pallas path (interpret mode) with "
+                        "imported weights when available")
     c.add_argument("--quiet", action="store_true",
                    help="suppress the report table")
     args = ap.parse_args(argv)
     if args.cmd == "list":
         return _cmd_list()
+    if args.cmd == "zoo":
+        return _cmd_zoo(args)
     from repro.passes import PartitionError
 
     try:

@@ -44,6 +44,7 @@ from .builder import (
     AvgPool,
     Conv2D,
     Dense,
+    Flatten,
     FrontendError,
     Graph,
     MaxPool,
@@ -51,20 +52,25 @@ from .builder import (
     Residual,
     Sequential,
     TensorRef,
+    Transpose,
 )
 
 
 def suite() -> dict:
     """The named graphs the CLI / benchmarks can compile out of the box:
-    the paper suite plus the fusion and weight-streaming showcases —
-    every one built through the declarative frontend."""
+    the paper suite, the fusion and weight-streaming showcases, and the
+    model zoo (``repro.frontends.zoo``) — every one built through the
+    declarative frontend, every one a per-target row in
+    ``BENCH_smoke.json``."""
     from repro.core import cnn_graphs
+    from repro.frontends import zoo
 
     out = dict(cnn_graphs.PAPER_SUITE)
     out["conv_pool_32"] = lambda: cnn_graphs.conv_pool(32)
     out["conv_avgpool_32"] = lambda: cnn_graphs.conv_avgpool(32)
     out["fat_conv_16"] = cnn_graphs.fat_conv
     out["fat_cascade_16"] = cnn_graphs.fat_cascade
+    out.update(zoo.ZOO)
     return out
 
 
@@ -84,6 +90,7 @@ __all__ = [
     "AvgPool",
     "Conv2D",
     "Dense",
+    "Flatten",
     "FrontendError",
     "Graph",
     "MaxPool",
@@ -91,5 +98,6 @@ __all__ = [
     "Residual",
     "Sequential",
     "TensorRef",
+    "Transpose",
     "suite",
 ]

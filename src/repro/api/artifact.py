@@ -158,6 +158,15 @@ class CompiledArtifact:
         nothing else; unbound constants fall back to the same random
         init.  Returns the output array for single-output graphs, else
         ``{name: array}``.
+
+        **Batching** (interpret mode): every input may carry one extra
+        *leading* batch dimension over its compiled shape — the batch
+        is executed sample-by-sample through the compiled schedule
+        (exactly what the sequential host schedule would do for B
+        frames) and the outputs are stacked along a new leading axis.
+        All inputs must agree on the batch extent; mixing batched and
+        unbatched inputs is an error.  Imported classifiers
+        (``repro.frontends``) validate on small input batches this way.
         """
         from repro.kernels import ops
         from repro.passes import interp
@@ -186,6 +195,23 @@ class CompiledArtifact:
                 f"{src.name}: missing graph input(s) {missing} — bind "
                 "every input, or none for a random smoke run"
             )
+        batch = self._batch_extent(src, inputs)
+        if batch is not None:
+            per_sample = [
+                self.run(
+                    {k: v[i] for k, v in inputs.items()},
+                    params, interpret=interpret, jit=jit, seed=seed,
+                )
+                for i in range(batch)
+            ]
+            import numpy as _np
+
+            if len(src.graph_outputs) == 1:
+                return _np.stack([_np.asarray(o) for o in per_sample])
+            return {
+                k: _np.stack([_np.asarray(o[k]) for o in per_sample])
+                for k in src.graph_outputs
+            }
         constants = sorted(
             n for n, val in src.values.items() if val.is_constant
         )
@@ -218,6 +244,45 @@ class CompiledArtifact:
         if len(src.graph_outputs) == 1:
             return out[src.graph_outputs[0]]
         return out
+
+    @staticmethod
+    def _batch_extent(src: DFG, inputs: Mapping) -> Optional[int]:
+        """The shared leading batch extent when *every* bound input has
+        exactly one extra leading dim over its compiled shape; ``None``
+        for per-sample shapes; a loud error for anything mixed."""
+        if not inputs:
+            return None
+        batches = set()
+        for k, v in inputs.items():
+            want = src.values[k].shape
+            got = tuple(getattr(v, "shape", ()))
+            if got == want:
+                batches.add(None)
+            elif len(got) == len(want) + 1 and got[1:] == want:
+                batches.add(int(got[0]))
+            else:
+                raise ValueError(
+                    f"{src.name}: input {k!r} has shape {got}; expected "
+                    f"{want} or (B,) + {want} for a batched run"
+                )
+        if batches == {None}:
+            return None
+        if batches == {0}:
+            raise ValueError(
+                f"{src.name}: batched run with batch extent 0 — there "
+                "is nothing to execute (and no dtype to shape an empty "
+                "result with)"
+            )
+        if len(batches) != 1:
+            saw = sorted(
+                ("unbatched" if b is None else b for b in batches), key=str
+            )
+            raise ValueError(
+                f"{src.name}: inconsistent batching across inputs — "
+                f"every input must carry the same leading batch extent "
+                f"(saw {saw})"
+            )
+        return batches.pop()
 
     # -- reporting -----------------------------------------------------------
 

@@ -37,8 +37,10 @@ from repro.core.ir import (
     Value,
     make_conv2d_op,
     make_elementwise_op,
+    make_flatten_op,
     make_matmul_op,
     make_pool2d_op,
+    make_transpose_op,
 )
 
 
@@ -233,6 +235,56 @@ class Graph:
         return self._pool(x, window, stride, PayloadKind.AVG,
                           name=name, out=out)
 
+    def transpose(self, x: TensorRef, perm: Sequence[int], *,
+                  name: Optional[str] = None,
+                  out: Optional[str] = None) -> TensorRef:
+        """Axis permutation (the NCHW↔NHWC bridge the ONNX importer
+        inserts; ``repro.passes.layout`` cancels interior pairs)."""
+        nm = self._next("transpose", name)
+        self._check(nm, x)
+        p = tuple(int(i) for i in perm)
+        if sorted(p) != list(range(x.rank)):
+            _fail(nm, f"perm {p} is not a permutation of the input's "
+                      f"{x.rank} axes (shape {x.shape})")
+        oname = out if out is not None else f"{nm}_out"
+        self.dfg.add_value(
+            Value(oname, tuple(x.shape[i] for i in p), x.elem_bits)
+        )
+        self.dfg.add_node(
+            make_transpose_op(nm, x.name, oname, in_shape=x.shape, perm=p,
+                              elem_bits=x.elem_bits)
+        )
+        return self._ref(oname)
+
+    def flatten(self, x: TensorRef, *, order: Optional[Sequence[int]] = None,
+                name: Optional[str] = None,
+                out: Optional[str] = None) -> TensorRef:
+        """Collapse every non-batch axis into one feature axis.
+
+        ``order`` linearizes the non-batch axes in that sequence
+        (default ascending — row-major over the producer's layout);
+        the classifier heads of imported models flatten through this
+        before their first ``dense``."""
+        nm = self._next("flatten", name)
+        self._check(nm, x)
+        if x.rank < 2:
+            _fail(nm, f"flatten needs a rank >= 2 input, got rank {x.rank} "
+                      f"(shape {x.shape})")
+        o = tuple(int(i) for i in order) if order is not None else None
+        if o is not None and sorted(o) != list(range(1, x.rank)):
+            _fail(nm, f"order {o} is not a permutation of the non-batch "
+                      f"axes 1..{x.rank - 1}")
+        feat = 1
+        for s in x.shape[1:]:
+            feat *= s
+        oname = out if out is not None else f"{nm}_out"
+        self.dfg.add_value(Value(oname, (x.shape[0], feat), x.elem_bits))
+        self.dfg.add_node(
+            make_flatten_op(nm, x.name, oname, in_shape=x.shape, order=o,
+                            elem_bits=x.elem_bits)
+        )
+        return self._ref(oname)
+
     def dense(self, x: TensorRef, units: int, *,
               name: Optional[str] = None, weight: Optional[str] = None,
               out: Optional[str] = None) -> TensorRef:
@@ -357,6 +409,40 @@ class Dense:
 
 
 @dataclass(frozen=True)
+class Transpose:
+    perm: tuple
+    name: Optional[str] = None
+    out: Optional[str] = None
+
+    def __init__(self, perm: Sequence[int], name: Optional[str] = None,
+                 out: Optional[str] = None) -> None:
+        object.__setattr__(self, "perm", tuple(perm))
+        object.__setattr__(self, "name", name)
+        object.__setattr__(self, "out", out)
+
+    def apply(self, g: Graph, x: TensorRef) -> TensorRef:
+        return g.transpose(x, self.perm, name=self.name, out=self.out)
+
+
+@dataclass(frozen=True)
+class Flatten:
+    order: Optional[tuple] = None
+    name: Optional[str] = None
+    out: Optional[str] = None
+
+    def __init__(self, order: Optional[Sequence[int]] = None,
+                 name: Optional[str] = None,
+                 out: Optional[str] = None) -> None:
+        object.__setattr__(self, "order",
+                           tuple(order) if order is not None else None)
+        object.__setattr__(self, "name", name)
+        object.__setattr__(self, "out", out)
+
+    def apply(self, g: Graph, x: TensorRef) -> TensorRef:
+        return g.flatten(x, order=self.order, name=self.name, out=self.out)
+
+
+@dataclass(frozen=True)
 class Residual:
     """``y = add(body(x), x)`` — the skip connection combinator."""
 
@@ -382,7 +468,8 @@ class Residual:
         return g.add(cur, x, name=self.name, out=self.out)
 
 
-Layer = Union[Conv2D, ReLU, Activation, MaxPool, AvgPool, Dense, Residual]
+Layer = Union[Conv2D, ReLU, Activation, MaxPool, AvgPool, Dense, Residual,
+              Transpose, Flatten]
 
 
 def _apply_layer(g: Graph, layer, x: TensorRef) -> TensorRef:

@@ -141,6 +141,76 @@ def einsum_spec(op: GenericOp) -> str:
     return ",".join(subs[:-1]) + "->" + subs[-1]
 
 
+def reorder_spec(
+    op: GenericOp,
+) -> tuple[str, tuple[int, ...]] | None:
+    """Recognize pure data-movement ops from their maps alone.
+
+    Returns ``("transpose", perm)`` for an axis permutation
+    (:func:`repro.core.ir.make_transpose_op`), ``("flatten", order)``
+    for a mixed-radix linearization
+    (:func:`repro.core.ir.make_flatten_op` — ``order`` is the
+    linearization order of the non-batch axes), or ``None`` for
+    anything else.  Shared by the interpreter, the Pallas lowering, and
+    the layout pass so all three agree on what a reorder op *is*
+    without a payload flag.
+    """
+    from .ir import PayloadKind  # local: avoid widening module surface
+
+    if (
+        op.payload != PayloadKind.IDENTITY
+        or len(op.inputs) != 1
+        or any(t != IteratorType.PARALLEL for t in op.iterator_types)
+    ):
+        return None
+    imap, omap = op.indexing_maps
+    n = op.n_dims
+    # transpose: identity output map, permuted single-dim input map
+    if omap.is_identity() and all(e.is_single_dim() for e in imap.results):
+        dims = tuple(e.terms[0][0] for e in imap.results)
+        if len(imap.results) == n and sorted(dims) == list(range(n)):
+            if imap.is_identity():
+                return None  # plain wire, canonicalize's business
+            # input axis k is mapped by loop dim dims[k]; the output
+            # axis order is the inverse permutation
+            perm = [0] * n
+            for k, d in enumerate(dims):
+                perm[d] = k
+            return ("transpose", tuple(perm))
+    # flatten: identity input map, (d0, Σ stride_ax·d_ax) output map
+    if (
+        imap.is_identity()
+        and len(omap.results) == 2
+        and omap.results[0] == AffineExpr.dim(0)
+        and omap.results[1].const == 0
+    ):
+        terms = dict(omap.results[1].terms)
+        if set(terms) != set(range(1, n)) or any(c < 1 for c in terms.values()):
+            return None
+        # recover the linearization order greedily from the innermost
+        # stride outwards.  Extent-1 axes tie on stride with their
+        # neighbour (they don't advance it), so they must be consumed
+        # first at each stride level — any order among equal-stride
+        # extent-1 axes yields the identical output map.
+        remaining = dict(terms)
+        rev: list[int] = []
+        stride = 1
+        while remaining:
+            cands = [ax for ax, c in remaining.items() if c == stride]
+            ones = sorted(ax for ax in cands if op.dim_extent(ax) == 1)
+            if ones:
+                ax = ones[0]
+            elif len(cands) == 1:
+                ax = cands[0]
+            else:
+                return None  # not a mixed-radix linearization
+            rev.append(ax)
+            del remaining[ax]
+            stride *= op.dim_extent(ax)
+        return ("flatten", tuple(reversed(rev)))
+    return None
+
+
 def classify_kernel(op: GenericOp) -> KernelInfo:
     sw = detect_sliding_window(op)
     classes = classify_iterators(op)

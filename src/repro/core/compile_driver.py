@@ -15,8 +15,9 @@ explicit **schedule IR**:
   is just the degenerate case (``partitioned == False``).
 * :func:`compile_design` — ``compile_design(dfg, target) ->
   CompiledDesign``: pass pipeline → cycle-balanced partitioning →
-  per-group streaming + DSE.  (``compile`` is kept as a deprecating
-  alias; the public name no longer shadows the Python builtin.)
+  per-group streaming + DSE.  (The historical ``compile`` alias
+  finished its deprecation cycle and was removed in ISSUE 5; accessing
+  it raises an ``AttributeError`` that names the new entry point.)
 * :class:`CompileOptions` — the one frozen knob bundle (target preset
   or custom :class:`Target`, partition strategy, pass-pipeline
   selection, weight-streaming policy, DSE unroll cap), validated at
@@ -34,7 +35,6 @@ The user-facing handle wrapping all of this is
 from __future__ import annotations
 
 import math
-import warnings
 from dataclasses import dataclass, field
 from typing import Optional, TYPE_CHECKING
 
@@ -420,16 +420,17 @@ def compile_design(
     return design
 
 
-def compile(dfg: DFG, target: Target = KV260, *,
-            strategy: str = "balanced",
-            run_passes: bool = True) -> CompiledDesign:  # noqa: A001
-    """Deprecated alias for :func:`compile_design` (the old name shadows
-    the Python builtin)."""
-    warnings.warn(
-        "repro.core.compile_driver.compile is deprecated; use "
-        "compile_design (same semantics, no builtin shadowing)",
-        DeprecationWarning,
-        stacklevel=2,
+def __getattr__(name: str):
+    """The ``compile`` alias (PR 2's original driver name, which
+    shadowed the Python builtin) finished its deprecation cycle in
+    ISSUE 5: every caller was migrated to :func:`compile_design` in
+    PR 4, and the alias is now gone rather than warning forever."""
+    if name == "compile":
+        raise AttributeError(
+            "repro.core.compile_driver.compile was removed after its "
+            "deprecation cycle — call compile_design(dfg, ...) (same "
+            "semantics, no builtin shadowing)"
+        )
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}"
     )
-    return compile_design(dfg, target, strategy=strategy,
-                          run_passes=run_passes)

@@ -603,6 +603,98 @@ def make_elementwise_op(
     )
 
 
+def make_transpose_op(
+    name: str,
+    input_name: str,
+    output_name: str,
+    *,
+    in_shape: Sequence[int],
+    perm: Sequence[int],
+    elem_bits: int = 8,
+) -> GenericOp:
+    """Axis permutation as a pure-parallel data-movement op.
+
+    ``out[i0, …] = in[i_{inv[0]}, …]`` with ``out.shape[p] =
+    in_shape[perm[p]]``.  Loop dims index the *output* tensor (output
+    map is the identity); the input map carries the permutation, which
+    is how the analyses (:func:`repro.core.analysis.reorder_spec`)
+    recover it without a payload flag.  The layout-canonicalization
+    pass (``repro.passes.layout``) exists to cancel these; the ones
+    that survive sit at the graph boundary (ONNX's NCHW contract).
+    """
+    rank = len(in_shape)
+    p = tuple(int(x) for x in perm)
+    if sorted(p) != list(range(rank)):
+        raise ValueError(f"{name}: perm {p} is not a permutation of "
+                         f"0..{rank - 1}")
+    inv = [0] * rank
+    for pos, ax in enumerate(p):
+        inv[ax] = pos
+    imap = AffineMap.of(rank, [AffineExpr.dim(inv[k]) for k in range(rank)])
+    omap = AffineMap.identity(rank)
+    out_shape = tuple(int(in_shape[ax]) for ax in p)
+    return GenericOp(
+        name=name,
+        inputs=(input_name,),
+        output=output_name,
+        indexing_maps=(imap, omap),
+        iterator_types=tuple(IteratorType.PARALLEL for _ in range(rank)),
+        dim_sizes=out_shape,
+        payload=PayloadKind.IDENTITY,
+        elem_bits=elem_bits,
+    )
+
+
+def make_flatten_op(
+    name: str,
+    input_name: str,
+    output_name: str,
+    *,
+    in_shape: Sequence[int],
+    order: Optional[Sequence[int]] = None,
+    elem_bits: int = 8,
+) -> GenericOp:
+    """Linearize axes ``1..r-1`` into one feature axis (rank-2 output).
+
+    ``order`` is the linearization order of the non-batch axes
+    (default: ascending — row-major over the input layout).  The output
+    map's second result is the affine mixed-radix expression
+    ``Σ stride_ax · d_ax``.  An in-order linearization (ascending
+    ``order``) is a pure wire on the stream; an out-of-order one
+    buffers the tensor (``streaming.plan_node`` charges it) — the
+    layout pass's transpose→flatten fold merges two data movements
+    into this one node, trading a node and a stream, not the buffer.
+    """
+    rank = len(in_shape)
+    if rank < 2:
+        raise ValueError(f"{name}: flatten needs rank >= 2, got {rank}")
+    o = tuple(int(x) for x in order) if order is not None \
+        else tuple(range(1, rank))
+    if sorted(o) != list(range(1, rank)):
+        raise ValueError(f"{name}: order {o} is not a permutation of "
+                         f"1..{rank - 1}")
+    stride = 1
+    coeffs: dict[int, int] = {}
+    for ax in reversed(o):
+        coeffs[ax] = stride
+        stride *= int(in_shape[ax])
+    expr = AffineExpr((), 0)
+    for ax in o:
+        expr = expr + AffineExpr.dim(ax, coeffs[ax])
+    imap = AffineMap.identity(rank)
+    omap = AffineMap.of(rank, [AffineExpr.dim(0), expr])
+    return GenericOp(
+        name=name,
+        inputs=(input_name,),
+        output=output_name,
+        indexing_maps=(imap, omap),
+        iterator_types=tuple(IteratorType.PARALLEL for _ in range(rank)),
+        dim_sizes=tuple(int(s) for s in in_shape),
+        payload=PayloadKind.IDENTITY,
+        elem_bits=elem_bits,
+    )
+
+
 def make_pool2d_op(
     name: str,
     input_name: str,

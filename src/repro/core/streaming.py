@@ -28,6 +28,7 @@ from .analysis import (
     KernelClass,
     KernelInfo,
     classify_kernel,
+    reorder_spec,
     window_geometry,
 )
 from .ir import DFG, GenericOp, IteratorType, Value
@@ -252,6 +253,20 @@ def plan_node(op: GenericOp, dfg: DFG) -> NodePlan:
         trips = tuple(op.dim_extent(d) for d in order)
         plan.loops = LoopNest(trips, tuple(t > 1 for t in trips), pipeline_depth=2)
         plan.stream_loop = _first_unrollable(plan.loops)
+        # a reorder op that changes the stream order (transpose, or a
+        # flatten whose linearization is not the arrival order) must
+        # buffer the whole tensor before the first out-of-order element
+        # can leave — charge it; an in-order flatten is a pure wire.
+        spec = reorder_spec(op)
+        if spec is not None:
+            kind, arg = spec
+            in_order = (
+                kind == "flatten" and arg == tuple(range(1, op.n_dims))
+            )
+            if not in_order:
+                plan.line_buffer_bits = (
+                    dfg.values[op.inputs[0]].total_bits
+                )
 
     plan.loop_dims = tuple(order)
 
@@ -457,4 +472,8 @@ def _first_output_cycles(plan: NodePlan) -> int:
         for d in plan.info.classes.reduction:
             red *= op.dim_extent(d)
         return red
+    if plan.line_buffer_bits:
+        # a buffering reorder (transpose) emits nothing until the whole
+        # tensor has arrived
+        return plan.loops.total_trip
     return 1

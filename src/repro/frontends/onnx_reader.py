@@ -1,0 +1,629 @@
+"""ONNX importer: trained NCHW models onto the NHWC builder frontend.
+
+Dependency-optional by construction: when the ``onnx`` package is
+installed it does the parsing (``onnx.load`` + ``numpy_helper``);
+otherwise a minimal vendored **protobuf wire-format decoder** reads the
+node / initializer / value-info subset this importer needs directly
+from the ``.onnx`` bytes — the container ships no ONNX, and a model zoo
+frontend that silently required one would never run in CI.
+
+Supported operator subset (everything the builder can express):
+``Conv`` (groups=1, dilation 1, stride 1, SAME padding), ``Relu``,
+``MaxPool`` / ``AveragePool`` (square VALID windows), ``Gemm``
+(α=1, transA=0), ``Add``, ``Flatten`` (axis=1).  Anything else raises
+:class:`OnnxImportError` naming the node and the constraint.
+
+Layout: ONNX is NCHW, the streaming kernels are NHWC.  Every
+layout-sensitive op is imported *faithfully* inside an explicit
+transpose sandwich (NCHW→NHWC → op → NHWC→NCHW) so each imported value
+keeps its ONNX shape; the layout-canonicalization pass
+(``repro.passes.layout``) then cancels the interior pairs and folds the
+final NHWC→NCHW transpose into the classifier head's flatten, leaving
+only the graph-boundary transposes the external NCHW contract requires
+(for a classifier, exactly one: the input bridge; a model with a
+rank-4 NCHW output also keeps the output-side bridge).  Imported weights are re-laid out at import time
+(OIHW→HWIO for convs, ``transB`` for Gemm) and returned as
+``ImportedModel.params`` keyed by the DFG's constant value names —
+``CompiledArtifact.run(params=...)`` executes the trained network.
+
+Resource modeling note: streams are costed at the paper's int8 PTQ
+width (``elem_bits=8``) regardless of the ONNX tensor dtype; numerics
+at run time follow the imported arrays' dtype.
+"""
+from __future__ import annotations
+
+import os
+import re
+import struct
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .base import ImportedModel
+
+NCHW2NHWC = (0, 2, 3, 1)
+NHWC2NCHW = (0, 3, 1, 2)
+
+SUPPORTED_OPS = ("Conv", "Relu", "MaxPool", "AveragePool", "Gemm", "Add",
+                 "Flatten")
+
+
+class OnnxImportError(ValueError):
+    """The model is malformed or uses something outside the subset."""
+
+
+def _fail(msg: str) -> None:
+    raise OnnxImportError(msg)
+
+
+# ---------------------------------------------------------------------------
+# Normalized model (produced by both parsing paths)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class OnnxNode:
+    op_type: str
+    name: str
+    inputs: list[str]
+    outputs: list[str]
+    attrs: dict[str, object] = field(default_factory=dict)
+
+
+@dataclass
+class OnnxGraph:
+    name: str
+    inputs: list[tuple[str, tuple[int, ...]]]   # non-initializer inputs
+    outputs: list[str]
+    nodes: list[OnnxNode]
+    initializers: dict[str, np.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Vendored protobuf wire decoder (the no-`onnx` path)
+# ---------------------------------------------------------------------------
+
+
+def _varint(buf: bytes, i: int) -> tuple[int, int]:
+    out = 0
+    shift = 0
+    while True:
+        if i >= len(buf):
+            _fail("truncated varint in protobuf stream")
+        b = buf[i]
+        i += 1
+        out |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return out, i
+        shift += 7
+        if shift > 70:
+            _fail("varint overflow in protobuf stream")
+
+
+def _signed64(v: int) -> int:
+    return v - (1 << 64) if v >= (1 << 63) else v
+
+
+def _fields(buf: bytes):
+    """Yield ``(field_number, wire_type, value)`` triples; length-
+    delimited values are bytes, varints ints, fixed32/64 raw ints."""
+    i = 0
+    n = len(buf)
+    while i < n:
+        tag, i = _varint(buf, i)
+        fno, wt = tag >> 3, tag & 7
+        if wt == 0:
+            v, i = _varint(buf, i)
+        elif wt == 1:
+            if i + 8 > n:
+                _fail("truncated fixed64")
+            v = int.from_bytes(buf[i:i + 8], "little")
+            i += 8
+        elif wt == 2:
+            ln, i = _varint(buf, i)
+            if i + ln > n:
+                _fail("truncated length-delimited field")
+            v = buf[i:i + ln]
+            i += ln
+        elif wt == 5:
+            if i + 4 > n:
+                _fail("truncated fixed32")
+            v = int.from_bytes(buf[i:i + 4], "little")
+            i += 4
+        else:
+            _fail(f"unsupported protobuf wire type {wt}")
+        yield fno, wt, v
+
+
+def _collect(buf: bytes) -> dict[int, list[tuple[int, object]]]:
+    out: dict[int, list[tuple[int, object]]] = {}
+    for fno, wt, v in _fields(buf):
+        out.setdefault(fno, []).append((wt, v))
+    return out
+
+
+def _ints(entries: list[tuple[int, object]]) -> list[int]:
+    """A repeated int64 field: scalar entries or packed blocks."""
+    vals: list[int] = []
+    for wt, v in entries:
+        if wt == 0:
+            vals.append(_signed64(v))
+        elif wt == 2:
+            i = 0
+            while i < len(v):
+                x, i = _varint(v, i)
+                vals.append(_signed64(x))
+        else:
+            _fail("unexpected wire type for repeated int field")
+    return vals
+
+
+def _one_int(fields: dict, fno: int, default: int = 0) -> int:
+    entries = fields.get(fno)
+    if not entries:
+        return default
+    return _ints(entries)[-1]
+
+
+def _one_bytes(fields: dict, fno: int, default: bytes = b"") -> bytes:
+    entries = fields.get(fno)
+    if not entries:
+        return default
+    wt, v = entries[-1]
+    if wt != 2:
+        _fail(f"field {fno}: expected length-delimited, got wire type {wt}")
+    return v
+
+
+def _one_str(fields: dict, fno: int, default: str = "") -> str:
+    b = _one_bytes(fields, fno, default.encode())
+    return b.decode("utf-8", "replace")
+
+
+def _one_float(fields: dict, fno: int, default: float = 0.0) -> float:
+    entries = fields.get(fno)
+    if not entries:
+        return default
+    wt, v = entries[-1]
+    if wt != 5:
+        _fail(f"field {fno}: expected fixed32 float, got wire type {wt}")
+    return struct.unpack("<f", int(v).to_bytes(4, "little"))[0]
+
+
+#: TensorProto.DataType → numpy (the subset a CNN checkpoint uses)
+_DTYPES = {1: np.float32, 2: np.uint8, 3: np.int8, 6: np.int32,
+           7: np.int64, 11: np.float64}
+
+
+def _tensor(buf: bytes) -> tuple[str, np.ndarray]:
+    f = _collect(buf)
+    dims = tuple(_ints(f.get(1, [])))
+    dtype_code = _one_int(f, 2, 1)
+    name = _one_str(f, 8)
+    np_dtype = _DTYPES.get(dtype_code)
+    if np_dtype is None:
+        _fail(f"initializer {name!r}: unsupported data_type {dtype_code}")
+    raw = _one_bytes(f, 9)
+    if raw:
+        arr = np.frombuffer(raw, dtype=np.dtype(np_dtype).newbyteorder("<"))
+    elif np_dtype is np.float32 and 4 in f:
+        vals = []
+        for wt, v in f[4]:
+            if wt == 2:
+                vals.extend(np.frombuffer(v, dtype="<f4").tolist())
+            elif wt == 5:
+                vals.append(struct.unpack(
+                    "<f", int(v).to_bytes(4, "little"))[0])
+        arr = np.asarray(vals, dtype=np.float32)
+    elif 7 in f:
+        arr = np.asarray(_ints(f[7]), dtype=np.int64)
+    elif 5 in f:
+        arr = np.asarray(_ints(f[5]), dtype=np.int32).astype(np_dtype)
+    else:
+        arr = np.zeros(0, dtype=np_dtype)
+    want = int(np.prod(dims)) if dims else 1
+    if arr.size != want:
+        _fail(f"initializer {name!r}: {arr.size} elements for dims {dims}")
+    return name, arr.reshape(dims).astype(np_dtype, copy=False)
+
+
+def _value_info(buf: bytes) -> tuple[str, tuple[int, ...]]:
+    f = _collect(buf)
+    name = _one_str(f, 1)
+    tensor_type = _collect(_one_bytes(_collect(_one_bytes(f, 2)), 1))
+    shape_msg = _one_bytes(tensor_type, 2)
+    dims: list[int] = []
+    for wt, v in _collect(shape_msg).get(1, []):
+        if wt != 2:
+            continue
+        d = _collect(v)  # type: ignore[arg-type]
+        if 2 in d and 1 not in d:
+            _fail(f"graph input {name!r}: symbolic dimension "
+                  f"{_one_str(d, 2)!r} — static shapes required")
+        dims.append(_one_int(d, 1))
+    return name, tuple(dims)
+
+
+def _value_name(buf: bytes) -> str:
+    """Just a ValueInfoProto's name — graph *outputs* only need names,
+    and parsing their (possibly symbolic, shape-inferred) type info
+    would reject models the `onnx`-package path accepts."""
+    return _one_str(_collect(buf), 1)
+
+
+def _attribute(buf: bytes) -> tuple[str, object]:
+    f = _collect(buf)
+    name = _one_str(f, 1)
+    if 8 in f:                    # ints
+        return name, _ints(f[8])
+    if 3 in f:                    # i
+        return name, _one_int(f, 3)
+    if 2 in f:                    # f
+        return name, _one_float(f, 2)
+    if 4 in f:                    # s
+        return name, _one_bytes(f, 4).decode("utf-8", "replace")
+    if 5 in f:                    # t (tensor)
+        return name, _tensor(_one_bytes(f, 5))[1]
+    return name, None
+
+
+def _node(buf: bytes) -> OnnxNode:
+    f = _collect(buf)
+    return OnnxNode(
+        op_type=_one_str(f, 4),
+        name=_one_str(f, 3),
+        inputs=[v.decode("utf-8", "replace")
+                for wt, v in f.get(1, []) if wt == 2],
+        outputs=[v.decode("utf-8", "replace")
+                 for wt, v in f.get(2, []) if wt == 2],
+        attrs=dict(_attribute(v) for wt, v in f.get(5, []) if wt == 2),
+    )
+
+
+def decode_wire(data: bytes) -> OnnxGraph:
+    """Parse ModelProto bytes with the vendored decoder."""
+    model = _collect(data)
+    graph_buf = _one_bytes(model, 7)
+    if not graph_buf:
+        _fail("no GraphProto in the model (is this an .onnx file?)")
+    g = _collect(graph_buf)
+    inits = dict(_tensor(v) for wt, v in g.get(5, []) if wt == 2)
+    inputs = [_value_info(v) for wt, v in g.get(11, []) if wt == 2]
+    outputs = [_value_name(v) for wt, v in g.get(12, []) if wt == 2]
+    nodes = [_node(v) for wt, v in g.get(1, []) if wt == 2]
+    return OnnxGraph(
+        name=_one_str(g, 2, "onnx_model"),
+        inputs=[(n, s) for n, s in inputs if n not in inits],
+        outputs=outputs,
+        nodes=nodes,
+        initializers=inits,
+    )
+
+
+# ---------------------------------------------------------------------------
+# `onnx` package path (used when installed)
+# ---------------------------------------------------------------------------
+
+
+def _decode_with_onnx_pkg(data: bytes) -> OnnxGraph:  # pragma: no cover
+    import onnx
+    from onnx import numpy_helper
+
+    model = onnx.load_model_from_string(data)
+    g = model.graph
+    inits = {t.name: numpy_helper.to_array(t) for t in g.initializer}
+    inputs = []
+    for vi in g.input:
+        if vi.name in inits:
+            continue
+        dims = []
+        for d in vi.type.tensor_type.shape.dim:
+            if d.dim_param:
+                _fail(f"graph input {vi.name!r}: symbolic dimension "
+                      f"{d.dim_param!r} — static shapes required")
+            dims.append(d.dim_value)
+        inputs.append((vi.name, tuple(dims)))
+    nodes = []
+    for n in g.node:
+        attrs: dict[str, object] = {}
+        for a in n.attribute:
+            if a.type == onnx.AttributeProto.INT:
+                attrs[a.name] = a.i
+            elif a.type == onnx.AttributeProto.INTS:
+                attrs[a.name] = list(a.ints)
+            elif a.type == onnx.AttributeProto.FLOAT:
+                attrs[a.name] = a.f
+            elif a.type == onnx.AttributeProto.STRING:
+                attrs[a.name] = a.s.decode("utf-8", "replace")
+            elif a.type == onnx.AttributeProto.TENSOR:
+                attrs[a.name] = numpy_helper.to_array(a.t)
+        nodes.append(OnnxNode(n.op_type, n.name, list(n.input),
+                              list(n.output), attrs))
+    return OnnxGraph(g.name or "onnx_model", inputs,
+                     [o.name for o in g.output], nodes, inits)
+
+
+# ---------------------------------------------------------------------------
+# Mapping onto the builder
+# ---------------------------------------------------------------------------
+
+
+class _Names:
+    """ONNX value names → unique IR-safe identifiers."""
+
+    def __init__(self) -> None:
+        self.used: set[str] = set()
+
+    def __call__(self, onnx_name: str, fallback: str = "v") -> str:
+        base = re.sub(r"[^0-9A-Za-z_]", "_", onnx_name) or fallback
+        if base[0].isdigit():
+            base = f"v_{base}"
+        name = base
+        i = 1
+        while name in self.used:
+            name = f"{base}_{i}"
+            i += 1
+        self.used.add(name)
+        return name
+
+
+def _square(node: OnnxNode, vals: list[int], what: str) -> int:
+    if len(vals) != 2 or vals[0] != vals[1]:
+        _fail(f"{node.op_type} {node.name!r}: non-square {what} {vals}")
+    return vals[0]
+
+
+def _uniform_stride(node: OnnxNode, default: int = 1) -> int:
+    strides = node.attrs.get("strides")
+    if strides is None:
+        return default
+    if len(set(strides)) != 1:
+        _fail(f"{node.op_type} {node.name!r}: non-uniform strides {strides}")
+    return int(strides[0])
+
+
+def _check_same_padding(node: OnnxNode, kernel: int) -> None:
+    auto = node.attrs.get("auto_pad", "NOTSET") or "NOTSET"
+    pads = node.attrs.get("pads")
+    if auto in ("SAME_UPPER", "SAME_LOWER"):
+        return
+    want = (kernel - 1) // 2
+    if pads is None and want == 0:
+        return
+    if pads is None or list(pads) != [want] * 4:
+        _fail(
+            f"Conv {node.name!r}: only SAME padding maps onto the "
+            f"streaming conv (need pads={[want] * 4} for k={kernel} or "
+            f"auto_pad=SAME_*, got auto_pad={auto!r} pads={pads})"
+        )
+
+
+def _check_no_padding(node: OnnxNode) -> None:
+    auto = node.attrs.get("auto_pad", "NOTSET") or "NOTSET"
+    pads = node.attrs.get("pads")
+    if auto == "VALID" or auto == "NOTSET":
+        if pads and any(pads):
+            _fail(f"{node.op_type} {node.name!r}: padded pooling is not "
+                  f"supported (pads={pads})")
+        return
+    _fail(f"{node.op_type} {node.name!r}: auto_pad={auto!r} pooling is "
+          "not supported")
+
+
+def _to_builder(og: OnnxGraph, model_name: str) -> ImportedModel:
+    from repro.api.builder import FrontendError, Graph, TensorRef
+
+    g = Graph(model_name)
+    names = _Names()
+    refs: dict[str, TensorRef] = {}
+    params: dict[str, np.ndarray] = {}
+
+    def ref(node: OnnxNode, vname: str) -> TensorRef:
+        if vname not in refs:
+            _fail(f"{node.op_type} {node.name!r}: input {vname!r} is "
+                  "neither a graph input, an initializer-backed constant, "
+                  "nor an earlier node's output")
+        return refs[vname]
+
+    def bind_const(onnx_name: str, arr: np.ndarray) -> TensorRef:
+        nm = names(onnx_name, "k")
+        c = g.constant(arr.shape, name=nm)
+        params[nm] = np.ascontiguousarray(arr)
+        return c
+
+    def bias_add(x: TensorRef, onnx_name: str, bias: np.ndarray) -> TensorRef:
+        full = np.broadcast_to(bias, x.shape)
+        return g.add(x, bind_const(onnx_name, full))
+
+    def weight_name(onnx_name: str) -> str:
+        return names(onnx_name, "w")
+
+    def handle_conv(node: OnnxNode) -> None:
+        if len(node.inputs) not in (2, 3):
+            _fail(f"Conv {node.name!r}: expected X, W[, B]")
+        xn, wn = node.inputs[:2]
+        w = og.initializers.get(wn)
+        if w is None:
+            _fail(f"Conv {node.name!r}: weight {wn!r} must be an "
+                  "initializer")
+        if w.ndim != 4:
+            _fail(f"Conv {node.name!r}: weight rank {w.ndim} != 4")
+        if node.attrs.get("group", 1) != 1:
+            _fail(f"Conv {node.name!r}: grouped convs are unsupported "
+                  f"(group={node.attrs['group']})")
+        dil = node.attrs.get("dilations")
+        if dil and any(d != 1 for d in dil):
+            _fail(f"Conv {node.name!r}: dilations {dil} are unsupported")
+        kernel = _square(node, list(w.shape[2:]), "kernel")
+        ks = node.attrs.get("kernel_shape")
+        if ks and list(ks) != [kernel, kernel]:
+            _fail(f"Conv {node.name!r}: kernel_shape {ks} != weight "
+                  f"kernel {kernel}")
+        if kernel % 2 == 0:
+            # even-kernel SAME padding is asymmetric (and SAME_UPPER vs
+            # SAME_LOWER diverge) — the streaming kernel's symmetric
+            # SAME convolution cannot reproduce it
+            _fail(f"Conv {node.name!r}: even kernel {kernel}x{kernel} "
+                  "cannot map onto the symmetric-SAME streaming conv")
+        stride = _uniform_stride(node)
+        if stride != 1:
+            _fail(f"Conv {node.name!r}: only stride-1 convs map onto the "
+                  f"SAME-padding streaming kernel (stride={stride})")
+        _check_same_padding(node, kernel)
+        x = ref(node, xn)
+        if x.rank != 4:
+            _fail(f"Conv {node.name!r}: input rank {x.rank} != 4 (NCHW)")
+        h = g.transpose(x, NCHW2NHWC)
+        wname = weight_name(wn)
+        h = g.conv2d(h, int(w.shape[0]), kernel=kernel, stride=1,
+                     weight=wname)
+        params[wname] = np.ascontiguousarray(np.transpose(w, (2, 3, 1, 0)))
+        if len(node.inputs) == 3:
+            b = og.initializers.get(node.inputs[2])
+            if b is None:
+                _fail(f"Conv {node.name!r}: bias {node.inputs[2]!r} must "
+                      "be an initializer")
+            h = bias_add(h, node.inputs[2], b.reshape(1, 1, 1, -1))
+        refs[node.outputs[0]] = g.transpose(h, NHWC2NCHW)
+
+    def handle_pool(node: OnnxNode) -> None:
+        window = _square(node, list(node.attrs.get("kernel_shape", [])),
+                         "kernel_shape")
+        stride = _uniform_stride(node, default=1)
+        _check_no_padding(node)
+        if node.attrs.get("ceil_mode", 0):
+            _fail(f"{node.op_type} {node.name!r}: ceil_mode pooling is "
+                  "unsupported")
+        x = ref(node, node.inputs[0])
+        if x.rank != 4:
+            _fail(f"{node.op_type} {node.name!r}: input rank {x.rank} != 4")
+        h = g.transpose(x, NCHW2NHWC)
+        pool = g.max_pool if node.op_type == "MaxPool" else g.avg_pool
+        h = pool(h, window, stride)
+        refs[node.outputs[0]] = g.transpose(h, NHWC2NCHW)
+
+    def handle_gemm(node: OnnxNode) -> None:
+        if len(node.inputs) not in (2, 3):
+            _fail(f"Gemm {node.name!r}: expected A, B[, C]")
+        alpha = node.attrs.get("alpha", 1.0)
+        beta = node.attrs.get("beta", 1.0)
+        if abs(float(alpha) - 1.0) > 1e-6 or node.attrs.get("transA", 0):
+            _fail(f"Gemm {node.name!r}: alpha={alpha} transA="
+                  f"{node.attrs.get('transA', 0)} — only alpha=1, "
+                  "transA=0 are supported")
+        b = og.initializers.get(node.inputs[1])
+        if b is None or b.ndim != 2:
+            _fail(f"Gemm {node.name!r}: B must be a rank-2 initializer")
+        w = b.T if node.attrs.get("transB", 0) else b
+        x = ref(node, node.inputs[0])
+        if x.rank != 2:
+            _fail(f"Gemm {node.name!r}: input rank {x.rank} != 2 — "
+                  "Flatten before the classifier head")
+        wname = weight_name(node.inputs[1])
+        h = g.dense(x, int(w.shape[1]), weight=wname)
+        params[wname] = np.ascontiguousarray(w)
+        if len(node.inputs) == 3 and abs(float(beta)) > 1e-6:
+            if abs(float(beta) - 1.0) > 1e-6:
+                _fail(f"Gemm {node.name!r}: beta={beta} — only 0 or 1")
+            c = og.initializers.get(node.inputs[2])
+            if c is None:
+                _fail(f"Gemm {node.name!r}: C must be an initializer")
+            h = bias_add(h, node.inputs[2], c.reshape(1, -1))
+        refs[node.outputs[0]] = h
+
+    def handle_add(node: OnnxNode) -> None:
+        a, b = node.inputs
+        if a in og.initializers and b in og.initializers:
+            _fail(f"Add {node.name!r}: constant-folding two initializers "
+                  "is out of scope")
+        if b in og.initializers or a in og.initializers:
+            act, kn = (a, b) if b in og.initializers else (b, a)
+            x = ref(node, act)
+            arr = np.broadcast_to(og.initializers[kn], x.shape)
+            refs[node.outputs[0]] = g.add(x, bind_const(kn, arr))
+            return
+        refs[node.outputs[0]] = g.add(ref(node, a), ref(node, b))
+
+    def handle_flatten(node: OnnxNode) -> None:
+        if node.attrs.get("axis", 1) != 1:
+            _fail(f"Flatten {node.name!r}: only axis=1 is supported "
+                  f"(axis={node.attrs.get('axis')})")
+        x = ref(node, node.inputs[0])
+        if x.rank == 2:
+            refs[node.outputs[0]] = x  # already flat — a pure alias
+            return
+        refs[node.outputs[0]] = g.flatten(x)
+
+    handlers = {
+        "Conv": handle_conv,
+        "Relu": lambda n: refs.__setitem__(
+            n.outputs[0], g.relu(ref(n, n.inputs[0]))
+        ),
+        "MaxPool": handle_pool,
+        "AveragePool": handle_pool,
+        "Gemm": handle_gemm,
+        "Add": handle_add,
+        "Flatten": handle_flatten,
+    }
+
+    try:
+        for vname, shape in og.inputs:
+            if not shape or any(int(s) <= 0 for s in shape):
+                _fail(f"graph input {vname!r}: non-static shape {shape}")
+            refs[vname] = g.input(shape, name=names(vname, "x"))
+        for node in og.nodes:
+            handler = handlers.get(node.op_type)
+            if handler is None:
+                _fail(
+                    f"unsupported op {node.op_type!r} (node {node.name!r}) "
+                    f"— this importer speaks {SUPPORTED_OPS}"
+                )
+            handler(node)
+        if not og.outputs:
+            _fail("model has no graph outputs")
+        for o in og.outputs:
+            if o not in refs:
+                _fail(f"graph output {o!r} is not produced by any node")
+            g.output(refs[o])
+        dfg = g.build()
+    except FrontendError as e:
+        raise OnnxImportError(f"{model_name}: {e}") from e
+    except ValueError as e:
+        if isinstance(e, OnnxImportError):
+            raise
+        raise OnnxImportError(f"{model_name}: {e}") from e
+    return ImportedModel(model_name, dfg, params, source="onnx")
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def have_onnx_package() -> bool:
+    try:  # pragma: no cover - depends on the environment
+        import onnx  # noqa: F401
+
+        return True
+    except ImportError:
+        return False
+
+
+def load_onnx(source, *, name: str | None = None) -> ImportedModel:
+    """Import an ONNX model — a path to a ``.onnx`` file or raw model
+    bytes — into an :class:`ImportedModel`."""
+    if isinstance(source, (bytes, bytearray)):
+        data = bytes(source)
+        default_name = "onnx_model"
+    else:
+        with open(source, "rb") as f:
+            data = f.read()
+        default_name = os.path.splitext(os.path.basename(source))[0]
+    og = (
+        _decode_with_onnx_pkg(data) if have_onnx_package()
+        else decode_wire(data)
+    )
+    model_name = name or re.sub(r"[^0-9A-Za-z_]", "_",
+                                og.name if og.name != "onnx_model"
+                                else default_name) or "onnx_model"
+    return _to_builder(og, model_name)

@@ -33,6 +33,7 @@ from repro.core.analysis import (
     KernelClass,
     classify_kernel,
     einsum_spec,
+    reorder_spec,
     window_geometry,
 )
 from repro.core.dse import plan_attention_blocks, plan_conv_rows, plan_matmul_blocks
@@ -260,6 +261,11 @@ def _lower_node(op, dfg, env, interpret: bool, weight_tiles: int = 1):
         out = jnp.einsum(einsum_spec(op), *(env[i] for i in op.inputs))
         return _ref.apply_epilogue(out, op.epilogue, env)
     # PURE_PARALLEL
+    if reorder_spec(op) is not None:
+        from repro.passes.interp import execute_reorder
+
+        out = execute_reorder(op, env[op.inputs[0]])
+        return _ref.apply_epilogue(out, op.epilogue, env)
     args = [env[i] for i in op.inputs]
     if len(args) == 1:
         out = _ref.unary(op.payload, args[0])

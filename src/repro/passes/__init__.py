@@ -35,6 +35,7 @@ from .fusion import (
     fuse,
     fuse_pool,
 )
+from .layout import LayoutCanonicalize
 from .partition import (
     LayerGroup,
     PartitionError,
@@ -54,6 +55,7 @@ PASS_REGISTRY: dict[str, type[Pass]] = {
         Canonicalize,
         DeadCodeElimination,
         CommonSubexprElimination,
+        LayoutCanonicalize,
         ElementwiseChainFusion,
         ConvActivationFusion,
         ConvPoolFusion,
@@ -80,11 +82,14 @@ def pipeline_from_names(names) -> list[Pass]:
 
 
 def default_pipeline() -> list[Pass]:
-    """Canonicalize, strip dead code, dedup, fuse, clean up, re-canonicalize."""
+    """Canonicalize, strip dead code, dedup, cancel layout transposes
+    (before fusion, so imported NCHW graphs fuse like native ones),
+    fuse, clean up, re-canonicalize."""
     return [
         Canonicalize(),
         DeadCodeElimination(),
         CommonSubexprElimination(),
+        LayoutCanonicalize(),
         ElementwiseChainFusion(),
         ConvActivationFusion(),
         ConvPoolFusion(),
@@ -109,6 +114,7 @@ __all__ = [
     "ElementwiseChainFusion",
     "ConvActivationFusion",
     "ConvPoolFusion",
+    "LayoutCanonicalize",
     "can_fuse",
     "can_fuse_pool",
     "fuse",

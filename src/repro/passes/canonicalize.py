@@ -57,6 +57,10 @@ class Canonicalize(Pass):
             info = classify_kernel(node)
             if info.kernel_class != KernelClass.PURE_PARALLEL:
                 continue
+            # a transpose/flatten is IDENTITY-payload but *moves* data —
+            # only a true wire (identity maps end to end) is removable
+            if not all(m.is_identity() for m in node.indexing_maps):
+                continue
             src, out = node.inputs[0], node.output
             # pure pass-through from a graph input to a graph output has
             # nothing to rewire into — keep the node as the sole producer.

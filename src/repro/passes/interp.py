@@ -31,7 +31,13 @@ from typing import Mapping
 import jax
 import jax.numpy as jnp
 
-from repro.core.analysis import KernelClass, classify_kernel, einsum_spec, window_geometry
+from repro.core.analysis import (
+    KernelClass,
+    classify_kernel,
+    einsum_spec,
+    reorder_spec,
+    window_geometry,
+)
 from repro.core.ir import DFG, GenericOp, PayloadKind
 from repro.kernels import ref
 
@@ -67,9 +73,25 @@ def _pool2d(op: GenericOp, env: Mapping[str, jax.Array]):
     return pool(env[op.inputs[0]], kh, kw, info.stride)
 
 
+def execute_reorder(op: GenericOp, x: jax.Array) -> jax.Array:
+    """Transpose / flatten data-movement ops (shared with the Pallas
+    lowering so both executors agree on reorder semantics)."""
+    spec = reorder_spec(op)
+    assert spec is not None, op.name
+    kind, arg = spec
+    if kind == "transpose":
+        return jnp.transpose(x, arg)
+    # flatten: bring the non-batch axes into linearization order, then
+    # collapse them row-major
+    return jnp.transpose(x, (0,) + arg).reshape(x.shape[0], -1)
+
+
 def execute_node(op: GenericOp, dfg: DFG, env: Mapping[str, jax.Array]):
     info = classify_kernel(op)
     if info.kernel_class == KernelClass.PURE_PARALLEL:
+        if reorder_spec(op) is not None:
+            return _apply_epilogue(op, execute_reorder(op, env[op.inputs[0]]),
+                                   env)
         args = [env[i] for i in op.inputs]
         if len(args) == 1:
             out = ref.unary(op.payload, args[0])

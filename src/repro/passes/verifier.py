@@ -25,10 +25,17 @@ Checks (all structural — payload semantics are the interpreter's job):
       propagation maintains this invariant);
   V9. pooling epilogues are well-formed: window rank matches the output
       rank and every factor tiles its axis exactly.
+  V10. data-movement (reorder) ops preserve elements: an IDENTITY
+      pure-parallel op with non-identity maps must be a recognizable
+      transpose/flatten (``repro.core.analysis.reorder_spec``), carry no
+      epilogue, and produce a value with exactly the input's element
+      count and the shape its maps imply — the layout pass's rewrites
+      are checked against this after every application.
 """
 from __future__ import annotations
 
-from repro.core.ir import DFG
+from repro.core.analysis import reorder_spec
+from repro.core.ir import DFG, IteratorType, PayloadKind
 
 
 class VerificationError(ValueError):
@@ -136,3 +143,36 @@ def verify_dfg(dfg: DFG) -> None:
                 _fail(dfg, "V9", f"{n.name}: pool window {e.window} does not "
                                  f"tile output extents {shape}")
             shape = tuple(s // f for s, f in zip(shape, e.window))
+
+    # V10 — reorder ops are well-formed element-preserving moves
+    for n in dfg.nodes:
+        if (
+            n.payload != PayloadKind.IDENTITY
+            or len(n.inputs) != 1
+            or any(t != IteratorType.PARALLEL for t in n.iterator_types)
+        ):
+            continue
+        imap, omap = n.indexing_maps
+        if imap.is_identity() and omap.is_identity():
+            continue  # plain wire — canonicalize removes it
+        spec = reorder_spec(n)
+        if spec is None:
+            _fail(dfg, "V10", f"{n.name}: IDENTITY op with non-identity "
+                              "maps is not a recognizable transpose/flatten")
+        if n.epilogue:
+            _fail(dfg, "V10", f"{n.name}: reorder ops cannot carry epilogues")
+        in_v, out_v = dfg.values[n.inputs[0]], dfg.values[n.output]
+        if in_v.num_elements != out_v.num_elements:
+            _fail(dfg, "V10", f"{n.name}: reorder changes element count "
+                              f"({in_v.shape} -> {out_v.shape})")
+        kind, arg = spec
+        if kind == "transpose":
+            want = tuple(in_v.shape[p] for p in arg)
+        else:
+            feat = 1
+            for s in in_v.shape[1:]:
+                feat *= s
+            want = (in_v.shape[0], feat)
+        if out_v.shape != want:
+            _fail(dfg, "V10", f"{n.name}: {kind} output shape "
+                              f"{out_v.shape} != expected {want}")

@@ -1,9 +1,8 @@
 """Public API (ISSUE 4): CompileOptions validation, the
-CompiledArtifact session handle, the deprecating ``compile`` alias, and
-the ``python -m repro`` CLI.
+CompiledArtifact session handle, the retired ``compile`` alias
+(ISSUE 5), batched runs, and the ``python -m repro`` CLI.
 """
 import os
-import warnings
 
 import numpy as np
 import pytest
@@ -98,16 +97,25 @@ class TestCompileOptions:
         assert solve_ilp(plan_streams(dfg), options=CompileOptions()).feasible
 
 
-class TestDeprecatedCompileAlias:
-    def test_compile_warns_and_matches_compile_design(self):
-        from repro.core.compile_driver import compile as legacy
+class TestRetiredCompileAlias:
+    """ISSUE 5 satellite: the deprecating ``compile`` alias is gone —
+    a clear AttributeError points at ``compile_design``."""
 
-        with warnings.catch_warnings(record=True) as w:
-            warnings.simplefilter("always")
-            d = legacy(cnn_graphs.conv_relu(8, c_out=4))
-        assert any(issubclass(x.category, DeprecationWarning) for x in w)
-        d2 = compile_design(cnn_graphs.conv_relu(8, c_out=4))
-        assert d.schedule() == d2.schedule()
+    def test_attribute_access_raises_with_pointer(self):
+        from repro.core import compile_driver
+
+        with pytest.raises(AttributeError, match="compile_design"):
+            compile_driver.compile  # noqa: B018
+
+    def test_from_import_fails_too(self):
+        with pytest.raises(ImportError, match="compile"):
+            from repro.core.compile_driver import compile  # noqa: F401
+
+    def test_other_attributes_error_normally(self):
+        from repro.core import compile_driver
+
+        with pytest.raises(AttributeError, match="no_such_thing"):
+            compile_driver.no_such_thing  # noqa: B018
 
 
 class TestCompiledArtifact:
@@ -188,6 +196,63 @@ class TestCompiledArtifact:
         art.run({"a": env["a"], "b": env["b"]}, interpret=True)
         art.run(interpret=True)
 
+    def test_batched_run_stacks_per_sample_outputs(self):
+        """ISSUE 5 satellite: one extra leading dim on every input =>
+        per-sample execution, outputs stacked along a new batch axis."""
+        art = api.compile_graph(cnn_graphs.conv_relu(8, c_out=4))
+        src = art.design.source
+        env = interp.random_env(src, seed=11)
+        xs = np.stack([
+            np.asarray(env["x"]),
+            np.asarray(env["x"]) + 1,
+            np.asarray(env["x"]) - 2,
+        ])
+        got = art.run({"x": xs}, params=env, interpret=True)
+        assert got.shape[0] == 3
+        for i in range(3):
+            want = art.run({"x": xs[i]}, params=env, interpret=True)
+            np.testing.assert_array_equal(np.asarray(got[i]),
+                                          np.asarray(want))
+
+    def test_batched_run_multi_input_consistency(self):
+        g = api.Graph("two_in")
+        a = g.input((1, 4, 4, 2), name="a")
+        b = g.input((1, 4, 4, 2), name="b")
+        g.output(g.add(a, b))
+        art = api.compile_graph(g.build())
+        rng = np.random.default_rng(0)
+        xa = rng.integers(-4, 5, (2, 1, 4, 4, 2)).astype(np.int32)
+        xb = rng.integers(-4, 5, (2, 1, 4, 4, 2)).astype(np.int32)
+        got = art.run({"a": xa, "b": xb}, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), xa + xb)
+        # mixed batched/unbatched inputs fail loudly
+        with pytest.raises(ValueError, match="leading batch extent"):
+            art.run({"a": xa, "b": xb[0]}, interpret=True)
+        # wrong ranks fail loudly
+        with pytest.raises(ValueError, match="expected"):
+            art.run({"a": xa[None], "b": xb[None]}, interpret=True)
+        # batch extent 0 is a clear error, not a numpy stack crash
+        with pytest.raises(ValueError, match="batch extent 0"):
+            art.run({"a": xa[:0], "b": xb[:0]}, interpret=True)
+
+    def test_batched_run_on_zoo_classifier(self):
+        """Imported classifiers validate on small input batches."""
+        from repro.frontends import zoo
+
+        art = api.compile_graph(zoo.lenet5())
+        src = art.design.source
+        env = interp.random_env(src, seed=2)
+        xs = np.random.default_rng(3).integers(
+            -4, 5, (2,) + src.values["x"].shape
+        ).astype(np.int32)
+        got = art.run(xs, params=env, interpret=True)
+        assert got.shape == (2, 1, 10)
+        for i in range(2):
+            np.testing.assert_array_equal(
+                np.asarray(art.run(xs[i], params=env, interpret=True)),
+                np.asarray(got[i]),
+            )
+
     def test_report_table(self):
         art = api.compile_graph(cnn_graphs.deep_cascade(32))
         rep = art.report()
@@ -237,6 +302,10 @@ class TestCompiledArtifact:
         for extra in ("conv_pool_32", "conv_avgpool_32", "fat_conv_16",
                       "fat_cascade_16"):
             assert extra in s
+        # and the model zoo rides along (ISSUE 5)
+        from repro.frontends import zoo
+
+        assert set(zoo.ZOO) <= set(s)
 
     def test_every_small_suite_graph_compiles_on_both_targets(self):
         """Acceptance (model level): every suite graph is expressible
@@ -284,6 +353,44 @@ class TestCli:
     def test_unknown_graph_fails_with_hint(self, capsys):
         assert cli_main(["compile", "resnet152"]) == 2
         assert "python -m repro list" in capsys.readouterr().err
+
+    def test_compile_model_card_file_and_run(self, capsys):
+        """ISSUE 5 acceptance: `python -m repro compile examples/
+        lenet5.json --run` compiles and executes the imported model."""
+        card = os.path.join(os.path.dirname(__file__), "..", "examples",
+                            "lenet5.json")
+        assert cli_main(["compile", card, "--run", "--quiet"]) == 0
+        out = capsys.readouterr().out
+        assert "ran OK" in out
+
+    def test_zoo_lists_and_exports_cards(self, tmp_path, capsys):
+        assert cli_main(["zoo", "--export", str(tmp_path)]) == 0
+        out = capsys.readouterr().out
+        assert "lenet5" in out
+        for name in ("lenet5", "tiny_vgg_32", "edge_residual_32"):
+            assert (tmp_path / f"{name}.json").exists()
+
+    def test_compile_unknown_extension_fails_cleanly(self, tmp_path, capsys):
+        bad = tmp_path / "model.txt"
+        bad.write_text("nope")
+        assert cli_main(["compile", str(bad)]) == 2
+        assert "unknown model extension" in capsys.readouterr().err
+
+    def test_suite_name_wins_over_cwd_entry(self, tmp_path, monkeypatch,
+                                            capsys):
+        """A stray file/dir named like a suite graph must not shadow
+        the registry (regression: os.path.exists checked first)."""
+        (tmp_path / "conv_relu_32").mkdir()
+        monkeypatch.chdir(tmp_path)
+        assert cli_main(["compile", "conv_relu_32", "--quiet"]) == 0
+
+    def test_compile_directory_path_exits_two(self, tmp_path, capsys):
+        """IsADirectoryError (and friends) are bad arguments (exit 2),
+        never raw tracebacks."""
+        d = tmp_path / "model.json"
+        d.mkdir()
+        assert cli_main(["compile", str(d)]) == 2
+        assert "error:" in capsys.readouterr().err
 
     def test_bad_option_fails_cleanly(self, capsys):
         assert cli_main(["compile", "conv_relu_32", "--target", "vu9p"]) == 2

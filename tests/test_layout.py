@@ -1,0 +1,398 @@
+"""Layout machinery (ISSUE 5 tentpole): transpose/flatten IR ops, the
+NCHW↔NHWC canonicalization pass, and the V10 verifier invariant.
+
+The load-bearing property: the layout pass may move and cancel
+transposes however it likes, but the rewritten graph must stay
+*bit-exact* with the original on random integer inputs — checked here
+on importer-shaped graphs (sandwiched convs/pools, residual diamonds,
+NCHW classifier heads).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.api.builder import Flatten, FrontendError, Graph, Sequential
+from repro.core.analysis import reorder_spec
+from repro.core.ir import (
+    PayloadKind,
+    Value,
+    make_flatten_op,
+    make_transpose_op,
+)
+from repro.passes import (
+    LayoutCanonicalize,
+    PASS_REGISTRY,
+    VerificationError,
+    interp,
+    run_default_pipeline,
+    verify_dfg,
+)
+
+NCHW2NHWC = (0, 2, 3, 1)
+NHWC2NCHW = (0, 3, 1, 2)
+
+
+def _exact(dfg_a, dfg_b, seed=0):
+    env = interp.random_env(dfg_a, seed=seed)
+    a = interp.graph_outputs(dfg_a, env)
+    b = interp.graph_outputs(dfg_b, env)
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def _imported_chain(with_residual=False):
+    """An importer-shaped graph: NCHW boundary, transpose sandwiches."""
+    g = Graph("imported")
+    x = g.input((1, 3, 8, 8))
+    h = g.transpose(x, NCHW2NHWC)
+    h = g.conv2d(h, 8)
+    h = g.transpose(h, NHWC2NCHW)
+    h = g.relu(h)
+    if with_residual:
+        skip = h
+        h = g.transpose(h, NCHW2NHWC)
+        h = g.conv2d(h, 8)
+        h = g.transpose(h, NHWC2NCHW)
+        h = g.add(h, skip)
+    h = g.transpose(h, NCHW2NHWC)
+    h = g.conv2d(h, 4)
+    h = g.transpose(h, NHWC2NCHW)
+    h = g.flatten(h)
+    h = g.dense(h, 10)
+    g.output(h)
+    return g.build()
+
+
+class TestReorderOps:
+    def test_transpose_semantics(self):
+        g = Graph("t")
+        x = g.input((1, 5, 4, 3))
+        g.output(g.transpose(x, NHWC2NCHW))
+        dfg = g.build()
+        verify_dfg(dfg)
+        env = interp.random_env(dfg, seed=0)
+        out = interp.graph_outputs(dfg, env)
+        np.testing.assert_array_equal(
+            np.asarray(out[dfg.graph_outputs[0]]),
+            np.transpose(np.asarray(env["x"]), NHWC2NCHW),
+        )
+
+    def test_flatten_semantics_with_order(self):
+        g = Graph("t")
+        x = g.input((1, 4, 3, 2))
+        g.output(g.flatten(x, order=(3, 1, 2)))  # channels-major
+        dfg = g.build()
+        verify_dfg(dfg)
+        env = interp.random_env(dfg, seed=1)
+        out = np.asarray(
+            interp.graph_outputs(dfg, env)[dfg.graph_outputs[0]]
+        )
+        want = np.transpose(np.asarray(env["x"]), (0, 3, 1, 2)).reshape(1, -1)
+        np.testing.assert_array_equal(out, want)
+
+    def test_reorder_spec_recovers_structure(self):
+        t = make_transpose_op("t", "a", "b", in_shape=(1, 2, 3, 4),
+                              perm=NCHW2NHWC)
+        assert reorder_spec(t) == ("transpose", NCHW2NHWC)
+        f = make_flatten_op("f", "a", "b", in_shape=(1, 2, 3, 4),
+                            order=(3, 1, 2))
+        assert reorder_spec(f) == ("flatten", (3, 1, 2))
+
+    def test_reorder_spec_handles_extent_one_stride_ties(self):
+        """Extent-1 axes tie on stride with their neighbour; recovery
+        must still accept every order the builder can produce (the
+        recovered order may swap tied extent-1 axes — the op is
+        identical either way)."""
+        import itertools
+
+        for shape in ((1, 4, 1, 3), (1, 1, 5, 1), (1, 2, 1, 1)):
+            for order in itertools.permutations((1, 2, 3)):
+                f = make_flatten_op("f", "a", "b", in_shape=shape,
+                                    order=order)
+                spec = reorder_spec(f)
+                assert spec is not None and spec[0] == "flatten", \
+                    (shape, order)
+                # rebuilding from the recovered order gives the same op
+                g = make_flatten_op("f", "a", "b", in_shape=shape,
+                                    order=spec[1])
+                assert g == f, (shape, order, spec)
+
+    def test_extent_one_flatten_compiles_end_to_end(self):
+        """Regression: V10 once rejected builder-legal flattens whose
+        extent-1 axis tied strides with a neighbour."""
+        from repro import api
+
+        g = Graph("t")
+        x = g.input((1, 4, 1, 3))
+        g.output(g.flatten(x, order=(1, 3, 2)))
+        dfg = g.build()
+        verify_dfg(dfg)
+        art = api.compile_graph(dfg)
+        env = interp.random_env(dfg, seed=0)
+        got = np.asarray(art.run({"x": env["x"]}, params=env,
+                                 interpret=True))
+        want = np.transpose(np.asarray(env["x"]),
+                            (0, 1, 3, 2)).reshape(1, -1)
+        np.testing.assert_array_equal(got, want)
+
+    def test_builder_validates_perm_and_rank(self):
+        g = Graph("t")
+        x = g.input((1, 4, 4, 2))
+        with pytest.raises(FrontendError, match="not a permutation"):
+            g.transpose(x, (0, 1, 2, 2))
+        with pytest.raises(FrontendError, match="not a permutation"):
+            g.flatten(x, order=(1, 1, 2))
+        y = g.input((4,), name="vec")
+        with pytest.raises(FrontendError, match="rank >= 2"):
+            g.flatten(y)
+
+    def test_canonicalize_keeps_reorder_ops(self):
+        """Identity-payload data movers must survive identity removal."""
+        dfg = _imported_chain()
+        n_before = sum(
+            1 for n in dfg.nodes if reorder_spec(n) is not None
+        )
+        from repro.passes import Canonicalize
+
+        Canonicalize().run_on(dfg)
+        n_after = sum(
+            1 for n in dfg.nodes if reorder_spec(n) is not None
+        )
+        assert n_before == n_after
+        verify_dfg(dfg)
+
+    def test_verifier_v10_rejects_malformed_reorder(self):
+        g = Graph("t")
+        x = g.input((1, 4, 4, 2))
+        g.output(g.transpose(x, NHWC2NCHW))
+        dfg = g.build()
+        # corrupt the output shape: V10 must fire
+        dfg.values[dfg.graph_outputs[0]].shape = (1, 4, 4, 2)
+        with pytest.raises(VerificationError, match="V8|V10"):
+            verify_dfg(dfg)
+
+    def test_verifier_v10_rejects_epilogue_on_reorder(self):
+        g = Graph("t")
+        x = g.input((1, 4, 4, 2))
+        g.output(g.transpose(x, NHWC2NCHW))
+        dfg = g.build()
+        from repro.core.ir import FusedEpilogue
+
+        dfg.nodes[0].epilogue = (FusedEpilogue(PayloadKind.RELU),)
+        with pytest.raises(VerificationError, match="V10"):
+            verify_dfg(dfg)
+
+
+class TestLayoutPass:
+    def test_registered(self):
+        assert "layout" in PASS_REGISTRY
+        assert PASS_REGISTRY["layout"] is LayoutCanonicalize
+
+    def test_cancels_adjacent_inverse_pair(self):
+        g = Graph("t")
+        x = g.input((1, 2, 4, 4))
+        h = g.transpose(x, NCHW2NHWC)
+        h = g.transpose(h, NHWC2NCHW)
+        h = g.relu(h)
+        g.output(h)
+        dfg = g.build()
+        stats = LayoutCanonicalize().run_on(dfg)
+        assert stats["transposes_cancelled"] == 1
+        verify_dfg(dfg)
+        assert not any(reorder_spec(n) for n in dfg.nodes)
+
+    def test_composes_non_inverse_pair(self):
+        g = Graph("t")
+        x = g.input((1, 2, 3, 4))
+        h = g.transpose(x, (0, 2, 3, 1))
+        h = g.transpose(h, (0, 2, 3, 1))
+        g.output(h)
+        dfg = g.build()
+        ref = dfg.clone()
+        stats = LayoutCanonicalize().run_on(dfg)
+        assert stats["transposes_composed"] == 1
+        verify_dfg(dfg)
+        assert sum(1 for n in dfg.nodes if reorder_spec(n)) == 1
+        _exact(ref, dfg)
+
+    def test_sinks_relu_and_cancels_sandwich(self):
+        dfg = _imported_chain()
+        ref = dfg.clone()
+        stats = LayoutCanonicalize().run_on(dfg)
+        verify_dfg(dfg)
+        assert stats["elementwise_sunk"] >= 1
+        assert stats["transposes_cancelled"] >= 1
+        assert stats["flatten_folds"] == 1
+        _exact(ref, dfg)
+
+    def test_residual_add_sinks_below_matching_transposes(self):
+        dfg = _imported_chain(with_residual=True)
+        ref = dfg.clone()
+        LayoutCanonicalize().run_on(dfg)
+        verify_dfg(dfg)
+        _exact(ref, dfg)
+        # after the full pipeline only the boundary transpose survives
+        res = run_default_pipeline(_imported_chain(with_residual=True))
+        live = [n for n in res.dfg.nodes
+                if (reorder_spec(n) or ("", 0))[0] == "transpose"]
+        assert len(live) == 1
+
+    def test_input_to_output_round_trip_is_not_cancelled(self):
+        """A cancelling pair that spans graph input → graph output has
+        nothing to rewire into — cancelling it would alias the output
+        to the input and empty the graph (which the emitter rejects)."""
+        from repro import api
+        from repro.core.emit_hls import emit_design
+
+        g = Graph("t")
+        x = g.input((1, 2, 4, 4))
+        h = g.transpose(x, NCHW2NHWC)
+        g.output(g.transpose(h, NHWC2NCHW))
+        dfg = g.build()
+        ref = dfg.clone()
+        LayoutCanonicalize().run_on(dfg)
+        verify_dfg(dfg)
+        assert dfg.nodes, "pass must not empty the graph"
+        _exact(ref, dfg)
+        # and the whole front door still emits
+        art = api.compile_graph(ref)
+        files = emit_design(art.design)
+        assert "host_schedule.cpp" in files
+
+    def test_shared_transpose_output_is_left_alone(self):
+        """A transpose with two consumers must not be repurposed."""
+        g = Graph("t")
+        x = g.input((1, 2, 4, 4))
+        h = g.transpose(x, NCHW2NHWC)
+        a = g.relu(h)
+        b = g.relu(h, name="relu_b")
+        g.output(g.add(a, b))
+        dfg = g.build()
+        ref = dfg.clone()
+        LayoutCanonicalize().run_on(dfg)
+        verify_dfg(dfg)
+        _exact(ref, dfg)
+
+    def test_pipeline_keeps_fusion_wins_on_imported_graphs(self):
+        """After layout canonicalization the imported chain fuses like
+        a native one: conv+relu collapse, interior reorders disappear."""
+        res = run_default_pipeline(_imported_chain())
+        kinds = [reorder_spec(n) for n in res.dfg.nodes]
+        transposes = [s for s in kinds if s and s[0] == "transpose"]
+        assert len(transposes) == 1  # only the NCHW boundary
+        convs = [n for n in res.dfg.nodes
+                 if n.payload == PayloadKind.MAC and n.n_dims == 7]
+        assert any(n.epilogue for n in convs)  # relu fused in
+
+    def test_default_pipeline_bit_exact_on_imported_shapes(self):
+        for make in (lambda: _imported_chain(False),
+                     lambda: _imported_chain(True)):
+            dfg = make()
+            res = run_default_pipeline(dfg)
+            _exact(dfg, res.dfg, seed=4)
+
+
+class TestDeepImports:
+    def test_deep_sandwich_chain_reaches_fixpoint(self):
+        """A VGG-16-scale import (~40 sandwiched layers) must fully
+        canonicalize — no silent iteration-cap stall leaving interior
+        transposes (regression for the old fixed 100-rewrite cap)."""
+        import warnings
+
+        g = Graph("deep")
+        h = g.input((1, 2, 4, 4))
+        for _ in range(40):
+            h = g.transpose(h, NCHW2NHWC)
+            h = g.conv2d(h, 2)
+            h = g.transpose(h, NHWC2NCHW)
+            h = g.relu(h)
+        h = g.flatten(h)
+        g.output(g.dense(h, 3))
+        dfg = g.build()
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # the stall warning is fatal
+            res = run_default_pipeline(dfg)
+        transposes = [n for n in res.dfg.nodes
+                      if (reorder_spec(n) or ("",))[0] == "transpose"]
+        assert len(transposes) == 1
+
+
+class TestLayoutProperty:
+    @given(st.integers(2, 5), st.integers(1, 4), st.integers(0, 1))
+    @settings(max_examples=10, deadline=None)
+    def test_random_sandwich_depths_stay_exact(self, hw, c, residual):
+        n = 2 * hw
+        g = Graph("p")
+        x = g.input((1, c, n, n))
+        h = g.transpose(x, NCHW2NHWC)
+        h = g.conv2d(h, 4)
+        h = g.transpose(h, NHWC2NCHW)
+        h = g.relu(h)
+        if residual:
+            skip = h
+            h = g.transpose(h, NCHW2NHWC)
+            h = g.conv2d(h, 4)
+            h = g.transpose(h, NHWC2NCHW)
+            h = g.add(h, skip)
+        h = g.flatten(h)
+        g.output(g.dense(h, 3))
+        dfg = g.build()
+        res = run_default_pipeline(dfg)
+        _exact(dfg, res.dfg, seed=hw * 7 + c)
+
+
+class TestReorderThroughBackends:
+    def test_sequential_flatten_layer(self):
+        net = Sequential(
+            [Flatten()], input_shape=(1, 3, 4, 2), name="flat",
+        )
+        dfg = net.build()
+        assert dfg.values[dfg.graph_outputs[0]].shape == (1, 24)
+
+    def test_compiled_artifact_runs_reorders_bit_exact(self):
+        from repro import api
+
+        dfg = _imported_chain(with_residual=True)
+        env = interp.random_env(dfg, seed=9)
+        want = interp.graph_outputs(dfg, env)
+        for t in ("kv260", "zu3eg"):
+            art = api.compile_graph(dfg, api.CompileOptions(target=t))
+            assert art.feasible
+            got = art.run({k: env[k] for k in dfg.graph_inputs},
+                          params=env, interpret=True)
+            np.testing.assert_array_equal(
+                np.asarray(want[dfg.graph_outputs[0]]), np.asarray(got)
+            )
+
+    def test_emitter_handles_reorder_nodes(self):
+        from repro.core.compile_driver import CompileOptions, compile_design
+        from repro.core.emit_hls import emit_design
+
+        # no passes: the transposes are still in the emitted design
+        d = compile_design(_imported_chain(),
+                           options=CompileOptions(passes=()))
+        files = emit_design(d)
+        cpp = "".join(files.values())
+        assert "transpose0" in cpp and "flatten0" in cpp
+
+    def test_streaming_charges_reorder_buffer(self):
+        from repro.core.streaming import plan_streams
+
+        g = Graph("t")
+        x = g.input((1, 8, 8, 4))
+        g.output(g.transpose(x, NHWC2NCHW))
+        plan = plan_streams(g.build())
+        node = plan.nodes["transpose0"]
+        assert node.line_buffer_bits == 8 * 8 * 4 * 8  # full tensor
+
+        # an in-order flatten is a pure wire: no buffer
+        g2 = Graph("t2")
+        y = g2.input((1, 8, 8, 4))
+        g2.output(g2.flatten(y))
+        plan2 = plan_streams(g2.build())
+        assert plan2.nodes["flatten0"].line_buffer_bits == 0
