@@ -54,22 +54,32 @@ def bench_smoke_json(path: str = "BENCH_smoke.json") -> bool:
     device preset (KV260, ZU3EG) — and write the perf-trajectory
     snapshot (cycles + BRAM per graph per target) that CI archives and
     diffs across runs (``scripts/smoke_diff.py``).  Rows come straight
-    from ``CompiledArtifact.report()``."""
+    from ``CompiledArtifact.report()``.
+
+    Every row additionally carries a ``provenance`` stamp (ISSUE 6):
+    git sha, host, compile wall seconds, and per-pass wall times —
+    measurements, not metrics, so ``smoke_diff`` excludes them from the
+    regression gate (timing jitter must never trip the >10% gate)."""
     import json
 
     from benchmarks.paper_tables import compile_cached, sweep_suite
     from repro.core.compile_driver import TARGETS
+    from repro.instrument import provenance
 
     _section(f"BENCH smoke snapshot → {path}")
     data = {}
     ok = True
+    stamp = provenance()  # identity fields, resolved once per snapshot
     print("graph,target,total_cycles,max_group_cycles,max_bram,groups,"
           "spill_bytes,weight_streamed")
     for name, make in sweep_suite().items():
         data[name] = {}
         for tname, target in TARGETS.items():
+            t0 = time.perf_counter()
             art = compile_cached(name, make, target)
+            compile_s = time.perf_counter() - t0
             rep = art.report()
+            pr = art.design.pass_result
             data[name][tname] = {
                 "total_cycles": rep.total_cycles,
                 "max_group_cycles": rep.max_group_cycles,
@@ -79,6 +89,12 @@ def bench_smoke_json(path: str = "BENCH_smoke.json") -> bool:
                 "spill_bytes": rep.spill_bytes,
                 "weight_streamed": art.design.weight_streamed,
                 "feasible": rep.feasible,
+                "provenance": dict(
+                    stamp,
+                    compile_s=round(compile_s, 4),
+                    pass_ms={p.name: round(p.wall_ms, 3)
+                             for p in pr.passes} if pr else {},
+                ),
             }
             r = data[name][tname]
             print(f"{name},{tname},{r['total_cycles']},"

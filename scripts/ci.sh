@@ -41,6 +41,22 @@ test -s "$ZOO_OUT/lenet5_g0.cpp"
 test -s "$ZOO_OUT/host_schedule.cpp"
 rm -rf "$ZOO_OUT"
 
+# instrumentation smoke (ISSUE 6): a traced compile+run must produce a
+# valid Chrome trace-event JSON; kept as trace_smoke.json for the
+# workflow artifact upload alongside the provenance-stamped BENCH rows
+python -m repro compile lenet5 --trace /tmp/trace.json --run --quiet > /dev/null
+python - /tmp/trace.json <<'PY'
+import json, sys
+from repro.instrument import validate_chrome_trace
+obj = validate_chrome_trace(json.load(open(sys.argv[1])))
+names = [e["name"] for e in obj["traceEvents"]]
+assert any(n.startswith("pass:") for n in names), "no pass spans in trace"
+assert any(n.startswith("run:") for n in names), "no runtime spans in trace"
+assert "provenance" in obj.get("otherData", {}), "trace missing provenance"
+print(f"trace OK ({len(names)} events)")
+PY
+cp /tmp/trace.json trace_smoke.json
+
 if [ "$FULL" = 1 ]; then
   python -m benchmarks.run          # includes kernel interpret-mode checks
 else

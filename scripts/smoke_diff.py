@@ -14,6 +14,9 @@ Fail-soft contract (scripts/ci.sh):
 The snapshot schema is ``{graph: {target: row}}`` since ISSUE 3; the
 flat PR 2 ``{graph: row}`` form is still accepted (treated as one
 "kv260" target) so the first diff across the schema change stays soft.
+Since ISSUE 6 every row carries a ``provenance`` stamp (git sha, host,
+wall times); those keys are measurement jitter, not metrics, and are
+stripped before diffing.
 """
 from __future__ import annotations
 
@@ -26,6 +29,10 @@ import sys
 HARD_METRIC = "total_cycles"
 SOFT_METRICS = ("total_cycles", "max_group_cycles", "max_bram", "groups",
                 "spill_bytes")
+#: per-row measurement stamps (ISSUE 6: git sha, host, wall times) —
+#: jitter by construction, stripped before any comparison so they can
+#: never trip the regression gate
+IGNORED_KEYS = ("provenance",)
 
 
 def _load(path: str) -> dict | None:
@@ -41,8 +48,13 @@ def _load(path: str) -> dict | None:
     return data
 
 
+def _strip_ignored(row: dict) -> dict:
+    return {k: v for k, v in row.items() if k not in IGNORED_KEYS}
+
+
 def _per_target(data: dict) -> dict[tuple[str, str], dict]:
-    """Normalize either schema to {(graph, target): row}."""
+    """Normalize either schema to {(graph, target): row}, dropping
+    :data:`IGNORED_KEYS` (provenance stamps) from every row."""
     rows: dict[tuple[str, str], dict] = {}
     for graph, entry in data.items():
         if not isinstance(entry, dict):
@@ -51,9 +63,9 @@ def _per_target(data: dict) -> dict[tuple[str, str], dict]:
                for v in entry.values()):
             for target, row in entry.items():
                 if isinstance(row, dict):
-                    rows[(graph, target)] = row
+                    rows[(graph, target)] = _strip_ignored(row)
         elif "total_cycles" in entry:  # PR 2 flat schema
-            rows[(graph, "kv260")] = entry
+            rows[(graph, "kv260")] = _strip_ignored(entry)
     return rows
 
 

@@ -6,7 +6,8 @@ Subcommands:
     Named graphs (the paper suite + showcases + zoo) and device targets.
 * ``compile <graph | model.onnx | model.json> [--target kv260]
   [--strategy balanced] [--weight-streaming auto|off] [--max-unroll N]
-  [--no-passes] [--emit DIR] [--save FILE] [--run] [--quiet]``
+  [--no-passes] [--emit DIR] [--save FILE] [--run] [--trace PATH]
+  [--quiet]``
     Build the named suite graph — or **import** an ONNX model / JSON
     model card (``repro.frontends``) — compile it under one
     :class:`repro.api.CompileOptions`, print the cycles/BRAM/DSP/spill
@@ -107,6 +108,7 @@ def _cmd_compile(args: argparse.Namespace) -> int:
         weight_streaming=args.weight_streaming,
         max_unroll=args.max_unroll,
         passes=() if args.no_passes else None,
+        trace=args.trace if args.trace else False,
     )
     art = api.compile_graph(dfg, options)
     if not args.quiet:
@@ -121,6 +123,10 @@ def _cmd_compile(args: argparse.Namespace) -> int:
         outs = out if isinstance(out, dict) else {"output": out}
         for name, arr in outs.items():
             print(f"ran OK: {name} shape {tuple(arr.shape)} dtype {arr.dtype}")
+    if args.trace:
+        # written last so pass/DP/DSE spans, emitter timing, and any
+        # --run runtime counters all land in the one trace
+        print(f"trace written {art.write_trace(args.trace)}")
     return 0 if art.feasible else 1
 
 
@@ -156,6 +162,10 @@ def main(argv=None) -> int:
     c.add_argument("--run", action="store_true",
                    help="execute the Pallas path (interpret mode) with "
                         "imported weights when available")
+    c.add_argument("--trace", metavar="PATH",
+                   help="instrument the compile (and --emit/--run) and "
+                        "write a Chrome trace-event JSON here "
+                        "(chrome://tracing / Perfetto)")
     c.add_argument("--quiet", action="store_true",
                    help="suppress the report table")
     args = ap.parse_args(argv)

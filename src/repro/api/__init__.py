@@ -38,7 +38,15 @@ from repro.core.compile_driver import (
     compile_design,
 )
 
-from .artifact import CompiledArtifact, GroupReport, Report, compile_graph
+from repro.instrument import Tracer, use_tracer, validate_chrome_trace
+
+from .artifact import (
+    CompiledArtifact,
+    GroupReport,
+    Report,
+    TransitionReport,
+    compile_graph,
+)
 from .builder import (
     Activation,
     AvgPool,
@@ -85,7 +93,11 @@ __all__ = [
     "CompiledArtifact",
     "GroupReport",
     "Report",
+    "Tracer",
+    "TransitionReport",
     "compile_graph",
+    "use_tracer",
+    "validate_chrome_trace",
     "Activation",
     "AvgPool",
     "Conv2D",

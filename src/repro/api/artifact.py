@@ -21,18 +21,22 @@ artifact re-lowers through the same executable cache as a fresh one.
 """
 from __future__ import annotations
 
+import contextlib
 import math
 import os
 import pickle
-from dataclasses import dataclass
+import time
+from dataclasses import dataclass, field
 from typing import Mapping, Optional
 
+import repro.instrument as instrument
 from repro.core.compile_driver import (
     CompiledDesign,
     CompileOptions,
     compile_design,
 )
 from repro.core.ir import DFG
+from repro.core.resource_model import transition_cycles
 
 #: bumped when the pickled payload's schema changes; load() rejects
 #: mismatches loudly instead of failing deep inside the schedule IR
@@ -54,8 +58,30 @@ class GroupReport:
 
 
 @dataclass(frozen=True)
+class TransitionReport:
+    """One group→group boundary: the DMA the host schedule overlaps."""
+
+    left: str
+    right: str
+    write_bytes: int
+    read_bytes: int
+    cycles: int
+
+
+@dataclass(frozen=True)
 class Report:
-    """Whole-design accounting, printable as a table."""
+    """Whole-design accounting, printable as a table.
+
+    ``transitions`` itemizes the boundary DMA of a partitioned design
+    (per cut: spill-write/fill-read bytes and the overlapped cycle
+    cost) — previously only the aggregate ``spill_cycles`` was visible.
+
+    ``telemetry`` (ISSUE 6) carries measured, non-deterministic data —
+    per-pass wall times, partition-DP search statistics, jit-cache
+    counters, the artifact's last ``run()`` stats — and is excluded
+    from equality: two compiles of the same graph produce equal
+    Reports even though their wall times differ.
+    """
 
     graph: str
     target: str
@@ -69,6 +95,8 @@ class Report:
     max_dsp: int
     d_total: int
     spill_bytes: int
+    transitions: tuple[TransitionReport, ...] = ()
+    telemetry: Optional[dict] = field(default=None, compare=False)
 
     def __str__(self) -> str:
         head = (
@@ -81,13 +109,66 @@ class Report:
         )
         lines = [head, "group,nodes,cycles,bram,dsp,spill_in_B,spill_out_B,"
                        "weight_streamed"]
+        trans = {t.left: t for t in self.transitions}
         for g in self.groups:
             ws = ";".join(f"{n}/{t}" for n, t in g.weight_streamed) or "-"
             lines.append(
                 f"{g.name},{'+'.join(g.nodes)},{g.cycles},{g.bram},{g.dsp},"
                 f"{g.spill_in_bytes},{g.spill_out_bytes},{ws}"
             )
+            t = trans.get(g.name)
+            if t is not None:
+                lines.append(
+                    f"  -- dma {t.left}->{t.right}: "
+                    f"write {t.write_bytes} B, read {t.read_bytes} B, "
+                    f"{t.cycles} cycles (overlapped)"
+                )
+        lines.extend(self._telemetry_lines())
         return "\n".join(lines)
+
+    def _telemetry_lines(self) -> list[str]:
+        tel = self.telemetry
+        if not tel:
+            return []
+        lines = ["telemetry:"]
+        passes = tel.get("passes")
+        if passes:
+            total = sum(p["wall_ms"] for p in passes)
+            hot = ", ".join(
+                f"{p['name']} {p['wall_ms']:.2f}ms"
+                for p in sorted(passes, key=lambda p: -p["wall_ms"])[:4]
+            )
+            lines.append(f"  passes: {total:.2f} ms total ({hot})")
+        dp = tel.get("partition")
+        if dp:
+            rej = dp.get("rejected_by_reason") or {}
+            rej_s = " ".join(f"{k}:{v}" for k, v in sorted(rej.items()))
+            lines.append(
+                f"  partition: dp_states={dp.get('dp_states', 0)} "
+                f"memo_hits={dp.get('dp_memo_hits', 0)} "
+                f"ilp_solves={dp.get('ilp_solves', 0)} "
+                f"streamed_resolves={dp.get('streamed_resolves', 0)} "
+                f"rejected_cuts={len(dp.get('rejected_cuts', []))}"
+                + (f" ({rej_s})" if rej_s else "")
+            )
+        cache = tel.get("exec_cache")
+        if cache:
+            lines.append(
+                f"  jit cache: {cache.get('hits', 0)} hits / "
+                f"{cache.get('misses', 0)} misses (cumulative)"
+            )
+        run = tel.get("last_run")
+        if run:
+            per_group = " ".join(
+                f"{g['group']} {g['wall_ms']:.1f}ms({g['jit_cache']})"
+                for g in run.get("groups", [])
+            )
+            lines.append(
+                f"  last run: {run.get('samples', 1)} sample(s), "
+                f"{run.get('wall_ms', 0.0):.1f} ms wall"
+                + (f", groups: {per_group}" if per_group else "")
+            )
+        return lines
 
 
 class CompiledArtifact:
@@ -95,6 +176,46 @@ class CompiledArtifact:
 
     def __init__(self, design: CompiledDesign) -> None:
         self.design = design
+        #: runtime counters of the most recent :meth:`run` (ISSUE 6):
+        #: wall time, per-group latency + jit-cache outcome, exec-cache
+        #: hit/miss delta, boundary-DMA bytes; ``None`` until a run
+        self.last_run_stats: Optional[dict] = None
+
+    @contextlib.contextmanager
+    def _tracer_scope(self):
+        """Install the compile-time tracer (``CompileOptions.trace``)
+        for a consumer call, unless an enabled tracer is already
+        ambient — runtime counters then land in the same trace as the
+        compile spans.  Always yields a usable tracer (the no-op null
+        tracer when nothing is attached)."""
+        if instrument.current().enabled:
+            yield instrument.current()
+            return
+        with instrument.use_tracer(self.design.tracer):
+            yield instrument.current()
+
+    @property
+    def tracer(self):
+        """The attached :class:`repro.instrument.Tracer` (or None)."""
+        return self.design.tracer
+
+    def write_trace(self, path: str, *,
+                    provenance: Optional[Mapping] = None) -> str:
+        """Export the attached tracer's events as Chrome trace-event
+        JSON (validated before writing; load it in ``chrome://tracing``
+        or Perfetto).  Requires a traced compile
+        (``CompileOptions(trace=...)``)."""
+        tracer = self.design.tracer
+        if tracer is None:
+            raise ValueError(
+                "no trace attached — compile with "
+                "CompileOptions(trace=True) (or --trace PATH on the CLI)"
+            )
+        extra = dict(provenance) if provenance else {}
+        extra.setdefault("graph", self.source.name)
+        extra.setdefault("target", self.target_name)
+        return tracer.write(path,
+                            provenance=instrument.provenance(extra))
 
     # -- identity ------------------------------------------------------------
 
@@ -131,7 +252,9 @@ class CompiledArtifact:
 
         os.makedirs(outdir, exist_ok=True)
         paths = []
-        for fname, contents in emit_design(self.design).items():
+        with self._tracer_scope():
+            files = emit_design(self.design)
+        for fname, contents in files.items():
             path = os.path.join(outdir, fname)
             with open(path, "w") as f:
                 f.write(contents)
@@ -197,13 +320,42 @@ class CompiledArtifact:
             )
         batch = self._batch_extent(src, inputs)
         if batch is not None:
-            per_sample = [
-                self.run(
-                    {k: v[i] for k, v in inputs.items()},
-                    params, interpret=interpret, jit=jit, seed=seed,
-                )
-                for i in range(batch)
-            ]
+            with self._tracer_scope() as tracer:
+                t0 = time.perf_counter()
+                per_sample = []
+                per_sample_stats = []
+                for i in range(batch):
+                    with tracer.span(f"sample:{i}", cat="runtime"):
+                        t_s = time.perf_counter()
+                        per_sample.append(self.run(
+                            {k: v[i] for k, v in inputs.items()},
+                            params, interpret=interpret, jit=jit, seed=seed,
+                        ))
+                        ms = (time.perf_counter() - t_s) * 1e3
+                    tracer.counter("sample_latency_ms", {"ms": ms})
+                    if self.last_run_stats is not None:
+                        per_sample_stats.append(
+                            dict(self.last_run_stats, sample=i,
+                                 wall_ms=round(ms, 3))
+                        )
+                if per_sample_stats:
+                    self.last_run_stats = {
+                        "samples": batch,
+                        "wall_ms": round((time.perf_counter() - t0) * 1e3, 3),
+                        "per_sample_ms": [s["wall_ms"]
+                                          for s in per_sample_stats],
+                        "groups": per_sample_stats[-1].get("groups", []),
+                        "exec_cache": {
+                            "hits": sum(s["exec_cache"]["hits"]
+                                        for s in per_sample_stats),
+                            "misses": sum(s["exec_cache"]["misses"]
+                                          for s in per_sample_stats),
+                        },
+                        "dma_write_bytes":
+                            per_sample_stats[-1].get("dma_write_bytes", 0),
+                        "dma_read_bytes":
+                            per_sample_stats[-1].get("dma_read_bytes", 0),
+                    }
             import numpy as _np
 
             if len(src.graph_outputs) == 1:
@@ -240,7 +392,15 @@ class CompiledArtifact:
         if params:
             env.update(params)
         env.update(inputs)
-        out = ops.run_compiled(self.design, env, interpret=interpret, jit=jit)
+        rstats: dict = {}
+        with self._tracer_scope() as tracer:
+            with tracer.span(f"run:{src.name}", cat="runtime"):
+                out = ops.run_compiled(self.design, env,
+                                       interpret=interpret, jit=jit,
+                                       stats_out=rstats)
+        rstats["samples"] = 1
+        rstats["exec_cache_total"] = dict(ops.exec_cache_stats)
+        self.last_run_stats = rstats
         if len(src.graph_outputs) == 1:
             return out[src.graph_outputs[0]]
         return out
@@ -308,6 +468,18 @@ class CompiledArtifact:
             )
             for g in d.groups
         )
+        transitions = tuple(
+            TransitionReport(
+                left=left.name,
+                right=right.name,
+                write_bytes=w,
+                read_bytes=r,
+                cycles=transition_cycles(w, r),
+            )
+            for (left, right), (w, r) in zip(
+                zip(d.groups, d.groups[1:]), d.boundary_traffic()
+            )
+        )
         return Report(
             graph=src.name,
             target=self.target_name,
@@ -321,7 +493,37 @@ class CompiledArtifact:
             max_dsp=d.max_dsp,
             d_total=d.d_total,
             spill_bytes=sum(s.bytes for s in d.spills()),
+            transitions=transitions,
+            telemetry=self._telemetry(),
         )
+
+    def _telemetry(self) -> Optional[dict]:
+        """Measured compile/run telemetry (ISSUE 6): per-pass wall
+        times, partition-DP search statistics, cumulative jit-cache
+        counters, and the most recent run's counters.  ``None`` only
+        for bare designs with nothing recorded."""
+        import sys
+
+        d = self.design
+        tel: dict = {}
+        if d.pass_result is not None:
+            tel["passes"] = [
+                {"name": p.name, "wall_ms": round(p.wall_ms, 3),
+                 "changed": p.changed}
+                for p in d.pass_result.passes
+            ]
+        if d.dp_stats is not None:
+            tel["partition"] = d.dp_stats
+        # the jit-cache counters live in repro.kernels.ops, which pulls
+        # in jax — report() must stay importable without it (the
+        # benchmark smoke path is model-only), so only surface the
+        # counters when the kernel layer is already loaded
+        ops = sys.modules.get("repro.kernels.ops")
+        if ops is not None:
+            tel["exec_cache"] = dict(ops.exec_cache_stats)
+        if self.last_run_stats is not None:
+            tel["last_run"] = self.last_run_stats
+        return tel or None
 
     # -- persistence (the benchmark cache) -----------------------------------
 

@@ -38,6 +38,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Optional, TYPE_CHECKING
 
+import repro.instrument as instrument
+
 from .dse import DseResult
 from .ir import DFG
 from .resource_model import (
@@ -114,6 +116,14 @@ class CompileOptions:
     ``verify``
         Run the structural verifier between passes (PassManager
         contract); only worth disabling in tight benchmark loops.
+    ``trace``
+        Instrumentation (ISSUE 6): ``False`` (default) compiles with
+        the ambient tracer (usually the no-op null tracer — zero
+        observable effect); ``True`` attaches a fresh
+        :class:`repro.instrument.Tracer` to the design so pass/DP/DSE
+        spans and runtime counters are collected; a string path does
+        the same and is where the CLI writes the Chrome trace JSON.
+        Tracing never changes schedules, emitted HLS, or BENCH metrics.
     """
 
     target: Target | str = "kv260"
@@ -122,6 +132,7 @@ class CompileOptions:
     weight_streaming: str = "auto"
     max_unroll: Optional[int] = None
     verify: bool = True
+    trace: bool | str = False
 
     def __post_init__(self) -> None:
         t = self.target
@@ -149,6 +160,16 @@ class CompileOptions:
             )
         if self.max_unroll is not None and self.max_unroll < 1:
             raise ValueError(f"max_unroll must be >= 1, got {self.max_unroll}")
+        if not isinstance(self.trace, (bool, str)):
+            raise ValueError(
+                f"trace must be False, True, or an output path, got "
+                f"{type(self.trace).__name__}"
+            )
+        if isinstance(self.trace, str) and not self.trace:
+            raise ValueError(
+                "trace='' is ambiguous — use trace=False to disable or "
+                "trace=True to collect without writing"
+            )
         if self.passes is not None:
             names = tuple(self.passes)
             object.__setattr__(self, "passes", names)
@@ -162,6 +183,11 @@ class CompileOptions:
     def resolved_max_unroll(self) -> int:
         return self.max_unroll if self.max_unroll is not None \
             else self.target.max_unroll
+
+    @property
+    def trace_path(self) -> Optional[str]:
+        """The trace output path when ``trace`` names one, else None."""
+        return self.trace if isinstance(self.trace, str) else None
 
     def run_pipeline(self, dfg: DFG):
         """Run the selected pass pipeline over ``dfg`` (clone-first, as
@@ -264,6 +290,21 @@ class CompiledDesign:
     #: the validated knob bundle this design was compiled under (None
     #: for designs built through the bare partitioner API)
     options: Optional[CompileOptions] = None
+    #: partition-DP search statistics (states explored, memo hits,
+    #: rejected cuts with reasons, final frontier) — always recorded by
+    #: the partitioner, surfaced through Report/trace (ISSUE 6)
+    dp_stats: Optional[dict] = field(default=None, repr=False, compare=False)
+    #: the Tracer that observed this compile when CompileOptions.trace
+    #: was set; CompiledArtifact re-installs it for run()/emit_hls() so
+    #: runtime counters land in the same trace.  Never pickled.
+    tracer: Optional[object] = field(default=None, repr=False, compare=False)
+
+    def __getstate__(self):
+        # a save()d design must not drag its trace along: traces are an
+        # export (write_trace), not part of the schedule IR
+        state = dict(self.__dict__)
+        state["tracer"] = None
+        return state
 
     # -- group-level accounting ---------------------------------------------
 
@@ -410,13 +451,28 @@ def compile_design(
             "target/strategy/run_passes kwargs, not both"
         )
 
-    pass_result = options.run_pipeline(dfg)
-    lowered = pass_result.dfg if pass_result is not None else dfg
-    design = partition_layer_groups(lowered, options=options)
+    # tracer lifecycle (ISSUE 6): options.trace attaches a fresh Tracer
+    # unless one is already ambient (a CLI/benchmark harness driving
+    # several compiles into one trace); with trace off, the ambient
+    # tracer — normally the no-op NULL_TRACER — is used as-is, so the
+    # disabled path is byte-identical to the uninstrumented one.
+    ambient = instrument.current()
+    owned = instrument.Tracer() if options.trace and not ambient.enabled \
+        else None
+    with instrument.use_tracer(owned):
+        tracer = instrument.current()
+        with tracer.span(f"compile:{dfg.name}", cat="compile",
+                         args={"target": options.target.name,
+                               "strategy": options.strategy}):
+            pass_result = options.run_pipeline(dfg)
+            lowered = pass_result.dfg if pass_result is not None else dfg
+            design = partition_layer_groups(lowered, options=options)
     design.target = options.target
     design.original = dfg
     design.pass_result = pass_result
     design.options = options
+    if tracer.enabled:
+        design.tracer = tracer
     return design
 
 

@@ -385,12 +385,22 @@ def emit_design(design) -> dict[str, str]:
     Every datum comes from the design's :class:`GroupSchedule`s — no
     plan state is re-derived here.
     """
+    import repro.instrument as instrument
+
+    tracer = instrument.current()
     files: dict[str, str] = {}
-    for g in design.groups:
-        files[f"{g.name}.cpp"] = emit_cpp(
-            g.plan, g.dse, top_name=g.name, m_axi_wrapper=True
-        )
-    files["host_schedule.cpp"] = emit_host_schedule(design)
+    with tracer.span(f"emit:{design.source.name}", cat="emit") as eargs:
+        for g in design.groups:
+            with tracer.span(f"emit:{g.name}.cpp", cat="emit") as gargs:
+                files[f"{g.name}.cpp"] = emit_cpp(
+                    g.plan, g.dse, top_name=g.name, m_axi_wrapper=True
+                )
+                gargs.update({"bytes": len(files[f"{g.name}.cpp"]),
+                              "nodes": len(g.dfg.nodes)})
+        with tracer.span("emit:host_schedule.cpp", cat="emit") as hargs:
+            files["host_schedule.cpp"] = emit_host_schedule(design)
+            hargs["bytes"] = len(files["host_schedule.cpp"])
+        eargs["files"] = len(files)
     return files
 
 

@@ -1,0 +1,51 @@
+"""Compiler & runtime instrumentation (ISSUE 6) — zero-dependency.
+
+One layer, three pieces:
+
+* :mod:`repro.instrument.tracer` — the span/instant/counter
+  :class:`Tracer`, the ambient contextvar slot (:func:`use_tracer` /
+  :func:`current`), and Chrome trace-event export + validation;
+* :mod:`repro.instrument.snapshot` — structural DFG snapshots and
+  diffs (``-print-ir-after-all``);
+* :mod:`repro.instrument.provenance` — git-sha/host/time stamps for
+  BENCH rows and exported traces.
+
+The contract that makes this safe to thread everywhere: with no tracer
+installed, every entry point here is a true no-op and instrumented code
+produces byte-identical output (pinned by ``tests/test_instrument.py``).
+"""
+from .provenance import git_sha, provenance
+from .snapshot import diff_is_empty, diff_snapshots, format_dfg, snapshot_dfg
+from .tracer import (
+    CATEGORIES,
+    NULL_TRACER,
+    NullTracer,
+    Tracer,
+    counter,
+    current,
+    instant,
+    span,
+    tracing_active,
+    use_tracer,
+    validate_chrome_trace,
+)
+
+__all__ = [
+    "CATEGORIES",
+    "NULL_TRACER",
+    "NullTracer",
+    "Tracer",
+    "counter",
+    "current",
+    "diff_is_empty",
+    "diff_snapshots",
+    "format_dfg",
+    "git_sha",
+    "instant",
+    "provenance",
+    "snapshot_dfg",
+    "span",
+    "tracing_active",
+    "use_tracer",
+    "validate_chrome_trace",
+]

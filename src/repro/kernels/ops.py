@@ -24,10 +24,13 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import time
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
+
+import repro.instrument as instrument
 
 from repro.core.analysis import (
     KernelClass,
@@ -361,24 +364,84 @@ def lower_group(group, *, interpret: bool | None = None, jit: bool = True):
     fn = _EXEC_CACHE.get(key)
     if fn is None:
         exec_cache_stats["misses"] += 1
+        event = "miss"
         fn = _build_group_fn(group, interpret, jit=True)
         if len(_EXEC_CACHE) >= _EXEC_CACHE_CAP:  # bounded: drop oldest
             _EXEC_CACHE.pop(next(iter(_EXEC_CACHE)))
         _EXEC_CACHE[key] = fn
     else:
         exec_cache_stats["hits"] += 1
+        event = "hit"
+    tracer = instrument.current()
+    if tracer.enabled:
+        tracer.instant("jit_cache", cat="runtime",
+                       args={"group": group.name, "event": event})
+        tracer.counter("jit_cache", dict(exec_cache_stats))
     return fn
 
 
 def run_compiled(design, env, *, interpret: bool | None = None,
-                 jit: bool = True) -> dict:
+                 jit: bool = True, stats_out: dict | None = None) -> dict:
     """Execute a :class:`~repro.core.compile_driver.CompiledDesign` on
     the Pallas path: groups run in schedule order, chained through the
     value environment (the dict entries standing in for the DRAM spill
-    buffers of ``host_schedule.cpp``).  Returns the graph outputs."""
+    buffers of ``host_schedule.cpp``).  Returns the graph outputs.
+
+    ``stats_out`` (ISSUE 6): pass a dict to collect runtime counters —
+    per-group wall time + jit-cache outcome, the exec-cache hit/miss
+    delta of this call, and the modeled boundary-DMA bytes per group
+    transition.  Counter collection (also active whenever a tracer is
+    installed) blocks on each group's outputs so per-group wall times
+    measure execution, not async dispatch; the uninstrumented path is
+    untouched.
+    """
+    tracer = instrument.current()
+    collect = stats_out is not None or tracer.enabled
     env = dict(env)
-    for g in design.groups:
-        env.update(lower_group(g, interpret=interpret, jit=jit)(env))
+    if not collect:
+        for g in design.groups:
+            env.update(lower_group(g, interpret=interpret, jit=jit)(env))
+        return {v: env[v] for v in design.source.graph_outputs}
+
+    before = dict(exec_cache_stats)
+    transitions = design.boundary_traffic()
+    rows = []
+    t_run0 = time.perf_counter()
+    for idx, g in enumerate(design.groups):
+        g_before = dict(exec_cache_stats)
+        t0 = time.perf_counter()
+        with tracer.span(f"run:{g.name}", cat="runtime") as sargs:
+            out = lower_group(g, interpret=interpret, jit=jit)(env)
+            out = jax.block_until_ready(out)
+            env.update(out)
+            row = {
+                "group": g.name,
+                "jit_cache": (
+                    "hit" if exec_cache_stats["hits"] > g_before["hits"]
+                    else "miss"
+                    if exec_cache_stats["misses"] > g_before["misses"]
+                    else "unjitted"
+                ),
+            }
+            if idx < len(transitions):
+                w, r = transitions[idx]
+                row["dma_write_bytes"] = w
+                row["dma_read_bytes"] = r
+                tracer.counter("dma_bytes", {"write": w, "read": r})
+            sargs.update(row)
+        row["wall_ms"] = round((time.perf_counter() - t0) * 1e3, 3)
+        rows.append(row)
+    if stats_out is not None:
+        stats_out.update({
+            "groups": rows,
+            "wall_ms": round((time.perf_counter() - t_run0) * 1e3, 3),
+            "exec_cache": {
+                "hits": exec_cache_stats["hits"] - before["hits"],
+                "misses": exec_cache_stats["misses"] - before["misses"],
+            },
+            "dma_write_bytes": sum(w for w, _ in transitions),
+            "dma_read_bytes": sum(r for _, r in transitions),
+        })
     return {v: env[v] for v in design.source.graph_outputs}
 
 

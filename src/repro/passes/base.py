@@ -12,8 +12,10 @@ Every future rewrite lands as a Pass: implement ``run_on(dfg) -> dict``
 from __future__ import annotations
 
 import abc
+import time
 from dataclasses import dataclass, field
 
+import repro.instrument as instrument
 from repro.core.ir import DFG
 
 from .verifier import VerificationError, verify_dfg
@@ -35,11 +37,17 @@ class Pass(abc.ABC):
 
 @dataclass(frozen=True)
 class PassStats:
-    """Outcome of one pass application."""
+    """Outcome of one pass application.
+
+    ``wall_ms`` is the pass's measured wall time (the ``-mlir-timing``
+    datum); it rides along in telemetry/provenance but never enters any
+    schedule, emission, or BENCH metric — outputs stay deterministic.
+    """
 
     name: str
     changed: bool
     stats: dict[str, int]
+    wall_ms: float = 0.0
 
 
 @dataclass
@@ -79,20 +87,43 @@ class PassManager:
         self.verify = verify
 
     def run(self, dfg: DFG, *, clone: bool = True) -> PipelineResult:
+        tracer = instrument.current()
         g = dfg.clone() if clone else dfg
         if self.verify:
             verify_dfg(g)  # reject malformed inputs before rewriting
         result = PipelineResult(dfg=g)
-        for p in self.passes:
-            stats = p.run_on(g) or {}
-            if self.verify:
-                try:
-                    verify_dfg(g)
-                except VerificationError as e:
-                    raise VerificationError(
-                        f"pass {p.name!r} produced a malformed DFG: {e}"
-                    ) from e
-            result.passes.append(
-                PassStats(p.name, any(v for v in stats.values()), dict(stats))
-            )
+        snap = instrument.snapshot_dfg(g) if tracer.enabled else None
+        with tracer.span(f"pipeline:{g.name}", cat="passes") as pipe_args:
+            for p in self.passes:
+                with tracer.span(f"pass:{p.name}", cat="passes") as sargs:
+                    t0 = time.perf_counter()
+                    stats = p.run_on(g) or {}
+                    wall_ms = (time.perf_counter() - t0) * 1e3
+                    sargs.update(stats)
+                if self.verify:
+                    with tracer.span(f"verify:{p.name}", cat="passes"):
+                        try:
+                            verify_dfg(g)
+                        except VerificationError as e:
+                            raise VerificationError(
+                                f"pass {p.name!r} produced a malformed "
+                                f"DFG: {e}"
+                            ) from e
+                result.passes.append(PassStats(
+                    p.name, any(v for v in stats.values()), dict(stats),
+                    wall_ms=wall_ms,
+                ))
+                if tracer.enabled:
+                    # -print-ir-after-all: structural diff per pass, the
+                    # full textual IR only on request (ir_snapshots)
+                    after = instrument.snapshot_dfg(g)
+                    args: dict = {
+                        "diff": instrument.diff_snapshots(snap, after)
+                    }
+                    if tracer.ir_snapshots:
+                        args["ir"] = instrument.format_dfg(g)
+                    tracer.instant(f"ir_after:{p.name}", cat="passes",
+                                   args=args)
+                    snap = after
+            pipe_args["passes"] = len(self.passes)
         return result

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 from typing import Optional
 
+import repro.instrument as instrument
 from repro.core.compile_driver import (
     _STRATEGIES,
     _WEIGHT_STREAMING,
@@ -91,13 +92,60 @@ class _GroupPlanner:
         self.weight_streaming = weight_streaming
         self._resident: dict[tuple[int, int], tuple] = {}
         self._cache: dict[tuple[int, int], GroupSchedule] = {}
+        #: search statistics the DP trace and ``CompiledDesign.dp_stats``
+        #: surface — counts only, never consulted by the search itself
+        self.stats: dict = {
+            "nodes": len(self.order),
+            "ilp_solves": 0,
+            "streamed_resolves": 0,
+            "slices_planned": 0,
+            "slice_cache_hits": 0,
+            "dp_states": 0,
+            "dp_memo_hits": 0,
+            "rejected_cuts": [],
+        }
+
+    def _reject_reason(self, dse) -> str:
+        """Why an infeasible slice was rejected, from its unroll=1
+        estimate vs the budgets: over BRAM, over DSP, both, or
+        infeasible for another reason (e.g. no legal candidates)."""
+        over = []
+        if dse.bram_used > self.b_total:
+            over.append("BRAM")
+        if dse.dsp_used > self.d_total:
+            over.append("DSP")
+        return "+".join(over) or "infeasible"
+
+    def _record_reject(self, i: int, j: int, dse, *, streamed: bool,
+                       rescued: bool = False) -> None:
+        """Log ``order[i:j]`` as a rejected cut candidate.  ``rescued``
+        marks a slice that was infeasible with resident weights but
+        kept after a streamed re-solve — rejected *as a resident cut*,
+        which is the reason (BRAM/DSP) the trace surfaces."""
+        self.stats["rejected_cuts"].append({
+            "i": i, "j": j,
+            "first": self.order[i], "last": self.order[j - 1],
+            "reason": self._reject_reason(dse),
+            "bram": dse.bram_used, "dsp": dse.dsp_used,
+            "streamed_tried": streamed,
+            "streamed_rescued": rescued,
+        })
 
     def _solve(self, plan, *, weight_streaming: bool):
-        return solve_ilp(
-            plan, d_total=self.d_total, b_total=self.b_total,
-            model=self.model, max_unroll=self.max_unroll,
-            weight_streaming=weight_streaming,
-        )
+        with instrument.span(
+            f"ilp:{plan.dfg.name}", cat="dse",
+            args={"nodes": len(plan.node_order()),
+                  "weight_streaming": weight_streaming},
+        ) as sargs:
+            dse = solve_ilp(
+                plan, d_total=self.d_total, b_total=self.b_total,
+                model=self.model, max_unroll=self.max_unroll,
+                weight_streaming=weight_streaming,
+            )
+            sargs.update({"explored": dse.explored,
+                          "feasible": dse.feasible,
+                          "objective_cycles": dse.objective_cycles})
+        return dse
 
     def _resident_plan(self, i: int, j: int):
         """(subgraph, streaming plan, resident-weights DSE) for
@@ -110,6 +158,7 @@ class _GroupPlanner:
             names = self.order[i:j]
             sub = self.dfg.subgraph(names, name=f"{self.dfg.name}_g0")
             plan = plan_streams(sub)
+            self.stats["ilp_solves"] += 1
             hit = (sub, plan, self._solve(plan, weight_streaming=False))
             self._resident[key] = hit
         return hit
@@ -121,17 +170,33 @@ class _GroupPlanner:
         key = (i, j)
         g = self._cache.get(key)
         if g is None:
+            self.stats["slices_planned"] += 1
             sub, plan, dse = self._resident_plan(i, j)
+            resident = dse
+            tried_stream = False
             if not dse.feasible and self.weight_streaming != "off":
+                tried_stream = True
+                self.stats["ilp_solves"] += 1
+                self.stats["streamed_resolves"] += 1
                 streamed = self._solve(plan, weight_streaming=True)
                 if streamed.feasible:
                     dse = streamed
+            if not resident.feasible:
+                # a resident-infeasible slice is a rejected cut
+                # candidate either way: when the streamed re-solve
+                # rescues it the slice survives *streamed*, but the
+                # resident rejection (and its BRAM/DSP reason) is what
+                # explains the schedule in the trace
+                self._record_reject(i, j, resident, streamed=tried_stream,
+                                    rescued=dse.feasible)
             spill_in = [v for v in sub.graph_inputs
                         if v not in self.dfg.graph_inputs]
             spill_out = [v for v in sub.graph_outputs
                          if v not in self.dfg.graph_outputs]
             g = GroupSchedule(sub.name, sub, plan, dse, spill_in, spill_out)
             self._cache[key] = g
+        else:
+            self.stats["slice_cache_hits"] += 1
         return g
 
     def renamed(self, i: int, j: int, index: int) -> GroupSchedule:
@@ -218,7 +283,9 @@ def _balanced_cuts(planner: _GroupPlanner) -> list[tuple[int, int]]:
     def best(i: int) -> tuple[tuple[int, int, int], list[tuple[int, int]]]:
         hit = memo.get(i)
         if hit is not None:
+            planner.stats["dp_memo_hits"] += 1
             return hit
+        planner.stats["dp_states"] += 1
         end = planner.max_feasible_end(i)
         best_key: tuple[int, int, int] | None = None
         best_cuts: list[tuple[int, int]] = []
@@ -316,15 +383,49 @@ def partition_layer_groups(
         dfg, d_total=d_total, b_total=b_total, model=model,
         max_unroll=max_unroll, weight_streaming=weight_streaming,
     )
+    tracer = instrument.current()
     n = len(planner.order)
-    if planner.resident_feasible(0, n):
-        # fits whole with weights on-chip: never cut a feasible graph
-        # (the ROADMAP reconfiguration-cost item gates that trade)
-        return CompiledDesign(dfg, [planner.renamed(0, n, 0)],
-                              d_total, b_total, whole_graph_feasible=True,
-                              options=options)
+    with tracer.span(f"partition:{dfg.name}", cat="partition") as pargs:
+        if planner.resident_feasible(0, n):
+            # fits whole with weights on-chip: never cut a feasible graph
+            # (the ROADMAP reconfiguration-cost item gates that trade)
+            cuts = [(0, n)]
+            whole = True
+        else:
+            whole = False
+            cuts = (_balanced_cuts if strategy == "balanced"
+                    else _greedy_cuts)(planner)
+        groups = [planner.renamed(i, j, idx)
+                  for idx, (i, j) in enumerate(cuts)]
+        design = CompiledDesign(dfg, groups, d_total, b_total,
+                                whole_graph_feasible=whole, options=options)
+        design.dp_stats = _finish_stats(planner, strategy, design, cuts)
+        pargs.update({"groups": len(groups), "whole_graph_feasible": whole})
+    if tracer.enabled:
+        tracer.instant(f"dp_stats:{dfg.name}", cat="partition",
+                       args=design.dp_stats)
+    return design
 
-    cuts = (_balanced_cuts if strategy == "balanced" else _greedy_cuts)(planner)
-    groups = [planner.renamed(i, j, idx) for idx, (i, j) in enumerate(cuts)]
-    return CompiledDesign(dfg, groups, d_total, b_total,
-                          whole_graph_feasible=False, options=options)
+
+def _finish_stats(planner: _GroupPlanner, strategy: str,
+                  design: CompiledDesign, cuts: list[tuple[int, int]]) -> dict:
+    """The search-statistics record attached to every design: planner
+    counters, a rejected-cut reason histogram, and the final frontier
+    (the kept cuts with their modeled cost)."""
+    stats = dict(planner.stats)
+    stats["rejected_cuts"] = list(stats["rejected_cuts"])
+    stats["strategy"] = strategy
+    stats["whole_graph_feasible"] = design.whole_graph_feasible
+    reasons: dict[str, int] = {}
+    for rc in stats["rejected_cuts"]:
+        reasons[rc["reason"]] = reasons.get(rc["reason"], 0) + 1
+    stats["rejected_by_reason"] = reasons
+    stats["frontier"] = [
+        {
+            "group": g.name, "i": i, "j": j,
+            "cycles": g.cycles, "bram": g.bram, "dsp": g.dsp,
+            "weight_tiles": g.weight_streamed,
+        }
+        for (i, j), g in zip(cuts, design.groups)
+    ]
+    return stats
