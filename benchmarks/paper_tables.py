@@ -81,26 +81,28 @@ _ARTIFACT_CACHE: dict[tuple[str, str], api.CompiledArtifact] = {}
 
 def compile_cached(name: str, make, target=KV260) -> api.CompiledArtifact:
     """``compile_graph(make(), target)`` as a :class:`CompiledArtifact`,
-    memoized on (suite key, target name).
+    memoized on ``(suite key, CompileOptions.cache_key())`` — the same
+    digest the serving runtime's artifact LRU uses, so an options change
+    (not just a target rename) invalidates the entry.
 
     With ``REPRO_BENCH_CACHE=<dir>`` set, artifacts additionally persist
     to disk via ``CompiledArtifact.save``/``load`` so repeated benchmark
     processes skip the balanced-DP solves entirely.  Opt-in only: a
     stale cache would mask cost-model changes, so CI never sets it."""
-    key = (name, target.name)
+    options = api.CompileOptions(target=target)
+    key = (name, options.cache_key())
     art = _ARTIFACT_CACHE.get(key)
     if art is None:
         cache_dir = os.environ.get("REPRO_BENCH_CACHE")
         path = (
-            os.path.join(cache_dir, f"{name}.{target.name}.artifact")
+            os.path.join(cache_dir,
+                         f"{name}.{options.cache_key()}.artifact")
             if cache_dir else None
         )
         if path and os.path.exists(path):
             art = api.CompiledArtifact.load(path)
         else:
-            art = api.compile_graph(
-                make(), api.CompileOptions(target=target)
-            )
+            art = api.compile_graph(make(), options)
             if path:
                 art.save(path)
         _ARTIFACT_CACHE[key] = art

@@ -1,53 +1,73 @@
-"""Batched serving example: prefill a wave of prompts, decode lock-step,
-report tokens/s — then demonstrate the decode-cache contract by checking
-the engine's greedy tokens against teacher-forced full forwards.
+"""Batched serving example on the artifact engine (ISSUE 7).
+
+Compile a zoo classifier through the serving artifact cache, stand up a
+dynamic-batching :class:`repro.serve.ServeEngine` over it, push an
+open-loop burst of requests, and show the observability contract: the
+batch coalescing, p50/p99 latency, and the serve counters landing in
+the same Chrome trace as the compile spans.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
-import time
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.registry import get_config
-from repro.launch.serve import ServeEngine
-from repro.models import lm
+from repro.core.compile_driver import CompileOptions
+from repro.frontends import zoo
+from repro.instrument import Tracer, use_tracer, validate_chrome_trace
+from repro.serve import ArtifactCache, ServeConfig, ServeEngine, run_load
 
 
 def main() -> None:
-    cfg = get_config("llama3.2-1b", smoke=True).with_(remat=False)
-    engine = ServeEngine(cfg, max_len=160, seed=0)
-    rng = np.random.default_rng(0)
+    tracer = Tracer()
+    with use_tracer(tracer):
+        # artifact LRU keyed (model, CompileOptions.cache_key()) — the
+        # second lookup is a hit, no second balanced-DP solve
+        cache = ArtifactCache(capacity=4)
+        options = CompileOptions(target="kv260")
+        art = cache.get_or_compile("lenet5", zoo.ZOO["lenet5"], options)
+        assert cache.get_or_compile("lenet5", zoo.ZOO["lenet5"],
+                                    options) is art
+        print(f"artifact cache: {cache.stats}")
 
-    # wave 1: warmup/compile
-    prompts = rng.integers(0, cfg.vocab_size, (8, 64), dtype=np.int32)
-    engine.generate(prompts, max_new=8)
+        src = art.source
+        name = src.graph_inputs[0]
+        rng = np.random.default_rng(0)
 
-    # wave 2: measured
-    out, stats = engine.generate(prompts, max_new=64)
-    print(f"batch=8 prompt=64 new=64: prefill {stats.prefill_s*1e3:.0f} ms, "
-          f"decode {stats.decode_s*1e3:.0f} ms, "
-          f"{stats.tokens_per_s:.0f} tok/s (CPU)")
+        cfg = ServeConfig(max_batch=16, latency_budget_ms=5.0)
+        with ServeEngine(art, cfg) as engine:
+            # single blocking request (warms the bucket-1 executable)
+            x = rng.integers(-4, 5, src.values[name].shape, dtype=np.int32)
+            y = engine(x)
+            print(f"single request → logits {y.shape}")
 
-    # correctness: engine greedy == teacher-forced argmax
-    small = rng.integers(0, cfg.vocab_size, (2, 16), dtype=np.int32)
-    got, _ = engine.generate(small, max_new=4)
-    seq = small.copy()
-    for t in range(4):
-        logits, _ = lm.lm_prefill(engine.params, cfg,
-                                  {"tokens": jnp.asarray(seq)})
-        nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
-        assert np.array_equal(nxt, got[:, t]), f"divergence at step {t}"
-        seq = np.concatenate([seq, nxt[:, None]], axis=1)
-    print("decode-cache contract verified: engine tokens == teacher-forced "
-          "argmax for 4 steps")
+            # a concurrent burst coalesces into vmapped batches
+            futs = [
+                engine.submit(
+                    rng.integers(-4, 5, src.values[name].shape,
+                                 dtype=np.int32)
+                )
+                for _ in range(32)
+            ]
+            outs = [f.result() for f in futs]
+            print(f"burst of 32 → {engine.stats['batches']} batches "
+                  f"(max batch seen {engine.stats['max_batch_seen']})")
+            assert all(o.shape == outs[0].shape for o in outs)
 
-    # temperature sampling determinism under a seed
-    s1, _ = engine.generate(small, max_new=8, temperature=0.8, seed=42)
-    s2, _ = engine.generate(small, max_new=8, temperature=0.8, seed=42)
-    assert np.array_equal(s1, s2)
-    print("seeded sampling is reproducible")
+            # open-loop load level: offered vs achieved QPS, p50/p99
+            rep = run_load(engine, offered_qps=200, requests=100, seed=1)
+            print(f"offered {rep.offered_qps:.0f} qps → achieved "
+                  f"{rep.achieved_qps:.0f} qps, p50 {rep.p50_ms:.1f} ms, "
+                  f"p99 {rep.p99_ms:.1f} ms, mean batch {rep.mean_batch:.1f}")
+
+    # one trace, one tracer: compile spans (had we traced the compile),
+    # vmapped run:<group> spans, and the serve counter series together
+    obj = tracer.to_chrome()
+    validate_chrome_trace(obj)
+    serve_events = sorted({
+        e["name"] for e in obj["traceEvents"]
+        if e["name"].startswith(("serve", "artifact"))
+    })
+    print(f"chrome trace OK: {len(obj['traceEvents'])} events, "
+          f"serve series {serve_events}")
 
 
 if __name__ == "__main__":

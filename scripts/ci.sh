@@ -67,3 +67,12 @@ fi
 # previous snapshot (fail-soft: only a >10% cycle regression hard-fails;
 # a missing archive just seeds the trajectory), then refresh the archive.
 python scripts/smoke_diff.py BENCH_smoke.json
+
+# serving smoke (ISSUE 7): a short fixed-seed load test on lenet5 must
+# clear the batched-speedup gate (vmapped >= 5x the per-sample loop,
+# bit-exact) and produce BENCH_serve.json for the workflow artifact;
+# the serve-row diff is fail-soft like the smoke diff (only a >10% p99
+# or throughput regression hard-fails, provenance stripped).
+python -m benchmarks.serve_bench --models lenet5 --targets kv260 \
+  --qps 100,400 --requests 120 --seed 0
+python scripts/smoke_diff.py BENCH_serve.json --mode serve

@@ -1,21 +1,27 @@
 #!/usr/bin/env python
-"""Fail-soft perf-trajectory diff for BENCH_smoke.json.
+"""Fail-soft perf-trajectory diff for BENCH_smoke.json / BENCH_serve.json.
 
 Compares the current snapshot against the archived previous one, prints
-per-graph (per-target) cycle/BRAM deltas, then refreshes the archive.
+per-graph (per-target) deltas, then refreshes the archive.
 
 Fail-soft contract (scripts/ci.sh):
   * no archive yet, unreadable archive, schema drift → report + archive,
     exit 0 (the trajectory starts/restarts here);
   * any metric moved → printed delta, exit 0;
-  * total_cycles regressed by more than --threshold (default 10%) on
-    any graph → exit 1 (the only hard failure).
+  * the hard metric regressed by more than --threshold (default 10%) on
+    any row → exit 1 (the only hard failure).
 
-The snapshot schema is ``{graph: {target: row}}`` since ISSUE 3; the
-flat PR 2 ``{graph: row}`` form is still accepted (treated as one
-"kv260" target) so the first diff across the schema change stays soft.
-Since ISSUE 6 every row carries a ``provenance`` stamp (git sha, host,
-wall times); those keys are measurement jitter, not metrics, and are
+``--mode smoke`` (default) diffs compile snapshots: the hard metric is
+``total_cycles``.  ``--mode serve`` (ISSUE 7) diffs serving load rows
+(``{model: {target: {"loads": [...]}}}``, keyed by offered QPS): a
+>threshold ``p99_ms`` increase *or* ``achieved_qps`` drop hard-fails;
+the ``_speedup`` section is informational and never gates.
+
+The smoke schema is ``{graph: {target: row}}`` since ISSUE 3; the flat
+PR 2 ``{graph: row}`` form is still accepted (treated as one "kv260"
+target) so the first diff across the schema change stays soft.  Since
+ISSUE 6 every row carries a ``provenance`` stamp (git sha, host, wall
+times); those keys are measurement jitter, not metrics, and are
 stripped before diffing.
 """
 from __future__ import annotations
@@ -97,14 +103,79 @@ def diff(prev: dict, cur: dict, threshold: float, emit=print) -> int:
     return regressions
 
 
+#: serve-row metrics (ISSUE 7): p99 regresses *up*, throughput *down*;
+#: the rest print fail-soft
+SERVE_SOFT_METRICS = ("achieved_qps", "p50_ms", "p99_ms", "mean_ms",
+                      "mean_batch", "rejected")
+
+
+def _per_load(data: dict) -> dict[tuple[str, str, float], dict]:
+    """Normalize a serve snapshot to {(model, target, offered_qps):
+    row}; ``_``-prefixed sections (the speedup gate) and provenance
+    stamps are not trajectory rows."""
+    rows: dict[tuple[str, str, float], dict] = {}
+    for model, entry in data.items():
+        if model.startswith("_") or not isinstance(entry, dict):
+            continue
+        for target, cell in entry.items():
+            if not isinstance(cell, dict):
+                continue
+            for row in cell.get("loads", ()):
+                if isinstance(row, dict) and "offered_qps" in row:
+                    rows[(model, target, row["offered_qps"])] = \
+                        _strip_ignored(row)
+    return rows
+
+
+def diff_serve(prev: dict, cur: dict, threshold: float, emit=print) -> int:
+    """Print serve-row deltas; return the hard regression count."""
+    p, c = _per_load(prev), _per_load(cur)
+    regressions = 0
+    emit("model,target,offered_qps,metric,previous,current,delta_pct")
+    for key in sorted(c):
+        model, target, q = key
+        if key not in p:
+            emit(f"{model},{target},{q},<new row>,,,")
+            continue
+        for m in SERVE_SOFT_METRICS:
+            a, b = p[key].get(m), c[key].get(m)
+            if not isinstance(a, (int, float)) \
+                    or not isinstance(b, (int, float)):
+                continue
+            if a == b:
+                continue
+            pct = (b - a) / a * 100 if a else float("inf")
+            emit(f"{model},{target},{q},{m},{a},{b},{pct:+.1f}%")
+            worse = (
+                (m == "p99_ms" and a and (b - a) / a > threshold)
+                or (m == "achieved_qps" and a and (a - b) / a > threshold)
+            )
+            if worse:
+                emit(f"# REGRESSION: {model}@{target} qps={q} {m} "
+                     f"{a} -> {b} (> {threshold * 100:.0f}%)")
+                regressions += 1
+    for key in sorted(set(p) - set(c)):
+        emit(f"{key[0]},{key[1]},{key[2]},<row dropped>,,,")
+    return regressions
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("current", nargs="?", default="BENCH_smoke.json")
-    ap.add_argument("--archive", default=".bench/BENCH_smoke.prev.json",
+    ap.add_argument("current", nargs="?", default=None)
+    ap.add_argument("--mode", choices=("smoke", "serve"), default="smoke",
+                    help="snapshot schema: compile rows or serve load rows")
+    ap.add_argument("--archive", default=None,
                     help="previous snapshot (refreshed on every run)")
     ap.add_argument("--threshold", type=float, default=0.10,
-                    help="hard-fail fraction for total_cycles regressions")
+                    help="hard-fail fraction for the mode's hard metrics")
     args = ap.parse_args(argv)
+    if args.current is None:
+        args.current = ("BENCH_smoke.json" if args.mode == "smoke"
+                        else "BENCH_serve.json")
+    if args.archive is None:
+        args.archive = (".bench/BENCH_smoke.prev.json"
+                        if args.mode == "smoke"
+                        else ".bench/BENCH_serve.prev.json")
 
     cur = _load(args.current)
     if cur is None:
@@ -117,9 +188,10 @@ def main(argv=None) -> int:
         print(f"# smoke-diff: no previous snapshot at {args.archive} — "
               "archiving this run as the new baseline")
     else:
-        n = diff(prev, cur, args.threshold)
+        differ = diff if args.mode == "smoke" else diff_serve
+        n = differ(prev, cur, args.threshold)
         if n:
-            print(f"# smoke-diff: {n} hard cycle regression(s) "
+            print(f"# smoke-diff: {n} hard regression(s) "
                   f"(> {args.threshold * 100:.0f}%)")
             rc = 1
         else:

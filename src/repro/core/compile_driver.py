@@ -177,6 +177,34 @@ class CompileOptions:
 
             validate_pass_names(names)
 
+    # -- identity ------------------------------------------------------------
+
+    def cache_key(self) -> str:
+        """A stable, hashable digest of everything that determines the
+        *compiled design*: the resolved target budgets, partition
+        strategy, pass selection, weight-streaming policy, unroll cap,
+        and verify flag.  ``trace`` is deliberately excluded —
+        instrumentation never changes schedules (pinned by
+        ``tests/test_instrument.py``), so traced and untraced compiles
+        share cache entries.
+
+        This is *the* key for compiled-artifact caching: the serving
+        artifact LRU (``repro.serve.ArtifactCache``) and the
+        ``REPRO_BENCH_CACHE`` disk cache both key on
+        ``(model name, options.cache_key())`` instead of ad-hoc target
+        names, so an option change can never serve a stale design.
+        """
+        import hashlib
+
+        t = self.target
+        payload = (
+            "ck1",  # bumped when the digest's field set changes
+            t.name, t.d_total, t.b_total, t.max_unroll,
+            self.strategy, self.passes, self.weight_streaming,
+            self.max_unroll, self.verify,
+        )
+        return hashlib.sha256(repr(payload).encode()).hexdigest()[:16]
+
     # -- resolved views ------------------------------------------------------
 
     @property

@@ -21,6 +21,7 @@ groups through a value environment exactly as the emitted
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import math
@@ -126,6 +127,38 @@ def conv2d_stream(
     return out[:, kh - 1 : kh - 1 + h]
 
 
+def conv2d_same_mm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """SAME-padding NHWC conv as KH·KW shifted channel matmuls.
+
+    The throughput lowering the *batched* executables use for integer
+    inputs: XLA's CPU path for integer ``lax.conv`` is a naive loop, an
+    order of magnitude slower than its integer dot — so the conv is
+    decomposed into one ``(N·H·W, Cin) @ (Cin, Cout)`` matmul per
+    kernel tap, accumulated in the input's integer dtype.  Integer
+    addition is modular and therefore order-independent, so this is
+    bit-exact with the streaming Pallas kernel and the dense oracle for
+    any integer dtype (including on int32 overflow, which wraps
+    identically everywhere).  Float inputs must NOT take this path —
+    float summation order changes ulps — and keep the Pallas kernel.
+    """
+    kh, kw, cin, cout = w.shape
+    pad_t = (kh - 1) // 2
+    pad_l = (kw - 1) // 2
+    xp = jnp.pad(
+        x,
+        ((0, 0), (pad_t, kh - 1 - pad_t), (pad_l, kw - 1 - pad_l), (0, 0)),
+    )
+    n, h, wd, _ = x.shape
+    out = None
+    for dy in range(kh):
+        for dx in range(kw):
+            tap = jnp.einsum(
+                "nhwc,co->nhwo", xp[:, dy:dy + h, dx:dx + wd, :], w[dy, dx]
+            )
+            out = tap if out is None else out + tap
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Schedule-IR consumer: one fused executable per GroupSchedule
 # ---------------------------------------------------------------------------
@@ -191,7 +224,8 @@ def _weight_tile_axes(op, dfg):
     return name, pos, out_axis
 
 
-def _lower_node(op, dfg, env, interpret: bool, weight_tiles: int = 1):
+def _lower_node(op, dfg, env, interpret: bool, weight_tiles: int = 1,
+                fast_int_conv: bool = False):
     """Execute one GenericOp with the kernel library (jit-traceable).
 
     ``weight_tiles > 1`` honors the schedule's partial weight streaming:
@@ -200,6 +234,13 @@ def _lower_node(op, dfg, env, interpret: bool, weight_tiles: int = 1):
     and the partial results concatenated — bit-exact with the resident
     lowering, but structurally the same tiled schedule the emitter
     realizes.
+
+    ``fast_int_conv`` (the batched-executable path) lowers
+    integer-dtype convs through :func:`conv2d_same_mm` instead of the
+    streaming Pallas kernel — bit-exact for integers (modular addition
+    is order-independent), and the difference between ~2× and ~8×
+    batched throughput on CPU.  Float convs ignore the flag and keep
+    the Pallas kernel so batched and per-sample runs stay bit-exact.
     """
     if weight_tiles > 1:
         tiled = _weight_tile_axes(op, dfg)
@@ -214,7 +255,7 @@ def _lower_node(op, dfg, env, interpret: bool, weight_tiles: int = 1):
                         bare, dfg,
                         {**env, cname: jax.lax.slice_in_dim(
                             w, t * step, (t + 1) * step, axis=cax)},
-                        interpret,
+                        interpret, fast_int_conv=fast_int_conv,
                     )
                     for t in range(weight_tiles)
                 ]
@@ -229,9 +270,15 @@ def _lower_node(op, dfg, env, interpret: bool, weight_tiles: int = 1):
                 len(stream) == 1 and len(const) == 1
                 and op.n_dims == 7 and info.stride == 1 and info.dilation == 1
             ):
+                x_in = env[stream[0]]
+                if fast_int_conv and jnp.issubdtype(
+                    x_in.dtype, jnp.integer
+                ):
+                    out = conv2d_same_mm(x_in, env[const[0]])
+                    return _ref.apply_epilogue(out, op.epilogue, env)
                 kern_epi, rest = _split_conv_epilogue(op)
                 out = conv2d_stream(
-                    env[stream[0]], env[const[0]],
+                    x_in, env[const[0]],
                     epilogue=kern_epi, interpret=interpret,
                 )
                 return _ref.apply_epilogue(out, rest, env)
@@ -282,10 +329,48 @@ def _lower_node(op, dfg, env, interpret: bool, weight_tiles: int = 1):
 #: executables per group *structure* — repeated ``run_compiled`` calls
 #: (batched inference, benchmark sweeps) reuse the traced/jitted unit
 #: instead of re-jitting per call (ROADMAP "lower_group jits per call").
-_EXEC_CACHE: dict[tuple, "object"] = {}
+#: A true LRU (ISSUE 7): hits refresh recency, inserts beyond the cap
+#: evict the least-recently-used executable — across many signatures ×
+#: batch buckets the cache stays bounded instead of growing forever.
+_EXEC_CACHE: "collections.OrderedDict[tuple, object]" = \
+    collections.OrderedDict()
 _EXEC_CACHE_CAP = 128
-#: observability for tests and benchmarks
-exec_cache_stats = {"hits": 0, "misses": 0}
+#: observability for tests and benchmarks (evictions per ISSUE 7)
+exec_cache_stats = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+#: the batch extents batched executables are traced at: a batched run
+#: pads its batch up to the nearest bucket (and chunks above the top
+#: one), so at most ``len(BATCH_BUCKETS)`` compiles happen per group
+#: signature no matter what batch sizes traffic brings.
+BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def batch_bucket(n: int) -> int:
+    """The padded batch extent ``n`` executes at: the smallest bucket
+    ≥ ``n``.  ``n`` must not exceed the top bucket (the runner chunks
+    larger batches before bucketing)."""
+    if n < 1:
+        raise ValueError(f"batch extent must be >= 1, got {n}")
+    for b in BATCH_BUCKETS:
+        if n <= b:
+            return b
+    raise ValueError(
+        f"batch extent {n} exceeds the top bucket {BATCH_BUCKETS[-1]} — "
+        "chunk the batch first (run_compiled_batched does)"
+    )
+
+
+def _batch_chunks(batch: int):
+    """Split ``batch`` into (start, n, bucket) chunks of at most the
+    top bucket each, so any offered batch executes with a bounded set
+    of traced shapes."""
+    cap = BATCH_BUCKETS[-1]
+    start = 0
+    while start < batch:
+        n = min(batch - start, cap)
+        yield start, n, batch_bucket(n)
+        start += n
 
 
 def _group_signature(group, interpret: bool) -> tuple:
@@ -320,9 +405,17 @@ def _group_signature(group, interpret: bool) -> tuple:
     return tuple(sig)
 
 
-def _build_group_fn(group, interpret: bool, jit: bool):
+def _build_group_fn(group, interpret: bool, jit: bool,
+                    batch: int | None = None):
     """The uncached lowering — separable so tests can probe compile
-    counts (the cache satellite of ISSUE 3)."""
+    counts (the cache satellite of ISSUE 3; batched probes in ISSUE 7).
+
+    ``batch`` (ISSUE 7) builds the *batched* executable: the per-sample
+    group fn vmapped over a leading batch axis of extent ``batch`` on
+    every non-constant value (graph inputs, spill values), constants
+    broadcast unbatched.  Integer convs take the
+    :func:`conv2d_same_mm` throughput lowering inside the vmapped unit.
+    """
     dfg = group.dfg
     order = dfg.topo_order()
     tiles = dict(group.dse.weight_tiles)
@@ -334,17 +427,25 @@ def _build_group_fn(group, interpret: bool, jit: bool):
         env = dict(env)
         for op in order:
             env[op.output] = _lower_node(
-                op, dfg, env, interpret, weight_tiles=tiles.get(op.name, 1)
+                op, dfg, env, interpret,
+                weight_tiles=tiles.get(op.name, 1),
+                fast_int_conv=batch is not None,
             )
         return {v: env[v] for v in dfg.graph_outputs}
 
+    if batch is not None:
+        axes = ({
+            k: (None if dfg.values[k].is_constant else 0) for k in needed
+        },)
+        run = jax.vmap(run, in_axes=axes)
     if not jit:
-        return run
+        return lambda env: run({k: v for k, v in env.items() if k in needed})
     jitted = jax.jit(run)
     return lambda env: jitted({k: v for k, v in env.items() if k in needed})
 
 
-def lower_group(group, *, interpret: bool | None = None, jit: bool = True):
+def lower_group(group, *, interpret: bool | None = None, jit: bool = True,
+                batch: int | None = None):
     """Lower one :class:`~repro.core.compile_driver.GroupSchedule` to a
     fused executable: ``fn(env) -> {output name: array}``.
 
@@ -353,29 +454,38 @@ def lower_group(group, *, interpret: bool | None = None, jit: bool = True):
     of the group's single DATAFLOW kernel: intermediates stay in
     VMEM/registers, epilogues (activations, constant binops, fused
     pools) ride the producing kernel; weight-streamed nodes run the
-    tiled const-buffer schedule.  Executables are cached per group
-    signature (+ interpret flag), so recompiling or re-running the same
-    design never re-jits.
+    tiled const-buffer schedule.  Executables are cached (LRU) per
+    group signature (+ interpret flag + batch bucket), so recompiling
+    or re-running the same design never re-jits.
+
+    ``batch`` asks for the vmapped batched executable at exactly that
+    (bucketed!) batch extent: non-constant env entries must carry a
+    leading axis of that extent, outputs gain one.  Callers round to a
+    :data:`BATCH_BUCKETS` bucket first so the cache sees a bounded key
+    set (``run_compiled_batched`` handles padding/chunking).
     """
     interpret = _auto_interpret(interpret)
     if not jit:
-        return _build_group_fn(group, interpret, jit=False)
-    key = _group_signature(group, interpret)
+        return _build_group_fn(group, interpret, jit=False, batch=batch)
+    key = _group_signature(group, interpret) + ("batch", batch)
     fn = _EXEC_CACHE.get(key)
     if fn is None:
         exec_cache_stats["misses"] += 1
         event = "miss"
-        fn = _build_group_fn(group, interpret, jit=True)
-        if len(_EXEC_CACHE) >= _EXEC_CACHE_CAP:  # bounded: drop oldest
-            _EXEC_CACHE.pop(next(iter(_EXEC_CACHE)))
+        fn = _build_group_fn(group, interpret, jit=True, batch=batch)
+        while len(_EXEC_CACHE) >= _EXEC_CACHE_CAP:  # LRU eviction
+            _EXEC_CACHE.popitem(last=False)
+            exec_cache_stats["evictions"] += 1
         _EXEC_CACHE[key] = fn
     else:
+        _EXEC_CACHE.move_to_end(key)
         exec_cache_stats["hits"] += 1
         event = "hit"
     tracer = instrument.current()
     if tracer.enabled:
         tracer.instant("jit_cache", cat="runtime",
-                       args={"group": group.name, "event": event})
+                       args={"group": group.name, "event": event,
+                             "batch": batch})
         tracer.counter("jit_cache", dict(exec_cache_stats))
     return fn
 
@@ -443,6 +553,107 @@ def run_compiled(design, env, *, interpret: bool | None = None,
             "dma_read_bytes": sum(r for _, r in transitions),
         })
     return {v: env[v] for v in design.source.graph_outputs}
+
+
+def run_compiled_batched(design, env, batch: int, *,
+                         interpret: bool | None = None, jit: bool = True,
+                         stats_out: dict | None = None) -> dict:
+    """Execute a :class:`~repro.core.compile_driver.CompiledDesign` over
+    a batch in one device dispatch per group (ISSUE 7): every
+    non-constant entry of ``env`` carries a leading axis of extent
+    ``batch``; constants are per-design.  Groups run in schedule order
+    through vmapped+jitted executables (:func:`lower_group` with
+    ``batch=``): the batch is padded up to the nearest
+    :data:`BATCH_BUCKETS` bucket (zero rows, sliced off the outputs
+    before return, still on device) and chunked above the top bucket,
+    so each group compiles at most once per bucket.  Returns the graph
+    outputs as *device* arrays with a leading batch axis — the host
+    conversion happens once at the caller's boundary, never per sample.
+
+    ``interpret=False`` is the explicit device-dispatch path (real
+    Pallas kernels on an accelerator); the default auto-selects
+    interpret mode on CPU exactly like :func:`run_compiled`.
+    """
+    interpret = _auto_interpret(interpret)
+    tracer = instrument.current()
+    collect = stats_out is not None or tracer.enabled
+    src = design.source
+    stream = [k for k in env
+              if k in src.values and not src.values[k].is_constant]
+    const_env = {k: v for k, v in env.items() if k not in stream}
+
+    before = dict(exec_cache_stats)
+    transitions = design.boundary_traffic()
+    group_rows: dict[str, dict] = {}
+    buckets: list[int] = []
+    t_run0 = time.perf_counter()
+    chunks_out: list[dict] = []
+    for start, n, bucket in _batch_chunks(batch):
+        buckets.append(bucket)
+        chunk_env = dict(const_env)
+        for k in stream:
+            v = jnp.asarray(env[k])[start:start + n]
+            if bucket != n:
+                chunk_env[k] = jnp.pad(
+                    v, ((0, bucket - n),) + ((0, 0),) * (v.ndim - 1)
+                )
+            else:
+                chunk_env[k] = v
+        for idx, g in enumerate(design.groups):
+            fn = lower_group(g, interpret=interpret, jit=jit, batch=bucket)
+            if not collect:
+                chunk_env.update(fn(chunk_env))
+                continue
+            g_before = dict(exec_cache_stats)
+            t0 = time.perf_counter()
+            with tracer.span(f"run:{g.name}", cat="runtime") as sargs:
+                out = jax.block_until_ready(fn(chunk_env))
+                chunk_env.update(out)
+                row = group_rows.setdefault(
+                    g.name, {"group": g.name, "wall_ms": 0.0, "samples": 0}
+                )
+                row["samples"] += n
+                row["jit_cache"] = (
+                    "hit" if exec_cache_stats["hits"] > g_before["hits"]
+                    else "miss"
+                    if exec_cache_stats["misses"] > g_before["misses"]
+                    else "unjitted"
+                )
+                sargs.update({"group": g.name, "batch": n, "bucket": bucket,
+                              "jit_cache": row["jit_cache"]})
+                if idx < len(transitions):
+                    w, r = transitions[idx]
+                    sargs.update({"dma_write_bytes": w * n,
+                                  "dma_read_bytes": r * n})
+                    tracer.counter("dma_bytes",
+                                   {"write": w * n, "read": r * n})
+            row["wall_ms"] = round(
+                row["wall_ms"] + (time.perf_counter() - t0) * 1e3, 3
+            )
+        outs = {v: chunk_env[v] for v in src.graph_outputs}
+        if bucket != n:  # drop padding rows, still on device
+            outs = {k: v[:n] for k, v in outs.items()}
+        chunks_out.append(outs)
+    if len(chunks_out) == 1:
+        result = chunks_out[0]
+    else:
+        result = {
+            k: jnp.concatenate([c[k] for c in chunks_out], axis=0)
+            for k in src.graph_outputs
+        }
+    if stats_out is not None:
+        stats_out.update({
+            "groups": list(group_rows.values()),
+            "wall_ms": round((time.perf_counter() - t_run0) * 1e3, 3),
+            "exec_cache": {
+                "hits": exec_cache_stats["hits"] - before["hits"],
+                "misses": exec_cache_stats["misses"] - before["misses"],
+            },
+            "batch_buckets": buckets,
+            "dma_write_bytes": sum(w for w, _ in transitions) * batch,
+            "dma_read_bytes": sum(r for _, r in transitions) * batch,
+        })
+    return result
 
 
 # ---------------------------------------------------------------------------

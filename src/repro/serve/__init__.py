@@ -1,0 +1,25 @@
+"""Serving runtime over compiled artifacts (ISSUE 7).
+
+The seed's LM serving driver (``repro.launch.serve``) resurrected for
+the CNN compiler: a request queue with **dynamic batching** under a
+configurable latency budget, executing whole batches through the
+vmapped group executables of :meth:`CompiledArtifact.run
+<repro.api.artifact.CompiledArtifact.run>` (``batch_mode="vmap"``), an
+artifact LRU keyed ``(model, CompileOptions.cache_key())``, and an
+open-loop load generator for the ``BENCH_serve.json`` trajectory.
+
+All QPS/latency/batch-size observability hangs off the PR 6 tracer
+(:mod:`repro.instrument`) — counters land in the same Chrome trace as
+the compile spans; there is no second telemetry path.
+"""
+from .cache import ArtifactCache
+from .engine import ServeConfig, ServeEngine
+from .loadgen import LoadReport, run_load
+
+__all__ = [
+    "ArtifactCache",
+    "LoadReport",
+    "ServeConfig",
+    "ServeEngine",
+    "run_load",
+]

@@ -1,0 +1,244 @@
+"""Dynamic-batching serve engine over one compiled artifact.
+
+Requests enqueue per-sample inputs; a single worker thread drains the
+queue into batches — up to :attr:`ServeConfig.max_batch` requests, or
+whatever arrived before the *latency budget* measured from the first
+queued request expires — and executes each batch as **one** vmapped
+device dispatch per group (``CompiledArtifact.run(...,
+batch_mode="vmap")``).  Under light load a request ships almost alone
+(latency ≈ budget + one-sample execute); under heavy load batches fill
+to ``max_batch`` and throughput rides the batched executables.  This is
+the classic dynamic-batching contract (hls4ml's deployment benches,
+Venieris' toolflow survey) on top of our bucketed jit cache: batch
+sizes land on :data:`repro.kernels.ops.BATCH_BUCKETS`, so steady-state
+traffic never recompiles.
+
+Observability hangs off the PR 6 tracer: ``serve_batch`` /
+``serve_latency_ms`` / ``serve_qps`` counter series plus a
+``serve:batch`` span per dispatch, in the *same* trace as the compile
+spans.  Contextvars do not cross threads, so the worker re-installs the
+engine's tracer explicitly (:func:`repro.instrument.use_tracer`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Mapping, Optional
+
+import numpy as np
+
+from repro import instrument
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Knobs of the dynamic batcher.
+
+    ``max_batch`` caps the per-dispatch batch (keep it on a
+    :data:`~repro.kernels.ops.BATCH_BUCKETS` bucket or the runner pads
+    up to the next one); ``latency_budget_ms`` is how long the first
+    request of a forming batch may wait for company; ``queue_depth``
+    bounds admission — a full queue rejects instead of hiding unbounded
+    latency."""
+
+    max_batch: int = 32
+    latency_budget_ms: float = 5.0
+    queue_depth: int = 1024
+
+    def __post_init__(self) -> None:
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.latency_budget_ms < 0:
+            raise ValueError("latency_budget_ms must be >= 0, got "
+                             f"{self.latency_budget_ms}")
+        if self.queue_depth < 1:
+            raise ValueError(
+                f"queue_depth must be >= 1, got {self.queue_depth}")
+
+
+@dataclasses.dataclass
+class _Request:
+    inputs: dict
+    future: Future
+    t_submit: float
+
+
+_STOP = object()
+
+
+class ServeEngine:
+    """Serve one :class:`~repro.api.artifact.CompiledArtifact`.
+
+    Use as a context manager (or ``start()``/``stop()``)::
+
+        with ServeEngine(artifact, ServeConfig(max_batch=32)) as eng:
+            fut = eng.submit(x)          # per-sample input, no batch dim
+            y = fut.result()
+
+    ``submit`` returns a :class:`concurrent.futures.Future`;
+    ``__call__`` is the blocking sugar.  ``params`` fixes the constant
+    bindings (weights) for every request of this engine — serving mixes
+    *inputs*, never weights.
+    """
+
+    def __init__(self, artifact, config: Optional[ServeConfig] = None, *,
+                 params: Optional[Mapping] = None,
+                 interpret: Optional[bool] = None, seed: int = 0) -> None:
+        self.artifact = artifact
+        self.config = config or ServeConfig()
+        self.params = params
+        self.interpret = interpret
+        self.seed = seed
+        self._queue: "queue.Queue" = queue.Queue(self.config.queue_depth)
+        self._worker: Optional[threading.Thread] = None
+        self._tracer = None
+        self.stats = {"requests": 0, "batches": 0, "rejected": 0,
+                      "max_batch_seen": 0}
+        self._t_start: Optional[float] = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "ServeEngine":
+        if self._worker is not None:
+            raise RuntimeError("engine already started")
+        # capture the tracer on the *caller's* context: the ambient one
+        # if enabled (same trace as everything else this thread did),
+        # else the artifact's compile-time tracer.  The worker thread
+        # re-installs it — contextvars do not propagate into threads.
+        ambient = instrument.current()
+        self._tracer = ambient if ambient.enabled else self.artifact.tracer
+        # resolve constants once: user params + seeded fill for the
+        # rest — re-deriving random_env per batch would put RNG work on
+        # the hot path (and is why this isn't left to artifact.run)
+        from repro.passes import interp
+
+        src = self.artifact.source
+        resolved = dict(self.params or {})
+        consts = {n for n, v in src.values.items() if v.is_constant}
+        missing = consts - set(resolved)
+        if missing:
+            env = interp.random_env(src, seed=self.seed)
+            resolved.update({n: env[n] for n in missing})
+        self._params_resolved = resolved
+        self._t_start = time.perf_counter()
+        self._worker = threading.Thread(
+            target=self._serve_loop, name="repro-serve", daemon=True
+        )
+        self._worker.start()
+        return self
+
+    def stop(self) -> None:
+        if self._worker is None:
+            return
+        self._queue.put(_STOP)
+        self._worker.join()
+        self._worker = None
+
+    def __enter__(self) -> "ServeEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- request path --------------------------------------------------------
+
+    def submit(self, inputs) -> Future:
+        """Enqueue one sample (bare array, or ``{name: array}`` for
+        multi-input graphs — per-sample shapes, no batch dim).  Raises
+        :class:`queue.Full` when admission is over ``queue_depth``."""
+        if self._worker is None:
+            raise RuntimeError("engine not started — use `with engine:`")
+        src = self.artifact.source
+        if not isinstance(inputs, Mapping):
+            if len(src.graph_inputs) != 1:
+                raise ValueError(
+                    f"{src.name} has {len(src.graph_inputs)} inputs "
+                    f"({src.graph_inputs}); pass a dict, not a bare array"
+                )
+            inputs = {src.graph_inputs[0]: inputs}
+        req = _Request(dict(inputs), Future(), time.perf_counter())
+        try:
+            self._queue.put_nowait(req)
+        except queue.Full:
+            self.stats["rejected"] += 1
+            raise
+        return req.future
+
+    def __call__(self, inputs):
+        return self.submit(inputs).result()
+
+    # -- worker --------------------------------------------------------------
+
+    def _serve_loop(self) -> None:
+        with instrument.use_tracer(self._tracer):
+            tracer = instrument.current()
+            while True:
+                item = self._queue.get()
+                if item is _STOP:
+                    return
+                batch = [item]
+                deadline = (time.perf_counter()
+                            + self.config.latency_budget_ms / 1e3)
+                while len(batch) < self.config.max_batch:
+                    wait = deadline - time.perf_counter()
+                    if wait <= 0:
+                        # budget spent: take whatever already queued,
+                        # but don't wait for more
+                        try:
+                            nxt = self._queue.get_nowait()
+                        except queue.Empty:
+                            break
+                    else:
+                        try:
+                            nxt = self._queue.get(timeout=wait)
+                        except queue.Empty:
+                            break
+                    if nxt is _STOP:
+                        self._execute(batch, tracer)
+                        return
+                    batch.append(nxt)
+                self._execute(batch, tracer)
+
+    def _execute(self, batch: list, tracer) -> None:
+        src = self.artifact.source
+        n = len(batch)
+        t0 = time.perf_counter()
+        try:
+            stacked = {
+                k: np.stack([r.inputs[k] for r in batch])
+                for k in src.graph_inputs
+            }
+            with tracer.span("serve:batch", cat="serve",
+                             args={"batch": n}):
+                out = self.artifact.run(
+                    stacked, self._params_resolved,
+                    interpret=self.interpret, seed=self.seed,
+                )
+            if len(src.graph_outputs) == 1:
+                rows = [out[i] for i in range(n)]
+            else:
+                rows = [{k: v[i] for k, v in out.items()} for i in range(n)]
+        except Exception as exc:  # propagate to every caller, keep serving
+            for r in batch:
+                r.future.set_exception(exc)
+            return
+        t1 = time.perf_counter()
+        self.stats["requests"] += n
+        self.stats["batches"] += 1
+        self.stats["max_batch_seen"] = max(self.stats["max_batch_seen"], n)
+        if tracer.enabled:
+            tracer.counter("serve_batch", {"size": n})
+            for r in batch:
+                tracer.counter(
+                    "serve_latency_ms", {"ms": (t1 - r.t_submit) * 1e3}
+                )
+            elapsed = t1 - (self._t_start or t1)
+            if elapsed > 0:
+                tracer.counter(
+                    "serve_qps", {"qps": self.stats["requests"] / elapsed}
+                )
+        for r in batch:
+            r.future.set_result(rows.pop(0))

@@ -1,0 +1,211 @@
+"""Batched device execution (ISSUE 7): vmapped group executables.
+
+The acceptance contract: ``CompiledArtifact.run`` with the default
+``batch_mode="vmap"`` is bit-exact against the per-sample loop
+(``batch_mode="loop"``) on every zoo model on both targets, ragged
+batches pad to buckets without leaking padding rows, each group
+compiles at most once per batch bucket, and the exec cache is a real
+LRU (bounded, evictions counted).
+"""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import cnn_graphs
+from repro.core.compile_driver import KV260, ZU3EG
+from repro.frontends import zoo
+from repro.kernels import ops
+
+
+def _batched_inputs(src, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        k: rng.integers(-4, 5, size=(batch,) + src.values[k].shape,
+                        dtype=np.int32)
+        for k in src.graph_inputs
+    }
+
+
+def _assert_vmap_equals_loop(art, batch, seed=0):
+    x = _batched_inputs(art.source, batch, seed)
+    want = art.run(x, batch_mode="loop")
+    got = art.run(x, batch_mode="vmap")
+    if isinstance(want, dict):
+        for k in want:
+            np.testing.assert_array_equal(got[k], want[k])
+    else:
+        np.testing.assert_array_equal(got, want)
+    assert art.last_run_stats["batch_mode"] == "vmap"
+    assert art.last_run_stats["samples"] == batch
+
+
+class TestBatchBuckets:
+    def test_bucket_rounds_up(self):
+        assert ops.batch_bucket(1) == 1
+        assert ops.batch_bucket(3) == 4
+        assert ops.batch_bucket(8) == 8
+        assert ops.batch_bucket(17) == 32
+        assert ops.batch_bucket(64) == 64
+
+    def test_bucket_rejects_out_of_range(self):
+        with pytest.raises(ValueError, match=">= 1"):
+            ops.batch_bucket(0)
+        with pytest.raises(ValueError, match="top bucket"):
+            ops.batch_bucket(65)
+
+    def test_chunks_cover_batch_exactly(self):
+        chunks = list(ops._batch_chunks(70))
+        assert chunks == [(0, 64, 64), (64, 6, 8)]
+        assert list(ops._batch_chunks(5)) == [(0, 5, 8)]
+        for batch in (1, 31, 64, 65, 200):
+            spans = list(ops._batch_chunks(batch))
+            assert sum(n for _, n, _ in spans) == batch
+            assert all(n <= b for _, n, b in spans)
+
+
+class TestVmapBitExact:
+    @pytest.mark.parametrize("target", [KV260, ZU3EG], ids=["kv260", "zu3eg"])
+    @pytest.mark.parametrize("model", sorted(zoo.ZOO))
+    def test_zoo_models_both_targets(self, model, target):
+        """The acceptance criterion, verbatim: every zoo model, both
+        targets, batched run bit-exact vs the per-sample loop."""
+        art = api.compile_graph(zoo.ZOO[model](),
+                                api.CompileOptions(target=target))
+        _assert_vmap_equals_loop(art, batch=3, seed=7)
+
+    @pytest.mark.parametrize("make", [
+        lambda: cnn_graphs.conv_relu(8, c_out=4),
+        lambda: cnn_graphs.residual_block(8, c=4),
+        lambda: cnn_graphs.feed_forward(batch=16, d_in=8, d_hidden=16),
+    ], ids=["conv_relu", "residual", "feed_forward"])
+    def test_builder_graphs(self, make):
+        _assert_vmap_equals_loop(api.compile_graph(make()), batch=4)
+
+    def test_random_builder_graphs_property(self):
+        """Property-style sweep: random little Sequential stacks (seeded
+        layer choices) must agree between the two batch modes."""
+        rng = np.random.default_rng(42)
+        for trial in range(3):
+            layers = [api.Conv2D(int(rng.integers(2, 5)), kernel=3)]
+            if rng.integers(2):
+                layers.append(api.ReLU())
+            if rng.integers(2):
+                layers.append(api.MaxPool(2))
+            layers += [api.Flatten(), api.Dense(int(rng.integers(3, 8)))]
+            net = api.Sequential(
+                layers, input_shape=(1, 8, 8, 2), name=f"rand{trial}"
+            )
+            target = (KV260, ZU3EG)[trial % 2]
+            art = api.compile_graph(net, api.CompileOptions(target=target))
+            _assert_vmap_equals_loop(art, batch=int(rng.integers(2, 6)),
+                                     seed=trial)
+
+    def test_multi_input_graph(self):
+        g = api.Graph("two_in")
+        a = g.input((1, 4, 4, 2), name="a")
+        b = g.input((1, 4, 4, 2), name="b")
+        g.output(g.add(a, b))
+        art = api.compile_graph(g.build())
+        _assert_vmap_equals_loop(art, batch=5)
+
+    def test_bad_mode_rejected(self):
+        art = api.compile_graph(cnn_graphs.conv_relu(8, c_out=4))
+        with pytest.raises(ValueError, match="batch_mode"):
+            art.run(_batched_inputs(art.source, 2), batch_mode="turbo")
+
+
+class TestRaggedBatches:
+    """Padding to a bucket must never leak into outputs."""
+
+    @pytest.mark.parametrize("batch", [3, 5, 17])
+    def test_ragged_equals_loop(self, batch):
+        art = api.compile_graph(zoo.lenet5())
+        _assert_vmap_equals_loop(art, batch=batch)
+
+    def test_prefix_consistency_across_buckets(self):
+        """Samples keep their identity whatever bucket the batch pads
+        to: row i of a ragged batch equals row i of the full batch."""
+        art = api.compile_graph(cnn_graphs.conv_relu(8, c_out=4))
+        x = _batched_inputs(art.source, 8, seed=3)
+        full = art.run(x)
+        for n in (1, 3, 5):
+            got = art.run({k: v[:n] for k, v in x.items()})
+            np.testing.assert_array_equal(got, full[:n])
+
+    def test_chunked_batch_over_top_bucket(self):
+        """A batch above the top bucket splits into chunks and
+        concatenates — still exact, still one stacked output."""
+        art = api.compile_graph(cnn_graphs.conv_relu(8, c_out=4))
+        x = _batched_inputs(art.source, 70, seed=5)
+        got = art.run(x)
+        assert got.shape[0] == 70
+        want = art.run({k: v[:8] for k, v in x.items()})
+        np.testing.assert_array_equal(got[:8], want)
+        assert art.last_run_stats is not None
+
+
+class TestCompileCounts:
+    """≤1 compile per group per batch bucket (acceptance probe)."""
+
+    def test_recompiles_bounded_by_buckets(self, monkeypatch):
+        art = api.compile_graph(zoo.lenet5())
+        n_groups = len(art.design.groups)
+        builds = []
+        real_build = ops._build_group_fn
+
+        def probe(group, interpret, jit, batch=None):
+            builds.append((group.name, batch))
+            return real_build(group, interpret, jit, batch=batch)
+
+        monkeypatch.setattr(ops, "_build_group_fn", probe)
+        ops._EXEC_CACHE.clear()
+        x = _batched_inputs(art.source, 8, seed=1)
+        for batch in (3, 4, 2, 8, 3):  # buckets {4, 2, 8}
+            art.run({k: v[:batch] for k, v in x.items()})
+        batched_builds = [b for b in builds if b[1] is not None]
+        assert len(batched_builds) == len(set(batched_builds))
+        assert len(batched_builds) <= 3 * n_groups
+        # same buckets again: zero new builds
+        before = len(builds)
+        for batch in (3, 4, 2, 8):
+            art.run({k: v[:batch] for k, v in x.items()})
+        assert len(builds) == before
+
+    def test_exec_cache_delta_reports_hits(self):
+        art = api.compile_graph(cnn_graphs.conv_relu(8, c_out=4))
+        x = _batched_inputs(art.source, 4, seed=2)
+        art.run(x)
+        art.run(x)
+        delta = art.last_run_stats["exec_cache"]
+        assert delta["misses"] == 0 and delta["hits"] >= 1
+
+
+class TestExecCacheLRU:
+    """Satellite: the exec cache is bounded with counted evictions."""
+
+    def test_eviction_at_cap(self, monkeypatch):
+        monkeypatch.setattr(ops, "_EXEC_CACHE_CAP", 2)
+        ops._EXEC_CACHE.clear()
+        ev0 = ops.exec_cache_stats["evictions"]
+        arts = [
+            api.compile_graph(cnn_graphs.conv_relu(8, c_out=c))
+            for c in (2, 3, 4)
+        ]
+        for art in arts:
+            art.run(interpret=True)
+        assert len(ops._EXEC_CACHE) <= 2
+        assert ops.exec_cache_stats["evictions"] > ev0
+
+    def test_lru_order_keeps_hot_entry(self, monkeypatch):
+        monkeypatch.setattr(ops, "_EXEC_CACHE_CAP", 2)
+        ops._EXEC_CACHE.clear()
+        a = api.compile_graph(cnn_graphs.conv_relu(8, c_out=2))
+        b = api.compile_graph(cnn_graphs.conv_relu(8, c_out=3))
+        c = api.compile_graph(cnn_graphs.conv_relu(8, c_out=4))
+        a.run(interpret=True)
+        b.run(interpret=True)
+        a.run(interpret=True)  # refresh a: b is now LRU
+        h0 = ops.exec_cache_stats["hits"]
+        c.run(interpret=True)  # evicts b, not a
+        a.run(interpret=True)
+        assert ops.exec_cache_stats["hits"] > h0

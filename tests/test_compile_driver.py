@@ -360,9 +360,9 @@ class TestExecutableCache:
         calls = {"n": 0}
         orig = ops._build_group_fn
 
-        def probe(group, interpret, jit):
+        def probe(group, interpret, jit, batch=None):
             calls["n"] += 1
-            return orig(group, interpret, jit)
+            return orig(group, interpret, jit, batch=batch)
 
         monkeypatch.setattr(ops, "_build_group_fn", probe)
         ops._EXEC_CACHE.clear()
@@ -388,9 +388,9 @@ class TestExecutableCache:
         calls = {"n": 0}
         orig = ops._build_group_fn
 
-        def probe(group, interpret, jit):
+        def probe(group, interpret, jit, batch=None):
             calls["n"] += 1
-            return orig(group, interpret, jit)
+            return orig(group, interpret, jit, batch=batch)
 
         monkeypatch.setattr(ops, "_build_group_fn", probe)
         ops._EXEC_CACHE.clear()
