@@ -168,6 +168,12 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-speedup", action="store_true",
                     help="skip the lenet5 vmap-vs-loop gate section")
+    ap.add_argument("--min-speedup", type=float, default=5.0,
+                    help="hard-fail when the vmap-vs-loop speedup is "
+                         "below this; 0 makes the speedup informational "
+                         "(CI uses 0: wall-clock on shared runners is "
+                         "noisy-neighbor flaky). Bit-exactness always "
+                         "hard-fails.")
     args = ap.parse_args(argv)
     data = bench_serve_json(
         args.out,
@@ -181,9 +187,13 @@ def main(argv=None) -> int:
         speedup=not args.no_speedup,
     )
     sp = data.get("_speedup")
-    if sp and (not sp["bit_exact"] or sp["speedup"] < 5.0):
+    if sp and not sp["bit_exact"]:
+        # correctness is never a soft gate
+        print("# FAIL: vmap run is not bit-exact against the loop")
+        return 1
+    if sp and sp["speedup"] < args.min_speedup:
         print(f"# FAIL: batched speedup gate "
-              f"(speedup={sp['speedup']}x, bit_exact={sp['bit_exact']})")
+              f"(speedup={sp['speedup']}x < {args.min_speedup}x)")
         return 1
     return 0
 

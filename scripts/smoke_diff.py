@@ -16,6 +16,10 @@ Fail-soft contract (scripts/ci.sh):
 (``{model: {target: {"loads": [...]}}}``, keyed by offered QPS): a
 >threshold ``p99_ms`` increase *or* ``achieved_qps`` drop hard-fails;
 the ``_speedup`` section is informational and never gates.
+``--warn-only`` downgrades the hard gate to a report — scripts/ci.sh
+uses it for serve rows, because wall-clock numbers on shared CI
+runners are noisy-neighbor flaky (the bit-exactness checks elsewhere
+in CI stay hard).
 
 The smoke schema is ``{graph: {target: row}}`` since ISSUE 3; the flat
 PR 2 ``{graph: row}`` form is still accepted (treated as one "kv260"
@@ -168,6 +172,12 @@ def main(argv=None) -> int:
                     help="previous snapshot (refreshed on every run)")
     ap.add_argument("--threshold", type=float, default=0.10,
                     help="hard-fail fraction for the mode's hard metrics")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but always exit 0; CI uses "
+                         "this for the timing-sensitive serve rows "
+                         "(wall-clock on shared runners is noisy), "
+                         "keeping the diff informational. The archive "
+                         "still refreshes.")
     args = ap.parse_args(argv)
     if args.current is None:
         args.current = ("BENCH_smoke.json" if args.mode == "smoke"
@@ -193,7 +203,10 @@ def main(argv=None) -> int:
         if n:
             print(f"# smoke-diff: {n} hard regression(s) "
                   f"(> {args.threshold * 100:.0f}%)")
-            rc = 1
+            if args.warn_only:
+                print("# smoke-diff: --warn-only — reported, not failing")
+            else:
+                rc = 1
         else:
             print("# smoke-diff: no hard regressions")
 

@@ -25,6 +25,7 @@ import collections
 import dataclasses
 import functools
 import math
+import threading
 import time
 from typing import Literal
 
@@ -134,14 +135,21 @@ def conv2d_same_mm(x: jax.Array, w: jax.Array) -> jax.Array:
     inputs: XLA's CPU path for integer ``lax.conv`` is a naive loop, an
     order of magnitude slower than its integer dot — so the conv is
     decomposed into one ``(N·H·W, Cin) @ (Cin, Cout)`` matmul per
-    kernel tap, accumulated in the input's integer dtype.  Integer
-    addition is modular and therefore order-independent, so this is
-    bit-exact with the streaming Pallas kernel and the dense oracle for
-    any integer dtype (including on int32 overflow, which wraps
-    identically everywhere).  Float inputs must NOT take this path —
-    float summation order changes ulps — and keep the Pallas kernel.
+    kernel tap, accumulated in **int32** — the same accumulator the
+    streaming kernel (``conv2d_stream._acc_dtype``) and the dense
+    oracle use, so sub-int32 inputs (the paper's int8 PTQ regime) get
+    real int32 accumulators, not input-dtype wraparound.  Operands are
+    cast to int32 *before* the matmuls: truncation mod 2³² commutes
+    with integer multiply/add, so this is bit-exact with the streaming
+    Pallas kernel for every integer width (including on int32
+    overflow, which wraps identically everywhere).  Float inputs must
+    NOT take this path — float summation order changes ulps — and keep
+    the Pallas kernel.
     """
     kh, kw, cin, cout = w.shape
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        x = x.astype(jnp.int32)
+        w = w.astype(jnp.int32)
     pad_t = (kh - 1) // 2
     pad_l = (kw - 1) // 2
     xp = jnp.pad(
@@ -335,6 +343,10 @@ def _lower_node(op, dfg, env, interpret: bool, weight_tiles: int = 1,
 _EXEC_CACHE: "collections.OrderedDict[tuple, object]" = \
     collections.OrderedDict()
 _EXEC_CACHE_CAP = 128
+#: ServeEngine worker threads hit lower_group concurrently with
+#: main-thread runs; the LRU mutates on every access (move_to_end /
+#: popitem), so lookup+insert+stats form one critical section.
+_EXEC_CACHE_LOCK = threading.Lock()
 #: observability for tests and benchmarks (evictions per ISSUE 7)
 exec_cache_stats = {"hits": 0, "misses": 0, "evictions": 0}
 
@@ -468,25 +480,29 @@ def lower_group(group, *, interpret: bool | None = None, jit: bool = True,
     if not jit:
         return _build_group_fn(group, interpret, jit=False, batch=batch)
     key = _group_signature(group, interpret) + ("batch", batch)
-    fn = _EXEC_CACHE.get(key)
-    if fn is None:
-        exec_cache_stats["misses"] += 1
-        event = "miss"
-        fn = _build_group_fn(group, interpret, jit=True, batch=batch)
-        while len(_EXEC_CACHE) >= _EXEC_CACHE_CAP:  # LRU eviction
-            _EXEC_CACHE.popitem(last=False)
-            exec_cache_stats["evictions"] += 1
-        _EXEC_CACHE[key] = fn
-    else:
-        _EXEC_CACHE.move_to_end(key)
-        exec_cache_stats["hits"] += 1
-        event = "hit"
+    with _EXEC_CACHE_LOCK:
+        fn = _EXEC_CACHE.get(key)
+        if fn is None:
+            exec_cache_stats["misses"] += 1
+            event = "miss"
+            # building is cheap (jax.jit defers tracing to first call),
+            # so holding the lock keeps the insert/evict atomic
+            fn = _build_group_fn(group, interpret, jit=True, batch=batch)
+            while len(_EXEC_CACHE) >= _EXEC_CACHE_CAP:  # LRU eviction
+                _EXEC_CACHE.popitem(last=False)
+                exec_cache_stats["evictions"] += 1
+            _EXEC_CACHE[key] = fn
+        else:
+            _EXEC_CACHE.move_to_end(key)
+            exec_cache_stats["hits"] += 1
+            event = "hit"
+        stats_snapshot = dict(exec_cache_stats)
     tracer = instrument.current()
     if tracer.enabled:
         tracer.instant("jit_cache", cat="runtime",
                        args={"group": group.name, "event": event,
                              "batch": batch})
-        tracer.counter("jit_cache", dict(exec_cache_stats))
+        tracer.counter("jit_cache", stats_snapshot)
     return fn
 
 

@@ -94,6 +94,7 @@ class ServeEngine:
         self.seed = seed
         self._queue: "queue.Queue" = queue.Queue(self.config.queue_depth)
         self._worker: Optional[threading.Thread] = None
+        self._stopping = False
         self._tracer = None
         self.stats = {"requests": 0, "batches": 0, "rejected": 0,
                       "max_batch_seen": 0}
@@ -124,6 +125,7 @@ class ServeEngine:
             resolved.update({n: env[n] for n in missing})
         self._params_resolved = resolved
         self._t_start = time.perf_counter()
+        self._stopping = False
         self._worker = threading.Thread(
             target=self._serve_loop, name="repro-serve", daemon=True
         )
@@ -131,11 +133,25 @@ class ServeEngine:
         return self
 
     def stop(self) -> None:
+        """Stop the worker, then *drain* the queue: any request still
+        queued (admitted behind the stop signal, or racing shutdown)
+        fails its future with :class:`RuntimeError` instead of leaving
+        the caller blocked on ``fut.result()`` forever."""
         if self._worker is None:
             return
+        self._stopping = True  # new submits reject from here on
         self._queue.put(_STOP)
         self._worker.join()
         self._worker = None
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if item is _STOP:
+                continue
+            self.stats["rejected"] += 1
+            item.future.set_exception(RuntimeError("engine stopped"))
 
     def __enter__(self) -> "ServeEngine":
         return self.start()
@@ -147,9 +163,13 @@ class ServeEngine:
 
     def submit(self, inputs) -> Future:
         """Enqueue one sample (bare array, or ``{name: array}`` for
-        multi-input graphs — per-sample shapes, no batch dim).  Raises
-        :class:`queue.Full` when admission is over ``queue_depth``."""
-        if self._worker is None:
+        multi-input graphs — per-sample shapes, no batch dim).  Keys
+        and per-sample shapes are validated *here*, at admission: a
+        malformed request must reject its own caller, never poison the
+        innocent requests it would have co-batched with at
+        ``np.stack`` time.  Raises :class:`queue.Full` when admission
+        is over ``queue_depth``."""
+        if self._worker is None or self._stopping:
             raise RuntimeError("engine not started — use `with engine:`")
         src = self.artifact.source
         if not isinstance(inputs, Mapping):
@@ -159,7 +179,26 @@ class ServeEngine:
                     f"({src.graph_inputs}); pass a dict, not a bare array"
                 )
             inputs = {src.graph_inputs[0]: inputs}
-        req = _Request(dict(inputs), Future(), time.perf_counter())
+        missing = set(src.graph_inputs) - set(inputs)
+        unknown = set(inputs) - set(src.graph_inputs)
+        if missing or unknown:
+            raise ValueError(
+                f"{src.name}: request must bind exactly the graph inputs "
+                f"{list(src.graph_inputs)}"
+                + (f" — missing {sorted(missing)}" if missing else "")
+                + (f" — unknown {sorted(unknown)}" if unknown else "")
+            )
+        arrays = {}
+        for k in src.graph_inputs:
+            v = np.asarray(inputs[k])
+            want = tuple(src.values[k].shape)
+            if v.shape != want:
+                raise ValueError(
+                    f"{src.name}: input {k!r} has shape {v.shape}; "
+                    f"expected the per-sample shape {want} (no batch dim)"
+                )
+            arrays[k] = v
+        req = _Request(arrays, Future(), time.perf_counter())
         try:
             self._queue.put_nowait(req)
         except queue.Full:

@@ -114,6 +114,65 @@ class TestVmapBitExact:
             art.run(_batched_inputs(art.source, 2), batch_mode="turbo")
 
 
+class TestIntegerAccumulators:
+    """The fast batched integer-conv lowering (``conv2d_same_mm``) must
+    return the same int32 accumulators as the streaming Pallas kernel:
+    int8/int16 inputs previously accumulated (and wrapped) in the input
+    dtype, silently changing batched-run results on sub-int32 models."""
+
+    @pytest.mark.parametrize(
+        "dtype", [np.int8, np.uint8, np.int16, np.int32],
+        ids=["int8", "uint8", "int16", "int32"])
+    def test_mm_matches_stream_dtype_and_values(self, dtype):
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(0)
+        lo, hi = (0, 6) if dtype == np.uint8 else (-6, 6)
+        x = rng.integers(lo, hi, size=(2, 8, 8, 5)).astype(dtype)
+        w = rng.integers(lo, hi, size=(3, 3, 5, 4)).astype(dtype)
+        a = ops.conv2d_stream(jnp.asarray(x), jnp.asarray(w),
+                              interpret=True)
+        b = ops.conv2d_same_mm(jnp.asarray(x), jnp.asarray(w))
+        assert a.dtype == jnp.int32 and b.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_int8_accumulation_exceeds_input_width(self):
+        import jax.numpy as jnp
+
+        # 3*3*16 taps of ~100*100 products: the accumulator is far
+        # outside int8 (and int16) range, so wrapping would show
+        rng = np.random.default_rng(1)
+        x = rng.integers(50, 101, size=(1, 6, 6, 16)).astype(np.int8)
+        w = rng.integers(50, 101, size=(3, 3, 16, 2)).astype(np.int8)
+        a = ops.conv2d_stream(jnp.asarray(x), jnp.asarray(w),
+                              interpret=True)
+        b = ops.conv2d_same_mm(jnp.asarray(x), jnp.asarray(w))
+        assert b.dtype == jnp.int32
+        assert int(np.max(np.asarray(b))) > np.iinfo(np.int16).max
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_vmap_loop_bit_exact_int8_end_to_end(self):
+        """An all-int8 batched run (inputs *and* weights — the PTQ
+        regime the importer admits) must match the per-sample loop in
+        dtype and bits through the artifact surface."""
+        art = api.compile_graph(cnn_graphs.conv_relu(8, c_out=4))
+        src = art.source
+        rng = np.random.default_rng(2)
+        x = {
+            k: rng.integers(-4, 5,
+                            size=(5,) + src.values[k].shape).astype(np.int8)
+            for k in src.graph_inputs
+        }
+        params = {
+            n: rng.integers(-4, 5, size=v.shape).astype(np.int8)
+            for n, v in src.values.items() if v.is_constant
+        }
+        want = art.run(x, params, batch_mode="loop")
+        got = art.run(x, params, batch_mode="vmap")
+        assert want.dtype == got.dtype == np.int32
+        np.testing.assert_array_equal(got, want)
+
+
 class TestRaggedBatches:
     """Padding to a bucket must never leak into outputs."""
 

@@ -150,14 +150,86 @@ class TestServeEngine:
         np.testing.assert_array_equal(got,
                                       lenet_art.run({name: x[name][None]})[0])
 
-    def test_errors_propagate_to_future(self, lenet_art):
+    def test_malformed_requests_rejected_at_admission(self, lenet_art):
+        """Bad requests fail their *own* caller at submit(), before
+        they can poison the innocent requests they would have
+        co-batched with at np.stack time."""
+        src = lenet_art.source
+        name = src.graph_inputs[0]
+        good = _sample_inputs(src, 1, seed=5)[0]
         with ServeEngine(lenet_art) as eng:
-            fut = eng.submit(np.zeros((3, 3), np.int32))  # wrong shape
-            with pytest.raises(Exception):
-                fut.result(timeout=60)
+            with pytest.raises(ValueError, match="per-sample shape"):
+                eng.submit(np.zeros((3, 3), np.int32))  # wrong shape
+            with pytest.raises(ValueError, match="missing"):
+                eng.submit({})  # dict missing the graph input
+            with pytest.raises(ValueError, match="unknown"):
+                eng.submit(dict(good, bogus=good[name]))
+            with pytest.raises(ValueError, match="per-sample shape"):
+                eng.submit({name: good[name][None]})  # stray batch dim
+            # engine keeps serving well-formed requests
+            eng(good)
+        assert eng.stats["requests"] == 1
+
+    def test_execute_errors_propagate_to_future(self, lenet_art):
+        """A failure *inside* the batch execute still resolves every
+        future with the exception — no hung callers."""
+        x = _sample_inputs(lenet_art.source, 1, seed=5)[0]
+
+        def boom(*a, **k):
+            raise RuntimeError("kaboom")
+
+        with ServeEngine(lenet_art) as eng:
+            lenet_art.run = boom  # instance shadow over the method
+            try:
+                fut = eng.submit(x)
+                with pytest.raises(RuntimeError, match="kaboom"):
+                    fut.result(timeout=60)
+            finally:
+                del lenet_art.run
             # engine keeps serving after a poisoned batch
-            x = _sample_inputs(lenet_art.source, 1, seed=5)[0]
             eng(x)
+
+    def test_stop_drains_queued_requests(self, lenet_art):
+        """Requests stuck in the queue behind the stop signal fail
+        loudly with RuntimeError instead of blocking their callers on
+        fut.result() forever."""
+        import threading
+        from concurrent.futures import Future
+
+        from repro.serve import engine as engine_mod
+
+        x = _sample_inputs(lenet_art.source, 1, seed=11)[0]
+        started, gate = threading.Event(), threading.Event()
+        real_run = type(lenet_art).run
+
+        def slow_run(*a, **k):
+            started.set()
+            assert gate.wait(timeout=30)
+            return real_run(lenet_art, *a, **k)
+
+        lenet_art.run = slow_run  # instance shadow over the method
+        try:
+            eng = ServeEngine(lenet_art,
+                              ServeConfig(latency_budget_ms=0.0)).start()
+            fut = eng.submit(x)
+            assert started.wait(timeout=30)  # worker busy in _execute
+            # jam a request behind a stop signal — the shape admission
+            # racing shutdown would take
+            eng._queue.put(engine_mod._STOP)
+            orphan = engine_mod._Request(
+                {k: np.asarray(v) for k, v in x.items()},
+                Future(), time.perf_counter())
+            eng._queue.put(orphan)
+            gate.set()
+            eng.stop()
+        finally:
+            del lenet_art.run
+        fut.result(timeout=60)  # the in-flight batch still completed
+        with pytest.raises(RuntimeError, match="engine stopped"):
+            orphan.future.result(timeout=60)
+        assert eng.stats["rejected"] == 1
+        with pytest.raises(RuntimeError, match="not started"):
+            eng.submit(x)  # a stopped engine rejects new work
 
     def test_submit_requires_start(self, lenet_art):
         eng = ServeEngine(lenet_art)
