@@ -41,6 +41,27 @@ test -s "$ZOO_OUT/lenet5_g0.cpp"
 test -s "$ZOO_OUT/host_schedule.cpp"
 rm -rf "$ZOO_OUT"
 
+# strided-ONNX smoke (ISSUE 8): the strided+BN golden fixture must
+# import -> compile -> emit -> run end to end through the CLI (stride-2
+# downsamples, BatchNorm folds, GlobalAveragePool head), traced; the
+# trace is kept as trace_onnx_smoke.json for the artifact upload like
+# the lenet5 one below
+ONNX_OUT="$(mktemp -d)"
+RUN_LOG="$(python -m repro compile tests/golden/resnet_tiny.onnx \
+  --target kv260 --emit "$ONNX_OUT" --run --quiet \
+  --trace /tmp/trace_onnx.json)"
+echo "$RUN_LOG" | grep -q "ran OK"
+test -s "$ONNX_OUT/resnet_tiny_g0.cpp"
+test -s "$ONNX_OUT/host_schedule.cpp"
+rm -rf "$ONNX_OUT"
+python - /tmp/trace_onnx.json <<'PY'
+import json, sys
+from repro.instrument import validate_chrome_trace
+validate_chrome_trace(json.load(open(sys.argv[1])))
+print("onnx trace OK")
+PY
+cp /tmp/trace_onnx.json trace_onnx_smoke.json
+
 # instrumentation smoke (ISSUE 6): a traced compile+run must produce a
 # valid Chrome trace-event JSON; kept as trace_smoke.json for the
 # workflow artifact upload alongside the provenance-stamped BENCH rows

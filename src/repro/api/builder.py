@@ -35,6 +35,7 @@ from repro.core.ir import (
     DFG,
     PayloadKind,
     Value,
+    make_broadcast_binary_op,
     make_conv2d_op,
     make_elementwise_op,
     make_flatten_op,
@@ -139,10 +140,13 @@ class Graph:
     # -- layers --------------------------------------------------------------
 
     def conv2d(self, x: TensorRef, filters: int, kernel: int = 3,
-               stride: int = 1, *, name: Optional[str] = None,
+               stride: int = 1, *, padding: str = "SAME",
+               name: Optional[str] = None,
                weight: Optional[str] = None,
                out: Optional[str] = None) -> TensorRef:
-        """SAME-padding NHWC conv2d; output spatial extent ``ceil(h/s)``."""
+        """NHWC conv2d.  ``padding="SAME"`` (output spatial extent
+        ``ceil(h/s)``, deficit zero-padded end-heavy — ONNX SAME_UPPER)
+        or ``"VALID"`` (no padding, ``(h - k)//s + 1``)."""
         nm = self._next("conv", name)
         self._check(nm, x)
         if x.rank != 4:
@@ -151,9 +155,18 @@ class Graph:
         if filters < 1 or kernel < 1 or stride < 1:
             _fail(nm, f"filters/kernel/stride must be >= 1, got "
                       f"({filters}, {kernel}, {stride})")
+        if padding not in ("SAME", "VALID"):
+            _fail(nm, f'padding must be "SAME" or "VALID", got {padding!r}')
         n, h, w, c_in = x.shape
-        h_out = -(-h // stride)
-        w_out = -(-w // stride)
+        if padding == "VALID":
+            if kernel > h or kernel > w:
+                _fail(nm, f"VALID conv kernel {kernel} exceeds the spatial "
+                          f"extents {h}x{w}")
+            h_out = (h - kernel) // stride + 1
+            w_out = (w - kernel) // stride + 1
+        else:
+            h_out = -(-h // stride)
+            w_out = -(-w // stride)
         wref = self.constant((kernel, kernel, c_in, filters), weight,
                              elem_bits=x.elem_bits)
         oname = out if out is not None else f"{nm}_out"
@@ -312,11 +325,29 @@ class Graph:
         nm = self._next("add", name)
         self._check(nm, a)
         self._check(nm, b)
+        oname = out if out is not None else f"{nm}_out"
         if a.shape != b.shape:
+            # per-channel bias: a rank-1 *constant* matching the last
+            # axis broadcasts through the indexing maps (C elements of
+            # const buffer, not H*W*C)
+            if (
+                b.rank == 1
+                and b.shape[0] == a.shape[-1]
+                and self.dfg.values[b.name].is_constant
+            ):
+                self.dfg.add_value(Value(oname, a.shape, a.elem_bits))
+                self.dfg.add_node(
+                    make_broadcast_binary_op(
+                        nm, a.name, b.name, oname, a.shape,
+                        PayloadKind.ADD, elem_bits=a.elem_bits,
+                    )
+                )
+                return self._ref(oname)
             _fail(nm, f"operand shapes differ: {a.shape} vs {b.shape} "
                       "(residual adds need identical shapes — check the "
-                      "body's channel count and pooling)")
-        oname = out if out is not None else f"{nm}_out"
+                      "body's channel count and pooling; a per-channel "
+                      "bias must be a rank-1 constant matching the last "
+                      "axis)")
         self.dfg.add_value(Value(oname, a.shape, a.elem_bits))
         self.dfg.add_node(
             make_elementwise_op(nm, [a.name, b.name], oname, a.shape,
@@ -342,13 +373,15 @@ class Conv2D:
     filters: int
     kernel: int = 3
     stride: int = 1
+    padding: str = "SAME"
     name: Optional[str] = None
     weight: Optional[str] = None
     out: Optional[str] = None
 
     def apply(self, g: Graph, x: TensorRef) -> TensorRef:
         return g.conv2d(x, self.filters, self.kernel, self.stride,
-                        name=self.name, weight=self.weight, out=self.out)
+                        padding=self.padding, name=self.name,
+                        weight=self.weight, out=self.out)
 
 
 @dataclass(frozen=True)

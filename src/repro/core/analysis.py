@@ -245,6 +245,48 @@ class WindowGeometry:
     dilation: int
 
 
+def conv_spatial_pads(
+    op: GenericOp, input_shape: tuple[int, ...]
+) -> tuple[tuple[int, int], ...]:
+    """Explicit ``(begin, end)`` zero-padding per physical input axis.
+
+    The affine maps fully determine how much input a sliding-window op
+    *reads*: along a windowed axis the accesses span
+    ``s*(P-1) + δ*(R-1) + 1`` elements.  Whatever that exceeds the
+    producer's actual extent must be zero-padding, split end-heavy
+    (``begin = total // 2``) — the XLA SAME / ONNX SAME_UPPER
+    convention, and for odd kernels at stride 1 exactly the symmetric
+    ``(k-1)//2`` frame the original stride-1 path used.  A VALID window
+    (maps read no more than the input provides) yields ``(0, 0)``
+    everywhere, so the same helper serves both conventions; pool ops
+    (always VALID here) get all-zero pads too.
+    """
+    info = classify_kernel(op)
+    if info.kernel_class != KernelClass.SLIDING_WINDOW:
+        raise ValueError(f"{op.name} is not sliding-window")
+    imap = op.input_maps[0]
+    pads: list[tuple[int, int]] = []
+    for ax, expr in enumerate(imap.results):
+        par = red = None
+        if not expr.is_single_dim() and expr.const == 0:
+            for d, c in expr.terms:
+                if op.is_parallel_dim(d):
+                    par = (d, c)
+                else:
+                    red = (d, c)
+        if par is None or red is None:
+            pads.append((0, 0))
+            continue
+        needed = (
+            par[1] * (op.dim_extent(par[0]) - 1)
+            + red[1] * (op.dim_extent(red[0]) - 1)
+            + 1
+        )
+        total = max(0, needed - input_shape[ax])
+        pads.append((total // 2, total - total // 2))
+    return tuple(pads)
+
+
 def window_geometry(op: GenericOp, info: KernelInfo | None = None) -> WindowGeometry:
     info = info or classify_kernel(op)
     if info.kernel_class != KernelClass.SLIDING_WINDOW:

@@ -71,8 +71,13 @@ def _floor_div_stmt(var: str, pts: int) -> str:
     return f"{var} = ({var} - ((({var} % {pts}) + {pts}) % {pts})) / {pts};"
 
 
-def _emit_epilogue(op, indent: str) -> list[str]:
-    """Fused-epilogue lines applied to the result before stream write."""
+def _emit_epilogue(op, indent: str, values: dict | None = None) -> list[str]:
+    """Fused-epilogue lines applied to the result before stream write.
+
+    ``values`` (when provided) sizes constant operands: an operand with
+    fewer elements than the output is a broadcast (per-channel bias) and
+    indexes modulo its own length — full-size operands keep the plain
+    ``[o]`` subscript."""
     var = "acc" if op.payload in (PayloadKind.MAC, PayloadKind.AVG) else "out_v"
     lines = []
     if op.payload == PayloadKind.AVG:
@@ -115,7 +120,14 @@ def _emit_epilogue(op, indent: str) -> list[str]:
             continue
         # `o` is the flat output-point index, same schematic convention
         # as the payload's `win[i]`/`wgt[i]` accesses
-        k = f"k_{e.operand}[o]" if e.operand else ""
+        k = ""
+        if e.operand:
+            idx = "o"
+            if values is not None:
+                n = values[e.operand].num_elements
+                if n < values[op.output].num_elements:
+                    idx = f"o % {n}"  # broadcast (per-channel) operand
+            k = f"k_{e.operand}[{idx}]"
         expr = _EPILOGUE_EXPR[e.kind].format(v=var, k=k)
         if expr:
             lines.append(f"{indent}{expr}  // fused {e.kind.value}")
@@ -208,8 +220,17 @@ def emit_node(plan: NodePlan, unroll: int, width: int,
         if len(geo.window_dims) >= 2:
             k_outer = geo.window_extents[0]
             line_len = geo.input_extents[-1]
+            stride_note = ""
+            if op.payload == PayloadKind.MAC and geo.stride > 1:
+                # strided conv: the line shifter still holds K-1 input
+                # rows, but only every stride-th window row is emitted
+                stride_note = (
+                    f"  // stride {geo.stride}: ingest {geo.stride} input "
+                    "rows per output row"
+                )
             lines.append(
                 f"  elem_t line_buf[{max(k_outer - 1, 1)}][{line_len}];"
+                f"{stride_note}"
             )
             lines.append(
                 "#pragma HLS BIND_STORAGE variable=line_buf type=ram_2p impl=bram"
@@ -272,14 +293,14 @@ def emit_node(plan: NodePlan, unroll: int, width: int,
             body = _PAYLOAD_EXPR[op.payload]
             lines.append(f"{indent}{body}")
             if inner_acc == 0:
-                lines.extend(_emit_epilogue(op, indent))
+                lines.extend(_emit_epilogue(op, indent, values))
     inner_acc = min(inner_acc, max(depth - 1, 0))
     has_exit = bool(op.epilogue) or op.payload == PayloadKind.AVG
     for j, i in enumerate(range(depth, 0, -1)):
         lines.append("  " * i + "}")
         if has_exit and inner_acc and j + 1 == inner_acc:
             # just closed the accumulation loops: acc is final here
-            lines.extend(_emit_epilogue(op, "  " * i))
+            lines.extend(_emit_epilogue(op, "  " * i, values))
     lines.append("}")
     return "\n".join(lines)
 

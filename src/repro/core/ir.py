@@ -603,6 +603,38 @@ def make_elementwise_op(
     )
 
 
+def make_broadcast_binary_op(
+    name: str,
+    stream_input: str,
+    const_input: str,
+    output: str,
+    shape: tuple[int, ...],
+    payload: PayloadKind,
+    elem_bits: int = 8,
+) -> GenericOp:
+    """Binary pure-parallel op whose second operand is a rank-1 constant
+    broadcast along the output's *last* axis (the per-channel bias of an
+    imported conv/dense).  The broadcast lives in the indexing map — the
+    constant's map reads only ``d_{n-1}`` — so downstream consumers (the
+    streaming planner's const-buffer charge, the HLS emitter's epilogue
+    operand indexing) see a C-element buffer instead of the H·W·C
+    materialization a full-tensor constant would cost.
+    """
+    n = len(shape)
+    ident = AffineMap.identity(n)
+    bcast = AffineMap.of(n, [AffineExpr.dim(n - 1)])
+    return GenericOp(
+        name=name,
+        inputs=(stream_input, const_input),
+        output=output,
+        indexing_maps=(ident, bcast, ident),
+        iterator_types=tuple(IteratorType.PARALLEL for _ in range(n)),
+        dim_sizes=shape,
+        payload=payload,
+        elem_bits=elem_bits,
+    )
+
+
 def make_transpose_op(
     name: str,
     input_name: str,

@@ -187,6 +187,42 @@ class FpgaResourceModel:
     ) -> int:
         loops = plan.loops
         body = ii * math.ceil(loops.total_trip / max(unroll, 1))
+        if (
+            plan.kernel_class == KernelClass.SLIDING_WINDOW
+            and plan.op.payload == PayloadKind.MAC
+            and plan.info.stride > 1
+        ):
+            # a strided conv emits fewer windows than it ingests rows:
+            # the MAC trip count (over *output* positions) undercounts
+            # the cycles the node spends consuming its input stream, so
+            # the node can never beat the ingest rate.  Recover the
+            # streamed-input element count from the maps (the composite
+            # subscripts span s*(P-1)+δ*(R-1)+1 input positions) and
+            # floor the body at one element-vector per II cycles.
+            op = plan.op
+            smap = next(
+                (m for m in op.input_maps
+                 if any(not e.is_single_dim() for e in m.results)),
+                None,
+            )
+            if smap is not None:
+                in_elems = 1
+                for expr in smap.results:
+                    par = red = None
+                    if not expr.is_single_dim() and expr.const == 0:
+                        for d, c in expr.terms:
+                            if op.is_parallel_dim(d):
+                                par = (d, c)
+                            else:
+                                red = (d, c)
+                    if par is not None and red is not None:
+                        in_elems *= (
+                            par[1] * (op.dim_extent(par[0]) - 1)
+                            + red[1] * (op.dim_extent(red[0]) - 1) + 1
+                        )
+                    else:
+                        in_elems *= op.dim_extent(expr.terms[0][0])
+                body = max(body, ii * math.ceil(in_elems / max(unroll, 1)))
         cyc = body + loops.pipeline_depth
         if weight_tiles > 1:
             # partial weight streaming: the const buffer is tiled along

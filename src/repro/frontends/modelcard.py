@@ -89,10 +89,17 @@ def _node_record(dfg: DFG, op: GenericOp) -> dict:
                      f"{op.name}: conv needs 1 stream + 1 const input")
             kh, kw = op.dim_sizes[4], op.dim_sizes[5]
             _require(kh == kw, f"{op.name}: non-square kernel {kh}x{kw}")
-            return {"op": "conv2d", "name": op.name, "input": stream[0],
-                    "filters": op.dim_sizes[3], "kernel": kh,
-                    "stride": info.stride, "weight": const[0],
-                    "out": op.output}
+            rec = {"op": "conv2d", "name": op.name, "input": stream[0],
+                   "filters": op.dim_sizes[3], "kernel": kh,
+                   "stride": info.stride, "weight": const[0],
+                   "out": op.output}
+            # VALID convs: the output extent is the tell (SAME is always
+            # ceil(h/s)); the key is omitted for SAME so older cards
+            # stay byte-identical
+            h_in = dfg.values[stream[0]].shape[1]
+            if op.dim_sizes[1] != -(-h_in // info.stride):
+                rec["padding"] = "VALID"
+            return rec
         if op.payload in (PayloadKind.MAX, PayloadKind.AVG) and op.n_dims == 6:
             kh, kw = op.dim_sizes[4], op.dim_sizes[5]
             _require(kh == kw, f"{op.name}: non-square pool {kh}x{kw}")
@@ -111,9 +118,23 @@ def _node_record(dfg: DFG, op: GenericOp) -> dict:
         return {"op": "dense", "name": op.name, "input": op.inputs[0],
                 "units": op.dim_sizes[1], "weight": op.inputs[1],
                 "out": op.output}
-    # PURE_PARALLEL with identity maps
-    _require(all(m.is_identity() for m in op.indexing_maps),
-             f"{op.name}: non-identity elementwise maps")
+    # PURE_PARALLEL with identity maps — or the per-channel broadcast
+    # bias add (ident, last-dim, ident), whose rank-1 constant operand
+    # re-derives the broadcast on import (builder ``add``)
+    if not all(m.is_identity() for m in op.indexing_maps):
+        is_bias = (
+            len(op.inputs) == 2
+            and op.payload == PayloadKind.ADD
+            and op.indexing_maps[0].is_identity()
+            and op.indexing_maps[2].is_identity()
+            and len(op.indexing_maps[1].results) == 1
+            and op.indexing_maps[1].results[0].is_single_dim()
+            and op.indexing_maps[1].results[0].terms[0] == (op.n_dims - 1, 1)
+            and dfg.values[op.inputs[1]].is_constant
+        )
+        _require(is_bias, f"{op.name}: non-identity elementwise maps")
+        return {"op": "add", "name": op.name, "a": op.inputs[0],
+                "b": op.inputs[1], "out": op.output}
     if len(op.inputs) == 1:
         if op.payload == PayloadKind.RELU:
             return {"op": "relu", "name": op.name, "input": op.inputs[0],
@@ -264,6 +285,7 @@ def _build_dfg(card: dict) -> DFG:
                 refs[rec["out"]] = g.conv2d(
                     ref(rec, "input"), rec["filters"],
                     kernel=rec.get("kernel", 3), stride=rec.get("stride", 1),
+                    padding=rec.get("padding", "SAME"),
                     name=rec["name"], weight=rec["weight"], out=rec["out"],
                 )
             elif op in ("max_pool", "avg_pool"):

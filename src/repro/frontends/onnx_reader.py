@@ -8,10 +8,23 @@ from the ``.onnx`` bytes — the container ships no ONNX, and a model zoo
 frontend that silently required one would never run in CI.
 
 Supported operator subset (everything the builder can express):
-``Conv`` (groups=1, dilation 1, stride 1, SAME padding), ``Relu``,
-``MaxPool`` / ``AveragePool`` (square VALID windows), ``Gemm``
-(α=1, transA=0), ``Add``, ``Flatten`` (axis=1).  Anything else raises
-:class:`OnnxImportError` naming the node and the constraint.
+``Conv`` (groups=1, dilation 1, any uniform stride, SAME_UPPER / VALID
+/ equivalent explicit pads), ``BatchNormalization`` (inference form,
+folded into the producing Conv's weights and bias at import),
+``GlobalAveragePool`` (square maps, via the AVG epilogue's DIV exit
+path), ``Relu``, ``MaxPool`` / ``AveragePool`` (square VALID windows),
+``Gemm`` (α=1, transA=0, β∈{0,1}), ``Add``, ``Flatten`` (axis=1).
+Anything else raises :class:`OnnxImportError` naming the node and the
+constraint.  Per-channel biases (Conv B, Gemm C) import as rank-1
+broadcast epilogue operands — C resident elements, not the H·W·C
+materialization a full-tensor constant would cost the resource model.
+
+Padding convention: the streaming frame splits a SAME deficit
+*end-heavy* (``begin = total // 2``), which is exactly ONNX
+``SAME_UPPER`` — including the asymmetric split of even kernels.
+``SAME_LOWER`` is only accepted where its begin-heavy split coincides
+(symmetric totals); an asymmetric SAME_LOWER conv is *rejected*, never
+silently mis-executed with the mirrored frame.
 
 Layout: ONNX is NCHW, the streaming kernels are NHWC.  Every
 layout-sensitive op is imported *faithfully* inside an explicit
@@ -44,8 +57,8 @@ from .base import ImportedModel
 NCHW2NHWC = (0, 2, 3, 1)
 NHWC2NCHW = (0, 3, 1, 2)
 
-SUPPORTED_OPS = ("Conv", "Relu", "MaxPool", "AveragePool", "Gemm", "Add",
-                 "Flatten")
+SUPPORTED_OPS = ("Conv", "BatchNormalization", "GlobalAveragePool", "Relu",
+                 "MaxPool", "AveragePool", "Gemm", "Add", "Flatten")
 
 
 class OnnxImportError(ValueError):
@@ -382,20 +395,65 @@ def _uniform_stride(node: OnnxNode, default: int = 1) -> int:
     return int(strides[0])
 
 
-def _check_same_padding(node: OnnxNode, kernel: int) -> None:
+def _same_pads(n: int, k: int, s: int) -> tuple[int, int]:
+    """End-heavy (begin, end) SAME split for extent ``n`` — the ONNX
+    SAME_UPPER convention, and the split the builder/streaming frame
+    applies for ``padding="SAME"``."""
+    out = -(-n // s)
+    total = max(0, s * (out - 1) + k - n)
+    return total // 2, total - total // 2
+
+
+def _resolve_conv_padding(node: OnnxNode, kernel: int, stride: int,
+                          h_in: int, w_in: int) -> str:
+    """Map (auto_pad, pads, kernel, stride, input extents) onto the
+    builder's ``"SAME"`` / ``"VALID"`` vocabulary, or reject by name.
+
+    The streaming frame splits a SAME deficit end-heavy — exactly ONNX
+    SAME_UPPER, *including* the asymmetric split of even kernels.
+    SAME_LOWER pads begin-heavy, so it is only accepted where the two
+    splits coincide (symmetric totals); anything else is rejected
+    rather than silently executed with a mirrored window.  Explicit
+    pads are accepted when they are all-zero (VALID) or equal the
+    SAME_UPPER frame for the actual input extents.
+    """
     auto = node.attrs.get("auto_pad", "NOTSET") or "NOTSET"
-    pads = node.attrs.get("pads")
-    if auto in ("SAME_UPPER", "SAME_LOWER"):
-        return
-    want = (kernel - 1) // 2
-    if pads is None and want == 0:
-        return
-    if pads is None or list(pads) != [want] * 4:
-        _fail(
-            f"Conv {node.name!r}: only SAME padding maps onto the "
-            f"streaming conv (need pads={[want] * 4} for k={kernel} or "
-            f"auto_pad=SAME_*, got auto_pad={auto!r} pads={pads})"
-        )
+    pads = [int(p) for p in (node.attrs.get("pads") or [])]
+    if auto not in ("NOTSET", "VALID", "SAME_UPPER", "SAME_LOWER"):
+        _fail(f"Conv {node.name!r}: unknown auto_pad {auto!r}")
+    if auto != "NOTSET" and any(pads):
+        _fail(f"Conv {node.name!r}: auto_pad={auto!r} with explicit "
+              f"pads={pads} — the ONNX spec forbids setting both")
+    if auto == "VALID":
+        return "VALID"
+    same_h = _same_pads(h_in, kernel, stride)
+    same_w = _same_pads(w_in, kernel, stride)
+    if auto == "SAME_UPPER":
+        return "SAME"
+    if auto == "SAME_LOWER":
+        if same_h[0] != same_h[1] or same_w[0] != same_w[1]:
+            _fail(f"Conv {node.name!r}: auto_pad=SAME_LOWER needs a "
+                  f"begin-heavy pad split, but kernel {kernel} stride "
+                  f"{stride} on a {h_in}x{w_in} input pads asymmetrically "
+                  f"(H {same_h}, W {same_w}) — the streaming frame is "
+                  "end-heavy (SAME_UPPER); rejecting rather than "
+                  "mis-placing the window")
+        return "SAME"
+    if not pads:
+        return "VALID"
+    if len(pads) != 4:
+        _fail(f"Conv {node.name!r}: pads {pads} must have 4 entries "
+              "(top, left, bottom, right)")
+    if not any(pads):
+        return "VALID"
+    want = [same_h[0], same_w[0], same_h[1], same_w[1]]
+    if pads == want:
+        return "SAME"
+    _fail(f"Conv {node.name!r}: explicit pads {pads} are neither zero "
+          f"(VALID) nor the SAME_UPPER frame {want} for kernel {kernel} "
+          f"stride {stride} on a {h_in}x{w_in} input — arbitrary padding "
+          "does not map onto the streaming conv")
+    raise AssertionError("unreachable")
 
 
 def _check_no_padding(node: OnnxNode) -> None:
@@ -408,6 +466,114 @@ def _check_no_padding(node: OnnxNode) -> None:
         return
     _fail(f"{node.op_type} {node.name!r}: auto_pad={auto!r} pooling is "
           "not supported")
+
+
+def _bn_cast_back(arr: np.ndarray, dtype: np.dtype, node: OnnxNode,
+                  what: str) -> np.ndarray:
+    """Return the float64 fold result ``arr`` in the Conv's parameter
+    dtype.  Float dtypes just cast; integer (PTQ) dtypes require the
+    fold to be *exactly* representable — anything fractional or out of
+    range would need a requantization step this importer does not
+    perform, so it is rejected by name instead of silently rounded."""
+    dtype = np.dtype(dtype)
+    if np.issubdtype(dtype, np.floating):
+        return np.ascontiguousarray(arr.astype(dtype))
+    r = np.rint(arr)
+    info = np.iinfo(dtype)
+    if (not np.array_equal(r, arr) or arr.min() < info.min
+            or arr.max() > info.max):
+        _fail(f"BatchNormalization {node.name!r}: folded {what} is not "
+              f"exactly representable in the Conv's {dtype.name} "
+              "parameters — integer (PTQ) batch-norm folding needs "
+              "requantization, which is out of scope")
+    return np.ascontiguousarray(r.astype(dtype))
+
+
+def _fold_batchnorm(og: OnnxGraph) -> None:
+    """Fold every inference-mode BatchNormalization into the Conv that
+    feeds it, in place:  with ``s = scale / sqrt(var + eps)``,
+
+        W'[o, :, :, :] = W[o, :, :, :] * s[o]
+        b'             = (b - mean) * s + B
+
+    so ``BN(conv(x, W) + b) == conv(x, W') + b'`` exactly.  The BN node
+    disappears and the Conv keeps (or gains) a bias input.  A BN that
+    cannot fold — not fed by a Conv, Conv output shared or a graph
+    output, training-mode outputs, non-initializer statistics — raises
+    :class:`OnnxImportError` naming the obstacle.
+    """
+    consumers: dict[str, int] = {}
+    for n in og.nodes:
+        for i in n.inputs:
+            consumers[i] = consumers.get(i, 0) + 1
+    conv_of = {n.outputs[0]: n for n in og.nodes
+               if n.op_type == "Conv" and n.outputs}
+    kept: list[OnnxNode] = []
+    fresh = 0
+    for node in og.nodes:
+        if node.op_type != "BatchNormalization":
+            kept.append(node)
+            continue
+        if len(node.outputs) != 1:
+            _fail(f"BatchNormalization {node.name!r}: training-mode "
+                  f"outputs {node.outputs[1:]} are unsupported")
+        if node.attrs.get("training_mode", 0):
+            _fail(f"BatchNormalization {node.name!r}: training_mode=1 "
+                  "is unsupported")
+        if node.attrs.get("spatial", 1) != 1:
+            _fail(f"BatchNormalization {node.name!r}: spatial=0 (per-"
+                  "element statistics) is unsupported")
+        if len(node.inputs) != 5:
+            _fail(f"BatchNormalization {node.name!r}: expected X, scale, "
+                  "B, mean, var")
+        conv = conv_of.get(node.inputs[0])
+        if conv is None:
+            _fail(f"BatchNormalization {node.name!r}: only folds into an "
+                  f"immediately preceding Conv, but {node.inputs[0]!r} is "
+                  "not a Conv output")
+        if consumers.get(conv.outputs[0], 0) != 1 \
+                or conv.outputs[0] in og.outputs:
+            _fail(f"BatchNormalization {node.name!r}: Conv output "
+                  f"{conv.outputs[0]!r} has other consumers or is a graph "
+                  "output — cannot fold")
+        stats = []
+        for vn in node.inputs[1:]:
+            arr = og.initializers.get(vn)
+            if arr is None:
+                _fail(f"BatchNormalization {node.name!r}: {vn!r} must be "
+                      "an initializer")
+            stats.append(np.asarray(arr, dtype=np.float64).reshape(-1))
+        scale, shift, mean, var = stats
+        w = og.initializers.get(conv.inputs[1])
+        if w is None or w.ndim != 4:
+            _fail(f"BatchNormalization {node.name!r}: Conv weight "
+                  f"{conv.inputs[1]!r} must be a rank-4 initializer")
+        cout = int(w.shape[0])
+        if any(p.shape[0] != cout for p in stats):
+            _fail(f"BatchNormalization {node.name!r}: statistics arity "
+                  f"{[p.shape[0] for p in stats]} != Conv channels {cout}")
+        eps = float(node.attrs.get("epsilon", 1e-5))
+        s = scale / np.sqrt(var + eps)
+        w_f = np.asarray(w, dtype=np.float64) * s[:, None, None, None]
+        if len(conv.inputs) == 3:
+            b_arr = og.initializers.get(conv.inputs[2])
+            if b_arr is None:
+                _fail(f"BatchNormalization {node.name!r}: Conv bias "
+                      f"{conv.inputs[2]!r} must be an initializer")
+            b0 = np.asarray(b_arr, dtype=np.float64).reshape(-1)
+        else:
+            b0 = np.zeros(cout, dtype=np.float64)
+        b_f = (b0 - mean) * s + shift
+        bias_dtype = (np.dtype(np.int32)
+                      if np.issubdtype(w.dtype, np.integer) else w.dtype)
+        fresh += 1
+        wn = f"{conv.inputs[1]}.bnfold{fresh}"
+        bn = f"{node.inputs[2]}.bnfold{fresh}"
+        og.initializers[wn] = _bn_cast_back(w_f, w.dtype, node, "weight")
+        og.initializers[bn] = _bn_cast_back(b_f, bias_dtype, node, "bias")
+        conv.inputs = [conv.inputs[0], wn, bn]
+        conv.outputs = [node.outputs[0]]
+    og.nodes = kept
 
 
 def _to_builder(og: OnnxGraph, model_name: str) -> ImportedModel:
@@ -430,10 +596,6 @@ def _to_builder(og: OnnxGraph, model_name: str) -> ImportedModel:
         c = g.constant(arr.shape, name=nm)
         params[nm] = np.ascontiguousarray(arr)
         return c
-
-    def bias_add(x: TensorRef, onnx_name: str, bias: np.ndarray) -> TensorRef:
-        full = np.broadcast_to(bias, x.shape)
-        return g.add(x, bind_const(onnx_name, full))
 
     def weight_name(onnx_name: str) -> str:
         return names(onnx_name, "w")
@@ -459,36 +621,37 @@ def _to_builder(og: OnnxGraph, model_name: str) -> ImportedModel:
         if ks and list(ks) != [kernel, kernel]:
             _fail(f"Conv {node.name!r}: kernel_shape {ks} != weight "
                   f"kernel {kernel}")
-        if kernel % 2 == 0:
-            # even-kernel SAME padding is asymmetric (and SAME_UPPER vs
-            # SAME_LOWER diverge) — the streaming kernel's symmetric
-            # SAME convolution cannot reproduce it
-            _fail(f"Conv {node.name!r}: even kernel {kernel}x{kernel} "
-                  "cannot map onto the symmetric-SAME streaming conv")
         stride = _uniform_stride(node)
-        if stride != 1:
-            _fail(f"Conv {node.name!r}: only stride-1 convs map onto the "
-                  f"SAME-padding streaming kernel (stride={stride})")
-        _check_same_padding(node, kernel)
         x = ref(node, xn)
         if x.rank != 4:
             _fail(f"Conv {node.name!r}: input rank {x.rank} != 4 (NCHW)")
+        padding = _resolve_conv_padding(node, kernel, stride,
+                                        int(x.shape[2]), int(x.shape[3]))
         h = g.transpose(x, NCHW2NHWC)
         wname = weight_name(wn)
-        h = g.conv2d(h, int(w.shape[0]), kernel=kernel, stride=1,
-                     weight=wname)
+        h = g.conv2d(h, int(w.shape[0]), kernel=kernel, stride=stride,
+                     padding=padding, weight=wname)
         params[wname] = np.ascontiguousarray(np.transpose(w, (2, 3, 1, 0)))
         if len(node.inputs) == 3:
             b = og.initializers.get(node.inputs[2])
             if b is None:
                 _fail(f"Conv {node.name!r}: bias {node.inputs[2]!r} must "
                       "be an initializer")
-            h = bias_add(h, node.inputs[2], b.reshape(1, 1, 1, -1))
+            if b.size != int(w.shape[0]):
+                _fail(f"Conv {node.name!r}: bias has {b.size} elements, "
+                      f"expected {int(w.shape[0])}")
+            # rank-1 (C,) constant: the builder routes this through the
+            # broadcast add, so it fuses as a C-element epilogue operand
+            # instead of a materialized H*W*C tensor
+            h = g.add(h, bind_const(node.inputs[2], b.reshape(-1)))
         refs[node.outputs[0]] = g.transpose(h, NHWC2NCHW)
 
     def handle_pool(node: OnnxNode) -> None:
-        window = _square(node, list(node.attrs.get("kernel_shape", [])),
-                         "kernel_shape")
+        ks = node.attrs.get("kernel_shape")
+        if not ks:
+            _fail(f"{node.op_type} {node.name!r}: missing required "
+                  "attribute 'kernel_shape'")
+        window = _square(node, list(ks), "kernel_shape")
         stride = _uniform_stride(node, default=1)
         _check_no_padding(node)
         if node.attrs.get("ceil_mode", 0):
@@ -528,7 +691,11 @@ def _to_builder(og: OnnxGraph, model_name: str) -> ImportedModel:
             c = og.initializers.get(node.inputs[2])
             if c is None:
                 _fail(f"Gemm {node.name!r}: C must be an initializer")
-            h = bias_add(h, node.inputs[2], c.reshape(1, -1))
+            if c.size != int(w.shape[1]):
+                _fail(f"Gemm {node.name!r}: C has {c.size} elements — "
+                      f"only a per-unit bias of {int(w.shape[1])} is "
+                      "supported")
+            h = g.add(h, bind_const(node.inputs[2], c.reshape(-1)))
         refs[node.outputs[0]] = h
 
     def handle_add(node: OnnxNode) -> None:
@@ -543,6 +710,19 @@ def _to_builder(og: OnnxGraph, model_name: str) -> ImportedModel:
             refs[node.outputs[0]] = g.add(x, bind_const(kn, arr))
             return
         refs[node.outputs[0]] = g.add(ref(node, a), ref(node, b))
+
+    def handle_global_pool(node: OnnxNode) -> None:
+        x = ref(node, node.inputs[0])
+        if x.rank != 4:
+            _fail(f"GlobalAveragePool {node.name!r}: input rank "
+                  f"{x.rank} != 4")
+        hh, ww = int(x.shape[2]), int(x.shape[3])
+        if hh != ww:
+            _fail(f"GlobalAveragePool {node.name!r}: non-square map "
+                  f"{hh}x{ww} — the square AVG window cannot cover it")
+        h = g.transpose(x, NCHW2NHWC)
+        h = g.avg_pool(h, hh, hh)
+        refs[node.outputs[0]] = g.transpose(h, NHWC2NCHW)
 
     def handle_flatten(node: OnnxNode) -> None:
         if node.attrs.get("axis", 1) != 1:
@@ -561,6 +741,7 @@ def _to_builder(og: OnnxGraph, model_name: str) -> ImportedModel:
         ),
         "MaxPool": handle_pool,
         "AveragePool": handle_pool,
+        "GlobalAveragePool": handle_global_pool,
         "Gemm": handle_gemm,
         "Add": handle_add,
         "Flatten": handle_flatten,
@@ -626,4 +807,5 @@ def load_onnx(source, *, name: str | None = None) -> ImportedModel:
     model_name = name or re.sub(r"[^0-9A-Za-z_]", "_",
                                 og.name if og.name != "onnx_model"
                                 else default_name) or "onnx_model"
+    _fold_batchnorm(og)
     return _to_builder(og, model_name)

@@ -13,7 +13,12 @@ pool pyramids, and residual trunks feeding a head:
                         (conv·conv·pool)×2 → flatten → dense head;
 * ``edge_residual_32``— two residual blocks with an avg-pool and a
                         dense head — the skip-connection model an edge
-                        deployment actually ships.
+                        deployment actually ships;
+* ``resnet_mini_16``  — a ResNet-18-flavoured strided trunk: stride-1
+                        stem, two stride-2 SAME downsample convs each
+                        followed by an identity residual block, then a
+                        global average pool and the dense head — the
+                        strided streaming conv path end to end.
 
 Every entry is a plain builder graph (so the whole pass pipeline,
 partitioner, and both backends apply unchanged), is registered in the
@@ -93,12 +98,36 @@ def edge_residual(n_size: int = 32, c: int = 16, classes: int = 10) -> DFG:
     ).build()
 
 
+def resnet_mini(n_size: int = 16, c: int = 8, classes: int = 10) -> DFG:
+    """ResNet-18-flavoured strided trunk: stem → (stride-2 downsample
+    conv → identity residual block) ×2 → global average pool → dense
+    head.  Each downsample halves the map and doubles the channels; the
+    global pool is an AvgPool whose window is the whole remaining map
+    (the DIV exit path, floor division in the integer regime)."""
+    block = lambda ch: Residual([Conv2D(ch), ReLU(), Conv2D(ch)])  # noqa: E731
+    return Sequential(
+        [
+            Conv2D(c), ReLU(),
+            Conv2D(2 * c, stride=2), ReLU(),
+            block(2 * c), ReLU(),
+            Conv2D(4 * c, stride=2), ReLU(),
+            block(4 * c), ReLU(),
+            AvgPool(n_size // 4),
+            Flatten(),
+            Dense(classes),
+        ],
+        input_shape=(1, n_size, n_size, 3),
+        name=f"resnet_mini_{n_size}",
+    ).build()
+
+
 #: the registry the CLI (`python -m repro zoo`), the benchmark suite,
 #: and the tests iterate — names match each graph's DFG name
 ZOO: dict[str, object] = {
     "lenet5": lenet5,
     "tiny_vgg_32": tiny_vgg,
     "edge_residual_32": edge_residual,
+    "resnet_mini_16": resnet_mini,
 }
 
 

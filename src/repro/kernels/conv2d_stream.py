@@ -56,35 +56,52 @@ def _apply_epilogue(acc, epilogue: str | None):
     raise ValueError(f"unsupported conv epilogue {epilogue!r}")
 
 
+def line_buffer_rows(kh: int, stride: int) -> int:
+    """Rows the line buffer must carry between row blocks.
+
+    At stride ``s`` each emitted output row advances the read window by
+    ``s`` input rows, so only ``max(kh - s, 0)`` rows of the previous
+    block are re-read by the next one — the stride-1 case degenerates to
+    the paper's ``K-1`` rows, and ``s >= kh`` needs no carry at all
+    (windows never overlap vertically)."""
+    return max(kh - stride, 0)
+
+
 def _conv_stream_kernel(
-    x_ref,      # (1, R, Wp, Cin)   current row block (the "stream")
+    x_ref,      # (1, Rin, Wp, Cin)  current row block (the "stream")
     w_ref,      # (KH, KW, Cin, Cout)
-    o_ref,      # (1, R, W, Cout)
-    lb_ref,     # (KH-1, Wp, Cin)   the line buffer (VMEM scratch)
+    o_ref,      # (1, Rin//s, W, Cout)
+    lb_ref,     # (max(KH-s,0), Wp, Cin)  the line buffer (VMEM scratch)
     *,
     kh: int,
     kw: int,
     w_out: int,
+    stride: int,
     epilogue: str | None,
 ):
     i = pl.program_id(1)
     acc_t = _acc_dtype(o_ref.dtype)
+    carry = line_buffer_rows(kh, stride)
 
     @pl.when(i == 0)
     def _init():
         lb_ref[...] = jnp.zeros_like(lb_ref)
 
-    cur = x_ref[0]                                   # (R, Wp, Cin)
-    if kh > 1:
-        window = jnp.concatenate([lb_ref[...], cur], axis=0)  # (KH-1+R, Wp, Cin)
+    cur = x_ref[0]                                   # (Rin, Wp, Cin)
+    if carry > 0:
+        window = jnp.concatenate([lb_ref[...], cur], axis=0)  # (carry+Rin, ...)
     else:
         window = cur
-    r = cur.shape[0]
+    r_out = cur.shape[0] // stride                   # output rows per block
 
-    acc = jnp.zeros((r, w_out, o_ref.shape[-1]), acc_t)
+    acc = jnp.zeros((r_out, w_out, o_ref.shape[-1]), acc_t)
     for dh in range(kh):
         for dw in range(kw):
-            patch = window[dh : dh + r, dw : dw + w_out, :]   # (R, W, Cin)
+            patch = window[
+                dh : dh + (r_out - 1) * stride + 1 : stride,
+                dw : dw + (w_out - 1) * stride + 1 : stride,
+                :,
+            ]                                                  # (Rout, W, Cin)
             tap = w_ref[dh, dw]                                # (Cin, Cout)
             acc = acc + jax.lax.dot_general(
                 patch,
@@ -95,8 +112,8 @@ def _conv_stream_kernel(
     acc = _apply_epilogue(acc, epilogue)
     o_ref[...] = acc[None].astype(o_ref.dtype)
 
-    if kh > 1:
-        lb_ref[...] = window[-(kh - 1):]
+    if carry > 0:
+        lb_ref[...] = window[-carry:]
 
 
 def conv2d_stream_pallas(
@@ -105,15 +122,19 @@ def conv2d_stream_pallas(
     *,
     rows_per_block: int,
     w_out: int,
+    stride: int = 1,
     fuse_relu: bool = False,
     epilogue: str | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Raw pallas_call; see ``ops.conv2d_stream`` for the public wrapper.
 
-    ``epilogue`` generalizes ``fuse_relu`` to any supported fused
-    elementwise tail (``CONV_EPILOGUES``); ``fuse_relu=True`` is kept as
-    sugar for ``epilogue="relu"``.
+    ``rows_per_block`` counts *input* rows per grid step and must be a
+    multiple of ``stride``; each step emits ``rows_per_block // stride``
+    output rows (every ``stride``-th window row — the line-buffer
+    discipline at stride ``s``).  ``epilogue`` generalizes ``fuse_relu``
+    to any supported fused elementwise tail (``CONV_EPILOGUES``);
+    ``fuse_relu=True`` is kept as sugar for ``epilogue="relu"``.
     """
     if fuse_relu:
         if epilogue not in (None, "relu"):
@@ -123,11 +144,14 @@ def conv2d_stream_pallas(
     b, hp, wp, cin = x_padded.shape
     kh, kw_, _, cout = w.shape
     assert hp % rows_per_block == 0, (hp, rows_per_block)
+    assert rows_per_block % stride == 0, (rows_per_block, stride)
     nb = hp // rows_per_block
+    rows_out = rows_per_block // stride
     acc_t = _acc_dtype(x_padded.dtype)
 
     kernel = functools.partial(
-        _conv_stream_kernel, kh=kh, kw=kw_, w_out=w_out, epilogue=epilogue
+        _conv_stream_kernel, kh=kh, kw=kw_, w_out=w_out, stride=stride,
+        epilogue=epilogue
     )
     return pl.pallas_call(
         kernel,
@@ -139,9 +163,11 @@ def conv2d_stream_pallas(
             pl.BlockSpec((kh, kw_, cin, cout), lambda bb, i: (0, 0, 0, 0)),
         ],
         out_specs=pl.BlockSpec(
-            (1, rows_per_block, w_out, cout), lambda bb, i: (bb, i, 0, 0)
+            (1, rows_out, w_out, cout), lambda bb, i: (bb, i, 0, 0)
         ),
-        out_shape=jax.ShapeDtypeStruct((b, hp, w_out, cout), acc_t),
-        scratch_shapes=[pltpu.VMEM((max(kh - 1, 1), wp, cin), x_padded.dtype)],
+        out_shape=jax.ShapeDtypeStruct((b, hp // stride, w_out, cout), acc_t),
+        scratch_shapes=[pltpu.VMEM(
+            (max(line_buffer_rows(kh, stride), 1), wp, cin), x_padded.dtype
+        )],
         interpret=interpret,
     )(x_padded, w)

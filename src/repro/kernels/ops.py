@@ -37,6 +37,7 @@ import repro.instrument as instrument
 from repro.core.analysis import (
     KernelClass,
     classify_kernel,
+    conv_spatial_pads,
     einsum_spec,
     reorder_spec,
     window_geometry,
@@ -74,16 +75,51 @@ def _pick_block(size: int, target: int) -> int:
 # ---------------------------------------------------------------------------
 
 
+Padding = str | tuple[tuple[int, int], tuple[int, int]]
+
+
+def _conv_pads(
+    h: int, w: int, kh: int, kw: int, stride: int, padding: Padding
+) -> tuple[tuple[int, int], tuple[int, int]]:
+    """Resolve ``padding`` to explicit ((top, bottom), (left, right)).
+
+    ``"SAME"`` splits the deficit end-heavy (``begin = total // 2`` —
+    the XLA / ONNX SAME_UPPER convention; at stride 1 with odd kernels
+    this is the symmetric ``(k-1)//2`` frame), ``"VALID"`` pads nothing,
+    and an explicit pair-of-pairs passes through (the importer's
+    asymmetric-pads path).
+    """
+    if isinstance(padding, str):
+        if padding == "SAME":
+            def same(n: int, k: int) -> tuple[int, int]:
+                out = -(-n // stride)
+                total = max(0, stride * (out - 1) + k - n)
+                return total // 2, total - total // 2
+            return same(h, kh), same(w, kw)
+        if padding == "VALID":
+            if kh > h or kw > w:
+                raise ValueError(
+                    f"VALID conv kernel ({kh}x{kw}) exceeds input ({h}x{w})"
+                )
+            return (0, 0), (0, 0)
+        raise ValueError(f"unsupported padding {padding!r}")
+    (pt, pb), (pl, pr) = padding
+    return (int(pt), int(pb)), (int(pl), int(pr))
+
+
 def conv2d_stream(
     x: jax.Array,            # (B, H, W, Cin)
     w: jax.Array,            # (KH, KW, Cin, Cout)
     *,
+    stride: int = 1,
+    padding: Padding = "SAME",
     fuse_relu: bool = False,
     epilogue: str | None = None,
     rows_per_block: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """SAME-padding NHWC conv via the line-buffer streaming kernel.
+    """NHWC conv via the line-buffer streaming kernel (stride-s, SAME /
+    VALID / explicit pads).
 
     Returns int32 accumulators for integer inputs (paper's int8 PTQ path),
     f32 otherwise — requantization is the caller's (graph's) concern.
@@ -92,44 +128,59 @@ def conv2d_stream(
     (``"relu"`` | ``"squared_relu"``) — the TPU realization of the pass
     pipeline's conv+activation fusion (``repro.passes.fusion``);
     ``fuse_relu=True`` remains as sugar for ``epilogue="relu"``.
+
+    Stride-s alignment: the kernel emits one output row per ``stride``
+    input rows of the *aligned* frame, and output row ``g`` reads
+    aligned rows ``[g*s - C, g*s - C + kh - 1]`` where ``C`` is the
+    line-buffer carry (``line_buffer_rows``).  Prepending ``A = c*s - C``
+    zero rows (``c = ceil(C/s)``) makes emitted row ``t + c`` read padded
+    rows ``[t*s, t*s + kh - 1]`` — so the first ``c`` output rows are
+    discarded and the valid output is ``out[:, c : c + h_out]``.  At
+    stride 1 this degenerates to the original causal trick:
+    ``C = c = kh - 1``, ``A = 0``, slice ``[kh-1 : kh-1+h]``.
     """
     interpret = _auto_interpret(interpret)
     b, h, ww, cin = x.shape
     kh, kw, _, cout = w.shape
-    pad_t = (kh - 1) // 2
-    pad_b = kh - 1 - pad_t
-    pad_l = (kw - 1) // 2
-    pad_r = kw - 1 - pad_l
+    (pad_t, pad_b), (pad_l, pad_r) = _conv_pads(h, ww, kh, kw, stride, padding)
+    h_out = (h + pad_t + pad_b - kh) // stride + 1
+    w_out = (ww + pad_l + pad_r - kw) // stride + 1
 
-    # causal trick (see kernel docstring): pad so the padded height is
-    # H + KH - 1 and slice [KH-1 : KH-1+H] of the causal output.
-    hp = h + kh - 1
+    carry = _conv.line_buffer_rows(kh, stride)
+    c_skip = -(-carry // stride)            # garbage leading output rows
+    align = c_skip * stride - carry         # extra zero rows on top
+    hp = align + pad_t + h + pad_b
     if rows_per_block is None:
         plan = plan_conv_rows(
-            h=hp, w=ww + kw - 1, c_in=cin, c_out=cout, kh=kh, kw=kw,
+            h=hp, w=ww + pad_l + pad_r, c_in=cin, c_out=cout, kh=kh, kw=kw,
             bytes_per_el=x.dtype.itemsize,
         )
-        rows_per_block = plan.blocks["rows"]
+        rows_per_block = _round_up(plan.blocks["rows"], stride)
     # rows_per_block must divide hp — pad the bottom if necessary
     hp_pad = _round_up(hp, rows_per_block)
     x_p = jnp.pad(
         x,
-        ((0, 0), (pad_t, pad_b + (hp_pad - hp)), (pad_l, pad_r), (0, 0)),
+        ((0, 0), (align + pad_t, pad_b + (hp_pad - hp)),
+         (pad_l, pad_r), (0, 0)),
     )
     out = _conv.conv2d_stream_pallas(
         x_p,
         w,
         rows_per_block=rows_per_block,
-        w_out=ww,
+        w_out=w_out,
+        stride=stride,
         fuse_relu=fuse_relu,
         epilogue=epilogue,
         interpret=interpret,
     )
-    return out[:, kh - 1 : kh - 1 + h]
+    return out[:, c_skip : c_skip + h_out]
 
 
-def conv2d_same_mm(x: jax.Array, w: jax.Array) -> jax.Array:
-    """SAME-padding NHWC conv as KH·KW shifted channel matmuls.
+def conv2d_same_mm(
+    x: jax.Array, w: jax.Array, *,
+    stride: int = 1, padding: Padding = "SAME",
+) -> jax.Array:
+    """NHWC conv as KH·KW shifted channel matmuls.
 
     The throughput lowering the *batched* executables use for integer
     inputs: XLA's CPU path for integer ``lax.conv`` is a naive loop, an
@@ -150,19 +201,21 @@ def conv2d_same_mm(x: jax.Array, w: jax.Array) -> jax.Array:
     if jnp.issubdtype(x.dtype, jnp.integer):
         x = x.astype(jnp.int32)
         w = w.astype(jnp.int32)
-    pad_t = (kh - 1) // 2
-    pad_l = (kw - 1) // 2
-    xp = jnp.pad(
-        x,
-        ((0, 0), (pad_t, kh - 1 - pad_t), (pad_l, kw - 1 - pad_l), (0, 0)),
-    )
     n, h, wd, _ = x.shape
+    (pad_t, pad_b), (pad_l, pad_r) = _conv_pads(h, wd, kh, kw, stride, padding)
+    xp = jnp.pad(x, ((0, 0), (pad_t, pad_b), (pad_l, pad_r), (0, 0)))
+    h_out = (h + pad_t + pad_b - kh) // stride + 1
+    w_out = (wd + pad_l + pad_r - kw) // stride + 1
     out = None
     for dy in range(kh):
         for dx in range(kw):
-            tap = jnp.einsum(
-                "nhwc,co->nhwo", xp[:, dy:dy + h, dx:dx + wd, :], w[dy, dx]
-            )
+            patch = xp[
+                :,
+                dy : dy + (h_out - 1) * stride + 1 : stride,
+                dx : dx + (w_out - 1) * stride + 1 : stride,
+                :,
+            ]
+            tap = jnp.einsum("nhwc,co->nhwo", patch, w[dy, dx])
             out = tap if out is None else out + tap
     return out
 
@@ -276,30 +329,32 @@ def _lower_node(op, dfg, env, interpret: bool, weight_tiles: int = 1,
             const = [i for i in op.inputs if dfg.values[i].is_constant]
             if (
                 len(stream) == 1 and len(const) == 1
-                and op.n_dims == 7 and info.stride == 1 and info.dilation == 1
+                and op.n_dims == 7 and info.dilation == 1
             ):
                 x_in = env[stream[0]]
+                # the maps determine the reach; whatever exceeds the
+                # actual input extent is the zero-padding frame (SAME
+                # splits end-heavy, VALID reads within bounds -> (0,0))
+                pads = conv_spatial_pads(op, tuple(x_in.shape))
+                padding = (pads[1], pads[2])
                 if fast_int_conv and jnp.issubdtype(
                     x_in.dtype, jnp.integer
                 ):
-                    out = conv2d_same_mm(x_in, env[const[0]])
+                    out = conv2d_same_mm(x_in, env[const[0]],
+                                         stride=info.stride, padding=padding)
                     return _ref.apply_epilogue(out, op.epilogue, env)
                 kern_epi, rest = _split_conv_epilogue(op)
                 out = conv2d_stream(
                     x_in, env[const[0]],
+                    stride=info.stride, padding=padding,
                     epilogue=kern_epi, interpret=interpret,
                 )
                 return _ref.apply_epilogue(out, rest, env)
-            if info.dilation != 1:
-                # keep parity with the interpreter: fail loudly rather
-                # than silently computing a dilation-1 conv
-                raise NotImplementedError(
-                    f"{op.name}: dilated conv not supported in lower_group"
-                )
-            # strided convs: dense oracle inside the same jit
-            out = _ref.conv2d(env[stream[0]], env[const[0]],
-                              stride=info.stride, padding="SAME")
-            return _ref.apply_epilogue(out, op.epilogue, env)
+            # keep parity with the interpreter: fail loudly rather
+            # than silently computing a dilation-1 conv
+            raise NotImplementedError(
+                f"{op.name}: unsupported conv form in lower_group"
+            )
         if (
             op.payload in (PayloadKind.MAX, PayloadKind.AVG)
             and len(op.inputs) == 1

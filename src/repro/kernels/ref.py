@@ -24,11 +24,14 @@ def conv2d(
     w: jax.Array,          # (KH, KW, C_in, C_out)
     *,
     stride: int = 1,
-    padding: str = "SAME",
+    padding: str | tuple = "SAME",
     fuse_relu: bool = False,
     epilogue: str | None = None,
 ) -> jax.Array:
     """NHWC conv; int8 inputs accumulate in int32 (paper's PTQ regime).
+    ``padding`` is ``"SAME"`` / ``"VALID"`` or an explicit
+    ``((top, bottom), (left, right))`` pair sequence (passed straight to
+    ``lax.conv_general_dilated`` — the asymmetric-pads import path).
     ``epilogue`` mirrors the kernel's fused tails (relu / squared_relu)."""
     if fuse_relu and epilogue not in (None, "relu"):
         raise ValueError(f"fuse_relu=True conflicts with epilogue={epilogue!r}")

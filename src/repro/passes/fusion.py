@@ -52,12 +52,35 @@ def _epilogue_operand(dfg: DFG, op: GenericOp) -> tuple[bool, str | None]:
     return False, None
 
 
+def _identity_or_broadcast_const(dfg: DFG, op: GenericOp) -> bool:
+    """F1's map condition: the output map and every *streamed* operand
+    map must be the identity; a constant operand may instead broadcast
+    along the last axis (a single ``d_{n-1}`` result — the per-channel
+    bias of ``make_broadcast_binary_op``).  The flat output index is
+    channel-fastest, so the epilogue reads such an operand at
+    ``o % len`` — still one element per output point."""
+    if not op.output_map.is_identity():
+        return False
+    for i, name in enumerate(op.inputs):
+        m = op.input_maps[i]
+        if m.is_identity():
+            continue
+        if not dfg.values[name].is_constant:
+            return False
+        if len(m.results) != 1:
+            return False
+        e = m.results[0]
+        if not (e.is_single_dim() and e.terms[0] == (op.n_dims - 1, 1)):
+            return False
+    return True
+
+
 def can_fuse(dfg: DFG, producer: GenericOp, consumer: GenericOp) -> bool:
     """All of F1-F5, for ``producer → consumer``."""
     info = classify_kernel(consumer)
     if info.kernel_class != KernelClass.PURE_PARALLEL:          # F1
         return False
-    if not all(m.is_identity() for m in consumer.indexing_maps):  # F1
+    if not _identity_or_broadcast_const(dfg, consumer):          # F1
         return False
     out = producer.output
     if consumer.inputs.count(out) != 1:                          # F2

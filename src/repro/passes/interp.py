@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from repro.core.analysis import (
     KernelClass,
     classify_kernel,
+    conv_spatial_pads,
     einsum_spec,
     reorder_spec,
     window_geometry,
@@ -59,8 +60,10 @@ def _conv2d(op: GenericOp, dfg: DFG, env: Mapping[str, jax.Array]):
     const = [i for i in op.inputs if dfg.values[i].is_constant]
     if len(stream) != 1 or len(const) != 1:
         raise NotImplementedError(f"{op.name}: conv needs 1 stream + 1 const input")
-    return ref.conv2d(env[stream[0]], env[const[0]], stride=info.stride,
-                      padding="SAME")
+    x = env[stream[0]]
+    pads = conv_spatial_pads(op, tuple(x.shape))
+    return ref.conv2d(x, env[const[0]], stride=info.stride,
+                      padding=(pads[1], pads[2]))
 
 
 def _pool2d(op: GenericOp, env: Mapping[str, jax.Array]):

@@ -105,6 +105,11 @@ def attr_float(name: str, f: float) -> bytes:
             + _int_field(20, _AT_FLOAT))
 
 
+def attr_string(name: str, s: str) -> bytes:
+    return (_str_field(1, name) + _bytes_field(4, s.encode())
+            + _int_field(20, _AT_STRING))
+
+
 def node(op_type: str, inputs, outputs, name: str = "",
          attrs=()) -> bytes:
     out = b"".join(_str_field(1, i) for i in inputs)
@@ -229,10 +234,142 @@ def lenet5_numpy(x: np.ndarray, w: dict[str, np.ndarray]) -> np.ndarray:
     return h @ w["fc3_w"].T.astype(np.int64) + w["fc3_b"]
 
 
+# ---------------------------------------------------------------------------
+# The strided ResNet-style fixture (ISSUE 8): stride-2 downsample convs
+# under three padding spellings (auto_pad SAME_UPPER, explicit
+# SAME-frame pads, auto_pad VALID with an even kernel), inference-mode
+# BatchNormalization after the first two convs, and a
+# GlobalAveragePool head.  BN statistics are float32 but integral with
+# var=1 and epsilon=0, so the importer's conv fold is integer-exact.
+# ---------------------------------------------------------------------------
+
+
+def same4(n: int, k: int, s: int) -> tuple[int, int]:
+    """End-heavy (begin, end) SAME_UPPER split for one spatial axis."""
+    out = -(-n // s)
+    total = max(0, s * (out - 1) + k - n)
+    return total // 2, total - total // 2
+
+
+def resnet_tiny_weights(seed: int = 0) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+
+    def w8(*shape):
+        return rng.integers(-4, 5, shape).astype(np.int8)
+
+    def b32(n):
+        return rng.integers(-8, 9, (n,)).astype(np.int32)
+
+    def bn(prefix, c):
+        return {
+            f"{prefix}_scale": rng.integers(1, 3, (c,)).astype(np.float32),
+            f"{prefix}_B": rng.integers(-8, 9, (c,)).astype(np.float32),
+            f"{prefix}_mean": rng.integers(-8, 9, (c,)).astype(np.float32),
+            f"{prefix}_var": np.ones(c, np.float32),
+        }
+
+    out = {
+        "c1_w": w8(8, 3, 3, 3), "c1_b": b32(8),
+        "c2_w": w8(16, 8, 3, 3),
+        "c3_w": w8(16, 16, 2, 2), "c3_b": b32(16),
+        "fc_w": w8(10, 16), "fc_b": b32(10),
+    }
+    out.update(bn("bn1", 8))
+    out.update(bn("bn2", 16))
+    return out
+
+
+def resnet_tiny_model_bytes(seed: int = 0) -> bytes:
+    """The strided golden fixture ``tests/golden/resnet_tiny.onnx`` is
+    exactly this with seed 0.  Topology (NCHW):
+
+        input (1,3,16,16)
+          Conv k3 s2 auto_pad=SAME_UPPER (+bias) → BN → Relu   (1,8,8,8)
+          Conv k3 s2 explicit pads [0,0,1,1]     → BN → Relu   (1,16,4,4)
+          Conv k2 s2 auto_pad=VALID (+bias)           → Relu   (1,16,2,2)
+          GlobalAveragePool                                    (1,16,1,1)
+          Flatten → Gemm(transB) (+bias)                       (1,10)
+    """
+    w = resnet_tiny_weights(seed)
+    bn_attrs = (attr_float("epsilon", 0.0),)
+    bn_ins = lambda p: [f"{p}_scale", f"{p}_B", f"{p}_mean",  # noqa: E731
+                        f"{p}_var"]
+    nodes = [
+        node("Conv", ["input", "c1_w", "c1_b"], ["c1"], "conv1",
+             (attr_ints("kernel_shape", [3, 3]),
+              attr_ints("strides", [2, 2]),
+              attr_string("auto_pad", "SAME_UPPER"))),
+        node("BatchNormalization", ["c1"] + bn_ins("bn1"), ["n1"], "bn1",
+             bn_attrs),
+        node("Relu", ["n1"], ["r1"], "relu1"),
+        node("Conv", ["r1", "c2_w"], ["c2"], "conv2",
+             (attr_ints("kernel_shape", [3, 3]),
+              attr_ints("strides", [2, 2]),
+              attr_ints("pads", [0, 0, 1, 1]))),
+        node("BatchNormalization", ["c2"] + bn_ins("bn2"), ["n2"], "bn2",
+             bn_attrs),
+        node("Relu", ["n2"], ["r2"], "relu2"),
+        node("Conv", ["r2", "c3_w", "c3_b"], ["c3"], "conv3",
+             (attr_ints("kernel_shape", [2, 2]),
+              attr_ints("strides", [2, 2]),
+              attr_string("auto_pad", "VALID"))),
+        node("Relu", ["c3"], ["r3"], "relu3"),
+        node("GlobalAveragePool", ["r3"], ["gap"], "gap"),
+        node("Flatten", ["gap"], ["flat"], "flatten", (attr_int("axis", 1),)),
+        node("Gemm", ["flat", "fc_w", "fc_b"], ["logits"], "fc",
+             (attr_int("transB", 1), attr_float("alpha", 1.0),
+              attr_float("beta", 1.0))),
+    ]
+    g = graph(
+        "resnet_tiny",
+        nodes,
+        [tensor(k, v) for k, v in w.items()],
+        [value_info("input", (1, 3, 16, 16), INT8)],
+        [value_info("logits", (1, 10), INT32)],
+    )
+    return model(g)
+
+
+def resnet_tiny_numpy(x: np.ndarray, w: dict[str, np.ndarray]) -> np.ndarray:
+    """Reference forward pass on NCHW int inputs, int64 accumulation.
+    BN is applied directly (not folded) — an independent check of the
+    importer's fold.  GlobalAveragePool floor-divides like the DIV exit
+    path."""
+    from numpy.lib.stride_tricks import sliding_window_view
+
+    def conv(x, wgt, b, stride, pads):  # pads ((t, b), (l, r))
+        k = wgt.shape[2]
+        (pt, pb), (pl, pr) = pads
+        xp = np.pad(x, ((0, 0), (0, 0), (pt, pb), (pl, pr)))
+        win = sliding_window_view(xp, (k, k), axis=(2, 3))
+        win = win[:, :, ::stride, ::stride]
+        out = np.einsum("nchwij,ocij->nohw", win.astype(np.int64),
+                        wgt.astype(np.int64))
+        return out + (0 if b is None else b[None, :, None, None])
+
+    def bn(x, p):
+        s = (w[f"{p}_scale"] / np.sqrt(w[f"{p}_var"])).astype(np.int64)
+        return ((x - w[f"{p}_mean"].astype(np.int64)[None, :, None, None])
+                * s[None, :, None, None]
+                + w[f"{p}_B"].astype(np.int64)[None, :, None, None])
+
+    relu = lambda v: np.maximum(v, 0)  # noqa: E731
+    h = conv(x, w["c1_w"], w["c1_b"], 2, (same4(16, 3, 2), same4(16, 3, 2)))
+    h = relu(bn(h, "bn1"))
+    h = conv(h, w["c2_w"], None, 2, (same4(8, 3, 2), same4(8, 3, 2)))
+    h = relu(bn(h, "bn2"))
+    h = relu(conv(h, w["c3_w"], w["c3_b"], 2, ((0, 0), (0, 0))))
+    h = h.sum(axis=(2, 3), keepdims=True) // (h.shape[2] * h.shape[3])
+    h = h.reshape(1, -1)
+    return h @ w["fc_w"].T.astype(np.int64) + w["fc_b"]
+
+
 if __name__ == "__main__":  # pragma: no cover - fixture regeneration
     import os
 
-    path = os.path.join(os.path.dirname(__file__), "golden", "lenet5.onnx")
-    with open(path, "wb") as f:
-        f.write(lenet5_model_bytes())
-    print(f"wrote {path} ({os.path.getsize(path)} bytes)")
+    for fname, data in (("lenet5.onnx", lenet5_model_bytes()),
+                        ("resnet_tiny.onnx", resnet_tiny_model_bytes())):
+        path = os.path.join(os.path.dirname(__file__), "golden", fname)
+        with open(path, "wb") as f:
+            f.write(data)
+        print(f"wrote {path} ({os.path.getsize(path)} bytes)")

@@ -114,6 +114,61 @@ class TestVmapBitExact:
             art.run(_batched_inputs(art.source, 2), batch_mode="turbo")
 
 
+class TestStridedConvProperty:
+    """ISSUE 8 satellite: the generalized stride-s / VALID streaming
+    path against ``jax.lax.conv_general_dilated``, random geometry,
+    both targets, and vmap == loop on every config."""
+
+    @staticmethod
+    def _same_pads(n, k, s):
+        out = -(-n // s)
+        total = max(0, s * (out - 1) + k - n)
+        return total // 2, total - total // 2
+
+    def test_random_strided_valid_convs(self):
+        import jax
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(1234)
+        for trial in range(8):
+            k = int(rng.integers(1, 6))
+            s = int(rng.integers(1, 4))
+            h = int(rng.integers(max(k, 6), 15))
+            c_in = int(rng.integers(1, 4))
+            c_out = int(rng.integers(2, 6))
+            padding = "SAME" if trial % 2 == 0 else "VALID"
+            target = (KV260, ZU3EG)[trial % 2]
+
+            g = api.Graph(f"pconv{trial}")
+            x_ref = g.input((1, h, h, c_in), name="x")
+            g.output(g.conv2d(x_ref, c_out, kernel=k, stride=s,
+                              padding=padding, weight="w"))
+            art = api.compile_graph(g.build(),
+                                    api.CompileOptions(target=target))
+            assert art.feasible
+
+            w = rng.integers(-4, 5, (k, k, c_in, c_out)).astype(np.int8)
+            x = rng.integers(-4, 5, (1, h, h, c_in)).astype(np.int32)
+            got = np.asarray(
+                art.run({"x": x}, params={"w": w}, interpret=True)
+            )
+            pads = ((0, 0), (0, 0)) if padding == "VALID" else (
+                self._same_pads(h, k, s), self._same_pads(h, k, s))
+            want = jax.lax.conv_general_dilated(
+                jnp.asarray(x, jnp.int32),
+                jnp.asarray(w, jnp.int32),
+                window_strides=(s, s),
+                padding=pads,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            np.testing.assert_array_equal(
+                got, np.asarray(want),
+                err_msg=f"trial {trial}: k={k} s={s} h={h} "
+                        f"c={c_in}->{c_out} {padding} @ {target.name}",
+            )
+            _assert_vmap_equals_loop(art, batch=3, seed=trial)
+
+
 class TestIntegerAccumulators:
     """The fast batched integer-conv lowering (``conv2d_same_mm``) must
     return the same int32 accumulators as the streaming Pallas kernel:
