@@ -78,6 +78,20 @@ print(f"trace OK ({len(names)} events)")
 PY
 cp /tmp/trace.json trace_smoke.json
 
+# lint gate (ISSUE 9): the static analyzer must find zero ERROR-severity
+# diagnostics across the whole named suite (paper suite + showcases +
+# zoo) on both device presets.  The full JSON diagnostics document is
+# kept as lint_diagnostics.json for the workflow artifact upload.
+python -m repro lint --all --target kv260 --target zu3eg \
+  --json lint_diagnostics.json --quiet
+python - lint_diagnostics.json <<'PY'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["version"] == 1 and doc["counts"]["error"] == 0, doc["counts"]
+print(f"lint OK ({sum(doc['counts'].values())} diagnostics, 0 errors "
+      f"across {len(doc['meta']['graphs'])} graph/target pairs)")
+PY
+
 if [ "$FULL" = 1 ]; then
   python -m benchmarks.run          # includes kernel interpret-mode checks
 else

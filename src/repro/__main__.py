@@ -18,9 +18,19 @@ Subcommands:
     The bundled model zoo (LeNet-5, tiny-VGG, residual edge model);
     ``--export`` writes each model's JSON card (``examples/lenet5.json``
     is one of these).
+* ``lint <graph | model.onnx | card.json> ... [--all] [--target T ...]
+  [--json PATH] [--fail-on error|warning|info] [--quiet]``
+    Static analysis (ISSUE 9): compile each graph (suite name or model
+    file) for each target and print the ``repro.analyze`` diagnostics
+    — stream-skew/deadlock, integer overflow, schedule hazards, model
+    hygiene.  ``--all`` lints the whole named suite (zoo included);
+    ``--json`` writes the versioned diagnostics document (the CI
+    artifact); ``--fail-on`` sets the severity that makes the exit
+    status 1 (default ``error``).
 
-Exit status: 0 on success, 1 on an infeasible design or failed run,
-2 on bad arguments (argparse convention).
+Exit status: 0 on success, 1 on an infeasible design, failed run, or
+diagnostics at/above ``--fail-on``, 2 on bad arguments (argparse
+convention).
 """
 from __future__ import annotations
 
@@ -130,6 +140,60 @@ def _cmd_compile(args: argparse.Namespace) -> int:
     return 0 if art.feasible else 1
 
 
+def _cmd_lint(args: argparse.Namespace) -> int:
+    from repro import analyze, api
+
+    specs = list(args.graphs)
+    if args.all:
+        specs.extend(sorted(api.suite()))
+    if not specs:
+        print("error: pass at least one graph/model, or --all",
+              file=sys.stderr)
+        return 2
+    targets = args.target or ["kv260"]
+
+    all_diags: list = []
+    meta: dict = {"targets": list(targets), "graphs": []}
+    for spec in specs:
+        try:
+            dfg, _params = _load_graph(spec, quiet=True)
+        except OSError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        for target in targets:
+            options = api.CompileOptions(target=target, lint="warn")
+            design = api.compile_design(dfg, options=options)
+            diags = list(design.diagnostics)
+            meta["graphs"].append({
+                "graph": dfg.name,
+                "target": target,
+                "counts": analyze.severity_counts(diags),
+            })
+            all_diags.extend(diags)
+            if not args.quiet:
+                worst = analyze.max_severity(diags)
+                print(f"{dfg.name} @ {target}: {len(diags)} diagnostic(s)"
+                      f"{f', worst {worst.value}' if worst else ''}")
+                for d in diags:
+                    print(f"  {target}: {d.format()}")
+
+    if args.json:
+        import json
+
+        doc = analyze.diagnostics_to_json(all_diags, meta=meta)
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"diagnostics written {args.json}")
+
+    failing = analyze.at_or_above(all_diags, args.fail_on)
+    if failing:
+        print(f"lint: {len(failing)} diagnostic(s) at/above "
+              f"{args.fail_on!r}", file=sys.stderr)
+        return 1
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro",
@@ -168,6 +232,22 @@ def main(argv=None) -> int:
                         "(chrome://tracing / Perfetto)")
     c.add_argument("--quiet", action="store_true",
                    help="suppress the report table")
+    lt = sub.add_parser("lint",
+                        help="static diagnostics for graphs / model files")
+    lt.add_argument("graphs", nargs="*",
+                    help="suite graph names or .onnx / .json model files")
+    lt.add_argument("--all", action="store_true",
+                    help="lint every named suite graph (zoo included)")
+    lt.add_argument("--target", action="append", default=None,
+                    help="device preset; repeatable (default: kv260)")
+    lt.add_argument("--json", metavar="PATH",
+                    help="write the JSON diagnostics document here")
+    lt.add_argument("--fail-on", default="error",
+                    choices=("error", "warning", "info"),
+                    help="exit 1 when diagnostics at/above this severity "
+                         "fire (default: error)")
+    lt.add_argument("--quiet", action="store_true",
+                    help="suppress per-diagnostic lines")
     args = ap.parse_args(argv)
     if args.cmd == "list":
         return _cmd_list()
@@ -176,6 +256,8 @@ def main(argv=None) -> int:
     from repro.passes import PartitionError
 
     try:
+        if args.cmd == "lint":
+            return _cmd_lint(args)
         return _cmd_compile(args)
     except PartitionError as e:
         # a valid command line whose design cannot be scheduled: exit 1

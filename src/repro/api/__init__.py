@@ -38,6 +38,13 @@ from repro.core.compile_driver import (
     compile_design,
 )
 
+from repro.analyze import (
+    Diagnostic,
+    LintError,
+    Severity,
+    analyze_design,
+    diagnostics_to_json,
+)
 from repro.instrument import Tracer, use_tracer, validate_chrome_trace
 
 from .artifact import (
@@ -91,11 +98,16 @@ __all__ = [
     "Target",
     "compile_design",
     "CompiledArtifact",
+    "Diagnostic",
     "GroupReport",
+    "LintError",
     "Report",
+    "Severity",
     "Tracer",
     "TransitionReport",
+    "analyze_design",
     "compile_graph",
+    "diagnostics_to_json",
     "use_tracer",
     "validate_chrome_trace",
     "Activation",

@@ -168,6 +168,21 @@ class Report:
                 f"{run.get('wall_ms', 0.0):.1f} ms wall"
                 + (f", groups: {per_group}" if per_group else "")
             )
+        diag = tel.get("diagnostics")
+        if diag:
+            c = diag.get("counts", {})
+            lines.append(
+                f"  lint: {c.get('error', 0)} error(s), "
+                f"{c.get('warning', 0)} warning(s), "
+                f"{c.get('info', 0)} info"
+            )
+            for item in diag.get("items", []):
+                if item.get("severity") in ("error", "warning"):
+                    lines.append(
+                        f"    {item['severity']}[{item['rule']}] "
+                        f"{item.get('node') or item.get('group') or '-'}: "
+                        f"{item['message']}"
+                    )
         return lines
 
 
@@ -235,6 +250,14 @@ class CompiledArtifact:
     @property
     def feasible(self) -> bool:
         return self.design.feasible
+
+    @property
+    def diagnostics(self) -> list:
+        """Static-analysis findings (``repro.analyze.Diagnostic``)
+        collected at compile time under ``CompileOptions.lint``.
+        ``getattr`` because pre-ISSUE 9 pickled designs lack the
+        field."""
+        return list(getattr(self.design, "diagnostics", None) or [])
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (
@@ -558,6 +581,14 @@ class CompiledArtifact:
             tel["exec_cache"] = dict(ops.exec_cache_stats)
         if self.last_run_stats is not None:
             tel["last_run"] = self.last_run_stats
+        diags = self.diagnostics
+        if diags:
+            from repro.analyze import severity_counts
+
+            tel["diagnostics"] = {
+                "counts": severity_counts(diags),
+                "items": [x.to_json() for x in diags],
+            }
         return tel or None
 
     # -- persistence (the benchmark cache) -----------------------------------

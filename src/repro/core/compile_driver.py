@@ -88,6 +88,7 @@ TARGETS: dict[str, Target] = {t.name: t for t in (KV260, ZU3EG)}
 
 _STRATEGIES = ("balanced", "greedy")
 _WEIGHT_STREAMING = ("auto", "off")
+_LINT = ("warn", "error", "off")
 
 
 @dataclass(frozen=True)
@@ -124,6 +125,15 @@ class CompileOptions:
         spans and runtime counters are collected; a string path does
         the same and is where the CLI writes the Chrome trace JSON.
         Tracing never changes schedules, emitted HLS, or BENCH metrics.
+    ``lint``
+        Static analysis (ISSUE 9): ``"warn"`` (default) runs the
+        ``repro.analyze`` diagnostics engine over the compiled design
+        and stores the findings on ``CompiledDesign.diagnostics``
+        (surfaced through ``Report`` telemetry and ``python -m repro
+        lint``); ``"error"`` additionally fails the compile with
+        :class:`repro.analyze.LintError` when any ERROR-severity
+        diagnostic fires; ``"off"`` skips the analyzer entirely.
+        Like ``trace``, linting never changes the schedule.
     """
 
     target: Target | str = "kv260"
@@ -133,6 +143,7 @@ class CompileOptions:
     max_unroll: Optional[int] = None
     verify: bool = True
     trace: bool | str = False
+    lint: str = "warn"
 
     def __post_init__(self) -> None:
         t = self.target
@@ -170,6 +181,10 @@ class CompileOptions:
                 "trace='' is ambiguous — use trace=False to disable or "
                 "trace=True to collect without writing"
             )
+        if self.lint not in _LINT:
+            raise ValueError(
+                f"lint must be one of {_LINT}, got {self.lint!r}"
+            )
         if self.passes is not None:
             names = tuple(self.passes)
             object.__setattr__(self, "passes", names)
@@ -183,10 +198,12 @@ class CompileOptions:
         """A stable, hashable digest of everything that determines the
         *compiled design*: the resolved target budgets, partition
         strategy, pass selection, weight-streaming policy, unroll cap,
-        and verify flag.  ``trace`` is deliberately excluded —
-        instrumentation never changes schedules (pinned by
-        ``tests/test_instrument.py``), so traced and untraced compiles
-        share cache entries.
+        and verify flag.  ``trace`` and ``lint`` are deliberately
+        excluded — neither instrumentation nor the diagnostics engine
+        changes schedules (pinned by ``tests/test_instrument.py`` /
+        ``tests/test_analyze.py``), so traced/linted and plain compiles
+        share cache entries.  (A ``lint="error"`` rejection produces no
+        design, so nothing stale can be cached.)
 
         This is *the* key for compiled-artifact caching: the serving
         artifact LRU (``repro.serve.ArtifactCache``) and the
@@ -326,6 +343,11 @@ class CompiledDesign:
     #: was set; CompiledArtifact re-installs it for run()/emit_hls() so
     #: runtime counters land in the same trace.  Never pickled.
     tracer: Optional[object] = field(default=None, repr=False, compare=False)
+    #: static-analysis findings (``repro.analyze.Diagnostic``) collected
+    #: when ``CompileOptions.lint`` is not "off"; surfaced through
+    #: Report telemetry and ``python -m repro lint``
+    diagnostics: list = field(default_factory=list, repr=False,
+                              compare=False)
 
     def __getstate__(self):
         # a save()d design must not drag its trace along: traces are an
@@ -495,6 +517,14 @@ def compile_design(
             pass_result = options.run_pipeline(dfg)
             lowered = pass_result.dfg if pass_result is not None else dfg
             design = partition_layer_groups(lowered, options=options)
+            if options.lint != "off":
+                from repro.analyze import LintError, Severity, analyze_design
+
+                design.diagnostics = analyze_design(design)
+                if options.lint == "error" and any(
+                    d.severity is Severity.ERROR for d in design.diagnostics
+                ):
+                    raise LintError(design.diagnostics, graph=lowered.name)
     design.target = options.target
     design.original = dfg
     design.pass_result = pass_result

@@ -418,15 +418,15 @@ def _form_regions(
     return regions
 
 
-def _size_diamond_fifos(plan: StreamingPlan) -> None:
-    """FIFO sizing for diamond structures (Sec. IV-C, final paragraph).
-
-    When two paths from a fork re-join (residual blocks), the short path's
-    FIFO must absorb the long path's latency-to-first-output, or the
-    pipeline deadlocks.  We size the skip FIFO to the sum of
-    first-output-cycle estimates along the long path (conservative, as the
-    paper notes; FIFOAdvisor-style refinement is future work there too).
-    """
+def fifo_slack(plan: StreamingPlan) -> dict[str, int]:
+    """Required skew absorption per internal stream (positive entries
+    only): how many cycles earlier this edge's data is ready than the
+    consumer's slowest *other* input — the depth a reconvergent skip
+    FIFO must provide or the pipeline deadlocks (Sec. IV-C, final
+    paragraph).  Derived from the line-buffer geometry via
+    :func:`first_output_cycles`.  The one definition shared by the
+    sizing pass (:func:`_size_diamond_fifos`) and the stream-skew
+    analyzer (``repro.analyze.stream_skew``)."""
     dfg = plan.dfg
     order = [op.name for op in dfg.topo_order()]
     # longest path (in first-output cycles) from any graph input to node n
@@ -441,6 +441,7 @@ def _size_diamond_fifos(plan: StreamingPlan) -> None:
         base = max((dist[p] for p in preds), default=0)
         dist[name] = base + _first_output_cycles(node)
 
+    slack: dict[str, int] = {}
     for s in plan.streams.values():
         if s.producer is None or s.consumer is None:
             continue
@@ -452,13 +453,36 @@ def _size_diamond_fifos(plan: StreamingPlan) -> None:
             o = plan.streams[other]
             if o.name != s.name and o.producer is not None:
                 other_ready = max(other_ready, dist[o.producer])
-        slack = other_ready - dist[s.producer]
-        if slack > 0:
-            s.depth = max(s.depth, slack)
+        need = other_ready - dist[s.producer]
+        if need > 0:
+            slack[s.name] = need
+    return slack
+
+
+def _size_diamond_fifos(plan: StreamingPlan) -> None:
+    """FIFO sizing for diamond structures (Sec. IV-C, final paragraph).
+
+    When two paths from a fork re-join (residual blocks), the short path's
+    FIFO must absorb the long path's latency-to-first-output, or the
+    pipeline deadlocks.  We size the skip FIFO to the sum of
+    first-output-cycle estimates along the long path (conservative, as the
+    paper notes; FIFOAdvisor-style refinement is future work there too).
+    """
+    for name, need in fifo_slack(plan).items():
+        s = plan.streams[name]
+        s.depth = max(s.depth, need)
+
+
+def first_output_cycles(plan: NodePlan) -> int:
+    """Cycles until the node's first output element appears (unroll=1):
+    a sliding-window node must fill K−1 line buffers plus one window, a
+    regular reduction its reduction trip, a buffering reorder the whole
+    tensor.  Public because the stream-skew analyzer reasons about the
+    same geometry."""
+    return _first_output_cycles(plan)
 
 
 def _first_output_cycles(plan: NodePlan) -> int:
-    """Cycles until the node's first output element appears (unroll=1)."""
     op = plan.op
     if plan.kernel_class == KernelClass.SLIDING_WINDOW:
         geo = window_geometry(op, plan.info)

@@ -373,15 +373,17 @@ def import_card(card) -> ImportedModel:
         looks_inline = isinstance(card, str) and card.lstrip().startswith("{")
         if looks_inline and not os.path.exists(card):
             text = card  # a JSON document passed inline
+            source = "inline card"
         else:
             # a path — let open() raise the natural FileNotFoundError
             # for typos instead of mis-reporting them as invalid JSON
             with open(card) as f:
                 text = f.read()
+            source = os.fspath(card)
         try:
             card = json.loads(text)
         except json.JSONDecodeError as e:
-            _fail(f"not valid JSON: {e}")
+            _fail(f"{source}: not valid JSON: {e}")
     card = _validated(card)
     dfg = _build_dfg(card)
     params = _decode_params(card, dfg)

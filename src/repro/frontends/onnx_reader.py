@@ -800,12 +800,21 @@ def load_onnx(source, *, name: str | None = None) -> ImportedModel:
         with open(source, "rb") as f:
             data = f.read()
         default_name = os.path.splitext(os.path.basename(source))[0]
-    og = (
-        _decode_with_onnx_pkg(data) if have_onnx_package()
-        else decode_wire(data)
-    )
+    try:
+        og = (
+            _decode_with_onnx_pkg(data) if have_onnx_package()
+            else decode_wire(data)
+        )
+    except OnnxImportError as e:
+        # decode runs before the graph name exists — name the error
+        # after the file (or the caller-supplied name) so a truncated /
+        # corrupt protobuf points at its source
+        raise OnnxImportError(f"{name or default_name}: {e}") from e
     model_name = name or re.sub(r"[^0-9A-Za-z_]", "_",
                                 og.name if og.name != "onnx_model"
                                 else default_name) or "onnx_model"
-    _fold_batchnorm(og)
+    try:
+        _fold_batchnorm(og)
+    except OnnxImportError as e:
+        raise OnnxImportError(f"{model_name}: {e}") from e
     return _to_builder(og, model_name)

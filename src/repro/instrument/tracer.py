@@ -28,7 +28,8 @@ import time
 from typing import Any, Callable, Iterator, Mapping, Optional
 
 #: categories the stack emits (informative, not enforced — see DESIGN.md §6)
-CATEGORIES = ("compile", "passes", "partition", "dse", "emit", "runtime")
+CATEGORIES = ("compile", "passes", "partition", "analyze", "dse", "emit",
+              "runtime")
 
 #: Chrome trace-event phases this layer produces (and the validator's
 #: accepted superset — "B"/"E" pairs appear in externally-merged traces)

@@ -104,7 +104,9 @@ class ServeEngine:
 
     def start(self) -> "ServeEngine":
         if self._worker is not None:
-            raise RuntimeError("engine already started")
+            raise RuntimeError(
+                f"{self.artifact.source.name}: engine already started"
+            )
         # capture the tracer on the *caller's* context: the ambient one
         # if enabled (same trace as everything else this thread did),
         # else the artifact's compile-time tracer.  The worker thread
@@ -151,7 +153,10 @@ class ServeEngine:
             if item is _STOP:
                 continue
             self.stats["rejected"] += 1
-            item.future.set_exception(RuntimeError("engine stopped"))
+            item.future.set_exception(RuntimeError(
+                f"{self.artifact.source.name}: engine stopped before the "
+                "request was served"
+            ))
 
     def __enter__(self) -> "ServeEngine":
         return self.start()
@@ -170,7 +175,10 @@ class ServeEngine:
         ``np.stack`` time.  Raises :class:`queue.Full` when admission
         is over ``queue_depth``."""
         if self._worker is None or self._stopping:
-            raise RuntimeError("engine not started — use `with engine:`")
+            raise RuntimeError(
+                f"{self.artifact.source.name}: engine not started — "
+                "use `with engine:`"
+            )
         src = self.artifact.source
         if not isinstance(inputs, Mapping):
             if len(src.graph_inputs) != 1:
@@ -203,7 +211,10 @@ class ServeEngine:
             self._queue.put_nowait(req)
         except queue.Full:
             self.stats["rejected"] += 1
-            raise
+            raise queue.Full(
+                f"{src.name}: admission queue full "
+                f"(queue_depth={self.config.queue_depth})"
+            ) from None
         return req.future
 
     def __call__(self, inputs):

@@ -1,0 +1,153 @@
+"""Per-rule verifier coverage (ISSUE 9 satellite): one minimal broken
+DFG per structural invariant V1–V10, each asserting the rule id lands
+in the message, plus the collect-all reporting mode."""
+import pytest
+
+from repro.api import Graph
+from repro.core import cnn_graphs
+from repro.core.ir import FusedEpilogue, PayloadKind, Value, make_elementwise_op
+from repro.passes import VerificationError, verify_dfg
+
+NHWC2NCHW = (0, 3, 1, 2)
+
+
+def _conv_relu():
+    return cnn_graphs.conv_relu(8)
+
+
+class TestRuleTriggers:
+    def test_v1_unregistered_value(self):
+        dfg = _conv_relu()
+        dfg.nodes[0].inputs = ("ghost", dfg.nodes[0].inputs[1])
+        with pytest.raises(VerificationError, match=r"\[V1\].*ghost"):
+            verify_dfg(dfg)
+
+    def test_v1_duplicate_node_name(self):
+        dfg = _conv_relu()
+        dfg.nodes[1].name = dfg.nodes[0].name
+        with pytest.raises(VerificationError, match=r"\[V1\].*duplicate"):
+            verify_dfg(dfg)
+
+    def test_v2_duplicate_producer(self):
+        dfg = _conv_relu()
+        dfg.nodes.append(make_elementwise_op(
+            "dup", ["conv0_out"], "relu0_out", (1, 8, 8, 16), PayloadKind.RELU
+        ))
+        with pytest.raises(VerificationError, match=r"\[V2\]"):
+            verify_dfg(dfg)
+
+    def test_v3_output_without_producer(self):
+        dfg = _conv_relu()
+        dfg.add_value(Value("phantom", (1, 8, 8, 16)))
+        dfg.graph_outputs = ["phantom"]
+        with pytest.raises(VerificationError, match=r"\[V3\].*phantom"):
+            verify_dfg(dfg)
+
+    def test_v3_input_with_producer(self):
+        dfg = _conv_relu()
+        dfg.graph_inputs = list(dfg.graph_inputs) + ["conv0_out"]
+        with pytest.raises(VerificationError, match=r"\[V3\].*conv0_out"):
+            verify_dfg(dfg)
+
+    def test_v4_cycle(self):
+        dfg = _conv_relu()
+        dfg.nodes[0].inputs = ("relu0_out", dfg.nodes[0].inputs[1])
+        dfg.graph_inputs = []
+        with pytest.raises(VerificationError, match=r"\[V4\]"):
+            verify_dfg(dfg)
+
+    def test_v5_arity_mismatch(self):
+        dfg = _conv_relu()
+        dfg.nodes[1].dim_sizes = dfg.nodes[1].dim_sizes + (2,)
+        with pytest.raises(VerificationError, match=r"\[V5\]"):
+            verify_dfg(dfg)
+
+    def test_v6_stream_epilogue_operand(self):
+        dfg = _conv_relu()
+        dfg.nodes[0].epilogue = (FusedEpilogue(PayloadKind.ADD, "relu0_out"),)
+        with pytest.raises(VerificationError, match=r"\[V6\]"):
+            verify_dfg(dfg)
+
+    def test_v7_unfed_input(self):
+        # an unfed input also stalls Kahn's algorithm, so fail-fast
+        # reports V4 first; collect-all surfaces the precise V7 line too
+        dfg = _conv_relu()
+        dfg.add_value(Value("orphan", (1, 8, 8, 16)))
+        dfg.nodes[1].inputs = ("orphan",)
+        with pytest.raises(VerificationError, match=r"\[V4\]"):
+            verify_dfg(dfg)
+        with pytest.raises(
+            VerificationError, match=r"(?s)\[V4\].*\[V7\].*orphan"
+        ):
+            verify_dfg(dfg, collect_all=True)
+
+    def test_v8_shape_mismatch(self):
+        dfg = _conv_relu()
+        dfg.values["relu0_out"].shape = (1, 9, 9, 16)
+        with pytest.raises(VerificationError, match=r"\[V8\]"):
+            verify_dfg(dfg)
+
+    def test_v9_window_does_not_tile(self):
+        dfg = _conv_relu()
+        # V8 must pass first: give the output the floor-div shape so the
+        # only problem left is the 3x3 window not tiling the 8x8 extent
+        dfg.nodes[0].epilogue = (
+            FusedEpilogue(PayloadKind.MAX, window=(1, 3, 3, 1)),
+        )
+        dfg.values["conv0_out"].shape = (1, 2, 2, 16)
+        dfg.values["relu0_out"].shape = (1, 2, 2, 16)
+        dfg.nodes[1].inputs = ("conv0_out",)
+        dfg.nodes[1].indexing_maps = dfg.nodes[1].indexing_maps[-2:]
+        dfg.nodes[1].dim_sizes = (1, 2, 2, 16)
+        with pytest.raises(VerificationError, match=r"\[V9\].*tile"):
+            verify_dfg(dfg)
+
+    def test_v10_epilogue_on_reorder(self):
+        g = Graph("t")
+        x = g.input((1, 4, 4, 2))
+        g.output(g.transpose(x, NHWC2NCHW))
+        dfg = g.build()
+        dfg.nodes[0].epilogue = (FusedEpilogue(PayloadKind.RELU),)
+        with pytest.raises(VerificationError, match=r"\[V10\]"):
+            verify_dfg(dfg)
+
+
+class TestCollectAll:
+    def _multi_broken(self):
+        """V2 (duplicate producer) + V6 (stream epilogue operand) + V8
+        (shape mismatch) in one graph."""
+        dfg = _conv_relu()
+        dfg.nodes.append(make_elementwise_op(
+            "dup", ["conv0_out"], "relu0_out", (1, 8, 8, 16), PayloadKind.RELU
+        ))
+        dfg.nodes[0].epilogue = (FusedEpilogue(PayloadKind.ADD, "relu0_out"),)
+        dfg.values["relu0_out"].shape = (1, 9, 9, 16)
+        return dfg
+
+    def test_fail_fast_reports_first_only(self):
+        with pytest.raises(VerificationError, match=r"\[V2\]") as ei:
+            verify_dfg(self._multi_broken())
+        assert len(ei.value.violations) == 1
+        assert ei.value.violations[0].startswith("[V2]")
+
+    def test_collect_all_gathers_every_rule(self):
+        with pytest.raises(VerificationError) as ei:
+            verify_dfg(self._multi_broken(), collect_all=True)
+        rules = {v.split("]")[0] + "]" for v in ei.value.violations}
+        assert {"[V2]", "[V6]", "[V8]"} <= rules
+        # the message carries one line per violation
+        msg = str(ei.value)
+        assert "[V2]" in msg and "[V6]" in msg and "[V8]" in msg
+        assert "structural violation(s)" in msg
+
+    def test_collect_all_clean_graph_is_silent(self):
+        verify_dfg(_conv_relu(), collect_all=True)
+
+    def test_collect_all_survives_cascading_damage(self):
+        # an unregistered value (V1) makes later value lookups crash;
+        # collect mode must still raise the V1 report, not a KeyError
+        dfg = _conv_relu()
+        dfg.nodes[0].inputs = ("ghost", dfg.nodes[0].inputs[1])
+        del dfg.values["conv0_out"]
+        with pytest.raises(VerificationError, match=r"\[V1\]"):
+            verify_dfg(dfg, collect_all=True)
