@@ -26,6 +26,36 @@ HBM_BW = 819e9
 _SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 
 
+# ---------------------------------------------------------------------------
+# Edge/FPGA roofline (ISSUE 10: the modeled-vs-measured profiler's bound)
+# ---------------------------------------------------------------------------
+
+
+def edge_ideal_cycles(macs: int, dma_bytes: int, *, d_total: int,
+                      elem_bits: int = 8) -> int:
+    """The roofline cycle bound for one scheduled group on the edge
+    target: the larger of the compute bound (all of the device's DSPs
+    multiplying every cycle, integer-packing-aware via
+    :func:`repro.core.resource_model.dsp_per_mult`) and the bandwidth
+    bound (boundary-DMA bytes at the derated
+    :data:`~repro.core.resource_model.DRAM_BYTES_PER_CYCLE`).  A group
+    whose *modeled* cycles sit at this bound is as good as the fabric
+    allows; modeled/ideal is the profiler's ``roofline_util`` column.
+    """
+    from repro.core.resource_model import (
+        DRAM_BYTES_PER_CYCLE,
+        dsp_per_mult,
+    )
+
+    if d_total <= 0:
+        raise ValueError(f"d_total must be > 0, got {d_total}")
+    peak_macs_per_cycle = d_total / dsp_per_mult(elem_bits)
+    compute = math.ceil(macs / peak_macs_per_cycle) if macs else 0
+    memory = (math.ceil(dma_bytes / DRAM_BYTES_PER_CYCLE)
+              if dma_bytes else 0)
+    return max(compute, memory)
+
+
 def load_records(out_dir: str = "runs/dryrun") -> list[dict]:
     recs = []
     for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):

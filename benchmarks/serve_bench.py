@@ -14,7 +14,12 @@ dispatch (``batch_mode="vmap"``) vs the per-sample loop
 
 Every row carries a provenance stamp (ISSUE 6); ``scripts/smoke_diff.py
 --mode serve`` diffs the rows fail-soft across runs (only a >10% p99 or
-throughput regression hard-fails, provenance stripped).
+throughput regression hard-fails, provenance stripped).  Each
+model×target cell additionally carries the engine's **metrics
+snapshot** (ISSUE 10: lifecycle-stage histograms, rejection causes,
+batch occupancy — the full :meth:`ServeEngine.metrics` document,
+diff-exempt like provenance); ``--metrics-out`` also writes the last
+cell's snapshot standalone for the CI artifact.
 
 Usage::
 
@@ -32,7 +37,7 @@ import numpy as np
 
 from repro.core.compile_driver import TARGETS, CompileOptions
 from repro.frontends import zoo
-from repro.instrument import provenance
+from repro.instrument import provenance, validate_metrics_snapshot
 from repro.kernels import ops
 from repro.serve import ArtifactCache, ServeConfig, ServeEngine, run_load
 
@@ -109,10 +114,12 @@ def bench_serve_json(path: str = "BENCH_serve.json", *,
                      models=DEFAULT_MODELS, targets=DEFAULT_TARGETS,
                      qps_levels=DEFAULT_QPS, requests: int = 120,
                      max_batch: int = 32, latency_budget_ms: float = 5.0,
-                     seed: int = 0, speedup: bool = True) -> dict:
+                     seed: int = 0, speedup: bool = True,
+                     metrics_out: str | None = None) -> dict:
     cache = ArtifactCache(capacity=2 * len(models))
     stamp = provenance()
     data: dict = {}
+    last_snapshot: dict | None = None
     print("model,target,offered_qps,achieved_qps,p50_ms,p99_ms,mean_batch")
     for model in models:
         if model not in zoo.ZOO:
@@ -136,11 +143,14 @@ def bench_serve_json(path: str = "BENCH_serve.json", *,
                     print(f"{model},{tname},{row['offered_qps']},"
                           f"{row['achieved_qps']},{row['p50_ms']},"
                           f"{row['p99_ms']},{row['mean_batch']}")
+                snapshot = validate_metrics_snapshot(eng.metrics())
+            last_snapshot = snapshot
             data[model][tname] = {
                 "loads": rows,
                 "max_batch": max_batch,
                 "latency_budget_ms": latency_budget_ms,
                 "warmed_buckets": warmed,
+                "metrics": snapshot,
                 "provenance": dict(stamp, compile_s=round(compile_s, 4)),
             }
     if speedup:
@@ -153,6 +163,11 @@ def bench_serve_json(path: str = "BENCH_serve.json", *,
     with open(path, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)
     print(f"# wrote {path}")
+    if metrics_out and last_snapshot is not None:
+        with open(metrics_out, "w") as f:
+            json.dump(last_snapshot, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {metrics_out}")
     return data
 
 
@@ -168,6 +183,9 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-speedup", action="store_true",
                     help="skip the lenet5 vmap-vs-loop gate section")
+    ap.add_argument("--metrics-out", metavar="PATH", default=None,
+                    help="also write the last cell's metrics snapshot "
+                         "standalone (the CI artifact)")
     ap.add_argument("--min-speedup", type=float, default=5.0,
                     help="hard-fail when the vmap-vs-loop speedup is "
                          "below this; 0 makes the speedup informational "
@@ -185,6 +203,7 @@ def main(argv=None) -> int:
         latency_budget_ms=args.latency_budget_ms,
         seed=args.seed,
         speedup=not args.no_speedup,
+        metrics_out=args.metrics_out,
     )
     sp = data.get("_speedup")
     if sp and not sp["bit_exact"]:

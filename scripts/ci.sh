@@ -103,13 +103,46 @@ fi
 # a missing archive just seeds the trajectory), then refresh the archive.
 python scripts/smoke_diff.py BENCH_smoke.json
 
+# profiler smoke (ISSUE 10): the modeled-vs-measured join must produce
+# a per-group table and a schema-valid JSON document; kept as
+# profile_smoke.json for the workflow artifact upload.  Wall-clock
+# ratios on shared runners are noise — the gate is structural (groups
+# present, modeled cycles joined, ratio computed), never a threshold.
+python -m repro profile lenet5 --reps 1 --json profile_smoke.json --quiet
+python - profile_smoke.json <<'PY'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["version"] == 1 and doc["profiles"], "empty profile document"
+for prof in doc["profiles"]:
+    assert prof["groups"], f"{prof['model']}: no group rows"
+    for g in prof["groups"]:
+        assert g["modeled_cycles"] > 0 and g["measured_ms"] > 0, g
+        assert "ratio" in g and "implied_clock_mhz" in g, g
+    assert prof["layers"], f"{prof['model']}: no layer rows"
+print(f"profile OK ({len(doc['profiles'])} target(s), "
+      f"{sum(len(p['groups']) for p in doc['profiles'])} group rows)")
+PY
+
 # serving smoke (ISSUE 7): a short fixed-seed load test on lenet5
 # produces BENCH_serve.json for the workflow artifact.  Bit-exactness
 # (vmap vs loop) is the hard gate; the wall-clock numbers — the 5x
 # speedup and the p99/QPS trajectory diff — are *informational* here
 # (--min-speedup 0, --warn-only) because timing on shared CI runners
 # is noisy-neighbor flaky.  Dev invocations without those flags keep
-# the full-threshold gates.
+# the full-threshold gates.  The engine's metrics snapshot (ISSUE 10)
+# rides along as serve_metrics.json and must validate + carry the
+# lifecycle series the load test exercised.
 python -m benchmarks.serve_bench --models lenet5 --targets kv260 \
-  --qps 100,400 --requests 120 --seed 0 --min-speedup 0
+  --qps 100,400 --requests 120 --seed 0 --min-speedup 0 \
+  --metrics-out serve_metrics.json
+python - serve_metrics.json <<'PY'
+import json, sys
+from repro.instrument import validate_metrics_snapshot
+snap = validate_metrics_snapshot(json.load(open(sys.argv[1])))
+assert snap["counters"]["serve_requests_total"]["values"], "no requests"
+stages = {row["labels"]["stage"]
+          for row in snap["histograms"]["serve_stage_ms"]["values"]}
+assert stages >= {"queue_wait", "batch_form", "execute", "respond"}, stages
+print(f"serve metrics OK (stages: {sorted(stages)})")
+PY
 python scripts/smoke_diff.py BENCH_serve.json --mode serve --warn-only

@@ -39,10 +39,11 @@ import sys
 HARD_METRIC = "total_cycles"
 SOFT_METRICS = ("total_cycles", "max_group_cycles", "max_bram", "groups",
                 "spill_bytes")
-#: per-row measurement stamps (ISSUE 6: git sha, host, wall times) —
-#: jitter by construction, stripped before any comparison so they can
-#: never trip the regression gate
-IGNORED_KEYS = ("provenance",)
+#: per-row measurement stamps (ISSUE 6: git sha, host, wall times) and
+#: live metrics snapshots (ISSUE 10: latency histograms, queue-depth
+#: series) — jitter by construction, stripped before any comparison so
+#: they can never trip the regression gate
+IGNORED_KEYS = ("provenance", "metrics")
 
 
 def _load(path: str) -> dict | None:

@@ -27,6 +27,15 @@ Subcommands:
     ``--json`` writes the versioned diagnostics document (the CI
     artifact); ``--fail-on`` sets the severity that makes the exit
     status 1 (default ``error``).
+* ``profile <graph | model.onnx | card.json> [--target T ...]
+  [--reps N] [--warmup N] [--clock-mhz F] [--threshold F]
+  [--json PATH] [--no-layers] [--quiet]``
+    Modeled-vs-measured profiling (ISSUE 10): compile the graph for
+    each target, execute it, and print the per-group table joining the
+    resource model's cycle predictions against measured wall times
+    (implied clock, model-error ratio, roofline utilization), flagging
+    groups whose ratio drifts past ``--threshold``× the median.
+    ``--json`` writes the machine-readable document.
 
 Exit status: 0 on success, 1 on an infeasible design, failed run, or
 diagnostics at/above ``--fail-on``, 2 on bad arguments (argparse
@@ -194,6 +203,45 @@ def _cmd_lint(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_profile(args: argparse.Namespace) -> int:
+    from repro import api
+    from repro.instrument import profile_artifact
+
+    try:
+        dfg, _params = _load_graph(args.graph, quiet=args.quiet)
+    except OSError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    targets = args.target or ["kv260"]
+    reports = []
+    for target in targets:
+        art = api.compile_graph(dfg, target=target)
+        rep = profile_artifact(
+            art, reps=args.reps, warmup=args.warmup,
+            clock_mhz=args.clock_mhz, threshold=args.threshold,
+        )
+        reports.append(rep)
+        if not args.quiet:
+            print(rep.format_table(layers=not args.no_layers))
+            print()
+    if args.json:
+        import json
+
+        from repro.instrument import provenance
+
+        doc = {
+            "version": 1,
+            "graph": dfg.name,
+            "provenance": provenance(),
+            "profiles": [r.to_json() for r in reports],
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"profile written {args.json}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro",
@@ -248,6 +296,29 @@ def main(argv=None) -> int:
                          "fire (default: error)")
     lt.add_argument("--quiet", action="store_true",
                     help="suppress per-diagnostic lines")
+    pf = sub.add_parser("profile",
+                        help="modeled-vs-measured per-group profiling")
+    pf.add_argument("graph",
+                    help="suite graph name (see `list`), or a path to a "
+                         ".onnx model / .json model card")
+    pf.add_argument("--target", action="append", default=None,
+                    help="device preset; repeatable (default: kv260)")
+    pf.add_argument("--reps", type=int, default=3,
+                    help="measured repetitions after warmup (default 3)")
+    pf.add_argument("--warmup", type=int, default=1,
+                    help="discarded warmup runs (default 1)")
+    pf.add_argument("--clock-mhz", type=float, default=300.0,
+                    help="nominal fabric clock for modeled_ms "
+                         "(default 300)")
+    pf.add_argument("--threshold", type=float, default=2.0,
+                    help="flag groups whose model-error ratio is this "
+                         "many x off the median (default 2.0)")
+    pf.add_argument("--json", metavar="PATH",
+                    help="write the JSON profile document here")
+    pf.add_argument("--no-layers", action="store_true",
+                    help="suppress the per-layer attribution table")
+    pf.add_argument("--quiet", action="store_true",
+                    help="suppress the tables (useful with --json)")
     args = ap.parse_args(argv)
     if args.cmd == "list":
         return _cmd_list()
@@ -258,6 +329,8 @@ def main(argv=None) -> int:
     try:
         if args.cmd == "lint":
             return _cmd_lint(args)
+        if args.cmd == "profile":
+            return _cmd_profile(args)
         return _cmd_compile(args)
     except PartitionError as e:
         # a valid command line whose design cannot be scheduled: exit 1

@@ -168,6 +168,20 @@ class Report:
                 f"{run.get('wall_ms', 0.0):.1f} ms wall"
                 + (f", groups: {per_group}" if per_group else "")
             )
+        metrics = tel.get("metrics")
+        if metrics:
+            n_counters = len(metrics.get("counters", {}))
+            n_gauges = len(metrics.get("gauges", {}))
+            hists = metrics.get("histograms", {})
+            obs = sum(
+                row.get("count", 0)
+                for h in hists.values() for row in h.get("values", [])
+            )
+            lines.append(
+                f"  metrics: {n_counters} counter(s), {n_gauges} "
+                f"gauge(s), {len(hists)} histogram(s) "
+                f"({obs} observation(s))"
+            )
         diag = tel.get("diagnostics")
         if diag:
             c = diag.get("counts", {})
@@ -581,6 +595,14 @@ class CompiledArtifact:
             tel["exec_cache"] = dict(ops.exec_cache_stats)
         if self.last_run_stats is not None:
             tel["last_run"] = self.last_run_stats
+        # live aggregated series (ISSUE 10): when a metrics registry is
+        # ambient, its snapshot rides in the report like every other
+        # measured (compare-excluded) section
+        from repro.instrument import metrics as _metrics
+
+        reg = _metrics.current()
+        if reg.enabled:
+            tel["metrics"] = reg.snapshot()
         diags = self.diagnostics
         if diags:
             from repro.analyze import severity_counts

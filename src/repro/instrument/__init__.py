@@ -1,19 +1,38 @@
-"""Compiler & runtime instrumentation (ISSUE 6) — zero-dependency.
+"""Compiler & runtime instrumentation (ISSUE 6/10) — zero-dependency.
 
-One layer, three pieces:
+One layer, five pieces:
 
 * :mod:`repro.instrument.tracer` — the span/instant/counter
   :class:`Tracer`, the ambient contextvar slot (:func:`use_tracer` /
   :func:`current`), and Chrome trace-event export + validation;
+* :mod:`repro.instrument.metrics` — live aggregated telemetry: the
+  labeled Counter/Gauge/Histogram :class:`MetricsRegistry` with JSON
+  snapshots and Prometheus-text exposition, its own ambient slot
+  (:func:`use_metrics` / :func:`metrics_current`), and
+  :data:`NULL_REGISTRY`;
+* :mod:`repro.instrument.profiler` — the modeled-vs-measured join:
+  run a compiled artifact and reconcile per-group wall times against
+  the resource model's cycle predictions;
 * :mod:`repro.instrument.snapshot` — structural DFG snapshots and
   diffs (``-print-ir-after-all``);
 * :mod:`repro.instrument.provenance` — git-sha/host/time stamps for
   BENCH rows and exported traces.
 
 The contract that makes this safe to thread everywhere: with no tracer
-installed, every entry point here is a true no-op and instrumented code
-produces byte-identical output (pinned by ``tests/test_instrument.py``).
+installed and :data:`NULL_REGISTRY` ambient, every entry point here is
+a true no-op and instrumented code produces byte-identical output
+(pinned by ``tests/test_instrument.py`` and ``tests/test_metrics.py``).
 """
+from .metrics import (
+    LATENCY_BUCKETS_MS,
+    NULL_REGISTRY,
+    MetricsRegistry,
+    NullRegistry,
+    use_metrics,
+    validate_metrics_snapshot,
+)
+from .metrics import current as metrics_current
+from .profiler import ProfileReport, profile_artifact
 from .provenance import git_sha, provenance
 from .snapshot import diff_is_empty, diff_snapshots, format_dfg, snapshot_dfg
 from .tracer import (
@@ -32,8 +51,13 @@ from .tracer import (
 
 __all__ = [
     "CATEGORIES",
+    "LATENCY_BUCKETS_MS",
+    "NULL_REGISTRY",
     "NULL_TRACER",
+    "MetricsRegistry",
+    "NullRegistry",
     "NullTracer",
+    "ProfileReport",
     "Tracer",
     "counter",
     "current",
@@ -42,10 +66,13 @@ __all__ = [
     "format_dfg",
     "git_sha",
     "instant",
+    "metrics_current",
+    "profile_artifact",
     "provenance",
     "snapshot_dfg",
     "span",
     "tracing_active",
+    "use_metrics",
     "use_tracer",
     "validate_chrome_trace",
 ]

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.instrument as instrument
+from repro.instrument import metrics as _metrics
 
 from repro.core.analysis import (
     KernelClass,
@@ -577,12 +578,18 @@ def run_compiled(design, env, *, interpret: bool | None = None,
     untouched.
     """
     tracer = instrument.current()
-    collect = stats_out is not None or tracer.enabled
+    reg = _metrics.current()
+    collect = stats_out is not None or tracer.enabled or reg.enabled
     env = dict(env)
     if not collect:
         for g in design.groups:
             env.update(lower_group(g, interpret=interpret, jit=jit)(env))
         return {v: env[v] for v in design.source.graph_outputs}
+    m_wall = reg.histogram("run_group_wall_ms",
+                           "per-group execution wall time (ms)",
+                           labels=("group",))
+    m_dma = reg.counter("run_dma_bytes_total",
+                        "modeled boundary-DMA bytes", labels=("direction",))
 
     before = dict(exec_cache_stats)
     transitions = design.boundary_traffic()
@@ -609,8 +616,13 @@ def run_compiled(design, env, *, interpret: bool | None = None,
                 row["dma_write_bytes"] = w
                 row["dma_read_bytes"] = r
                 tracer.counter("dma_bytes", {"write": w, "read": r})
+                if reg.enabled:
+                    m_dma.inc(w, direction="write")
+                    m_dma.inc(r, direction="read")
             sargs.update(row)
         row["wall_ms"] = round((time.perf_counter() - t0) * 1e3, 3)
+        if reg.enabled:
+            m_wall.observe(row["wall_ms"], group=g.name)
         rows.append(row)
     if stats_out is not None:
         stats_out.update({
@@ -647,7 +659,15 @@ def run_compiled_batched(design, env, batch: int, *,
     """
     interpret = _auto_interpret(interpret)
     tracer = instrument.current()
-    collect = stats_out is not None or tracer.enabled
+    reg = _metrics.current()
+    collect = stats_out is not None or tracer.enabled or reg.enabled
+    if reg.enabled:
+        m_wall = reg.histogram("run_group_wall_ms",
+                               "per-group execution wall time (ms)",
+                               labels=("group",))
+        m_dma = reg.counter("run_dma_bytes_total",
+                            "modeled boundary-DMA bytes",
+                            labels=("direction",))
     src = design.source
     stream = [k for k in env
               if k in src.values and not src.values[k].is_constant]
@@ -698,9 +718,13 @@ def run_compiled_batched(design, env, batch: int, *,
                                   "dma_read_bytes": r * n})
                     tracer.counter("dma_bytes",
                                    {"write": w * n, "read": r * n})
-            row["wall_ms"] = round(
-                row["wall_ms"] + (time.perf_counter() - t0) * 1e3, 3
-            )
+                    if reg.enabled:
+                        m_dma.inc(w * n, direction="write")
+                        m_dma.inc(r * n, direction="read")
+            step_ms = (time.perf_counter() - t0) * 1e3
+            if reg.enabled:
+                m_wall.observe(step_ms, group=g.name)
+            row["wall_ms"] = round(row["wall_ms"] + step_ms, 3)
         outs = {v: chunk_env[v] for v in src.graph_outputs}
         if bucket != n:  # drop padding rows, still on device
             outs = {k: v[:n] for k, v in outs.items()}

@@ -8,9 +8,15 @@ vmapped group executables of :meth:`CompiledArtifact.run
 artifact LRU keyed ``(model, CompileOptions.cache_key())``, and an
 open-loop load generator for the ``BENCH_serve.json`` trajectory.
 
-All QPS/latency/batch-size observability hangs off the PR 6 tracer
-(:mod:`repro.instrument`) — counters land in the same Chrome trace as
-the compile spans; there is no second telemetry path.
+Observability is two-layered (ISSUE 10): post-hoc traces still hang
+off the PR 6 tracer — counters land in the same Chrome trace as the
+compile spans — while *live* aggregates (queue depth, lifecycle-stage
+latency histograms, rejection causes, batch occupancy) go to the
+engine's :class:`~repro.instrument.MetricsRegistry`
+(:meth:`ServeEngine.metrics` / :meth:`ServeEngine.flight_records`).
+The registry is the serving layer's one aggregation path: the load
+generator and ``benchmarks/serve_bench.py`` consume counter deltas and
+snapshots from it rather than diffing ad-hoc stats dicts.
 """
 from .cache import ArtifactCache
 from .engine import ServeConfig, ServeEngine

@@ -13,15 +13,28 @@ Venieris' toolflow survey) on top of our bucketed jit cache: batch
 sizes land on :data:`repro.kernels.ops.BATCH_BUCKETS`, so steady-state
 traffic never recompiles.
 
-Observability hangs off the PR 6 tracer: ``serve_batch`` /
-``serve_latency_ms`` / ``serve_qps`` counter series plus a
+Observability is two-layered.  The PR 6 tracer still gets its post-hoc
+series (``serve_batch`` / ``serve_latency_ms`` / ``serve_qps`` plus a
 ``serve:batch`` span per dispatch, in the *same* trace as the compile
-spans.  Contextvars do not cross threads, so the worker re-installs the
+spans).  Live aggregates go to a
+:class:`repro.instrument.MetricsRegistry`: every request carries an id
+and moves through four lifecycle stages — **queue-wait** (submit →
+worker dequeue), **batch-form** (dequeue → batch sealed), **execute**
+(stack + device dispatch), **respond** (future fan-out) — each recorded
+as a ``serve_stage_ms{stage=...}`` histogram, alongside queue-depth and
+in-flight gauges, a batch-occupancy histogram, and rejection counters
+by cause.  A bounded flight recorder keeps the last N batch records for
+post-mortems (:meth:`ServeEngine.flight_records`).  Pass
+``registry=NULL_REGISTRY`` to switch all of it off; outputs are
+byte-identical either way (pinned by ``tests/test_metrics.py``).
+Contextvars do not cross threads, so the worker re-installs the
 engine's tracer explicitly (:func:`repro.instrument.use_tracer`).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import itertools
 import queue
 import threading
 import time
@@ -31,6 +44,7 @@ from typing import Mapping, Optional
 import numpy as np
 
 from repro import instrument
+from repro.instrument import metrics as metrics_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,11 +56,13 @@ class ServeConfig:
     up to the next one); ``latency_budget_ms`` is how long the first
     request of a forming batch may wait for company; ``queue_depth``
     bounds admission — a full queue rejects instead of hiding unbounded
-    latency."""
+    latency; ``flight_records`` bounds the post-mortem ring of recent
+    batch records (0 disables it)."""
 
     max_batch: int = 32
     latency_budget_ms: float = 5.0
     queue_depth: int = 1024
+    flight_records: int = 64
 
     def __post_init__(self) -> None:
         if self.max_batch < 1:
@@ -57,10 +73,14 @@ class ServeConfig:
         if self.queue_depth < 1:
             raise ValueError(
                 f"queue_depth must be >= 1, got {self.queue_depth}")
+        if self.flight_records < 0:
+            raise ValueError(
+                f"flight_records must be >= 0, got {self.flight_records}")
 
 
 @dataclasses.dataclass
 class _Request:
+    req_id: int
     inputs: dict
     future: Future
     t_submit: float
@@ -82,23 +102,67 @@ class ServeEngine:
     ``__call__`` is the blocking sugar.  ``params`` fixes the constant
     bindings (weights) for every request of this engine — serving mixes
     *inputs*, never weights.
+
+    ``registry`` is the engine's metrics home: by default each engine
+    owns a fresh :class:`~repro.instrument.MetricsRegistry` (so
+    :meth:`metrics` always has something to say); pass
+    :data:`~repro.instrument.NULL_REGISTRY` to disable instrumentation
+    entirely, or share one registry across engines to aggregate.
     """
 
     def __init__(self, artifact, config: Optional[ServeConfig] = None, *,
                  params: Optional[Mapping] = None,
-                 interpret: Optional[bool] = None, seed: int = 0) -> None:
+                 interpret: Optional[bool] = None, seed: int = 0,
+                 registry=None) -> None:
         self.artifact = artifact
         self.config = config or ServeConfig()
         self.params = params
         self.interpret = interpret
         self.seed = seed
+        self.registry = (metrics_mod.MetricsRegistry()
+                         if registry is None else registry)
         self._queue: "queue.Queue" = queue.Queue(self.config.queue_depth)
         self._worker: Optional[threading.Thread] = None
         self._stopping = False
         self._tracer = None
-        self.stats = {"requests": 0, "batches": 0, "rejected": 0,
-                      "max_batch_seen": 0}
+        # the worker thread mutates these while callers read them (the
+        # load generator diffs before/after): one lock guards the dict,
+        # the public `stats` property hands out snapshots
+        self._stats_lock = threading.Lock()
+        self._stats = {"requests": 0, "batches": 0, "rejected": 0,
+                       "max_batch_seen": 0}
+        self._req_ids = itertools.count()
+        self._flight: "collections.deque" = collections.deque(
+            maxlen=self.config.flight_records or None
+        )
         self._t_start: Optional[float] = None
+        self._declare_metrics()
+
+    def _declare_metrics(self) -> None:
+        """Declare the serve series once, up front — a snapshot taken
+        before any traffic still lists every family (empty families are
+        how dashboards learn the schema)."""
+        reg = self.registry
+        self._m_requests = reg.counter(
+            "serve_requests_total", "requests admitted")
+        self._m_batches = reg.counter(
+            "serve_batches_total", "batches dispatched")
+        self._m_rejected = reg.counter(
+            "serve_rejected_total", "requests rejected by cause",
+            labels=("cause",))
+        self._m_queue_depth = reg.gauge(
+            "serve_queue_depth", "requests waiting for a batch")
+        self._m_inflight = reg.gauge(
+            "serve_inflight_batches", "batches currently executing")
+        self._m_stage_ms = reg.histogram(
+            "serve_stage_ms", "per-request lifecycle stage latency (ms)",
+            labels=("stage",))
+        self._m_latency_ms = reg.histogram(
+            "serve_request_latency_ms",
+            "submit-to-response latency (ms)")
+        self._m_occupancy = reg.histogram(
+            "serve_batch_occupancy", "requests per dispatched batch",
+            buckets=metrics_mod.BATCH_BUCKETS_SIZES)
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -152,7 +216,10 @@ class ServeEngine:
                 break
             if item is _STOP:
                 continue
-            self.stats["rejected"] += 1
+            self._bump("rejected")
+            if self.registry.enabled:
+                self._m_rejected.inc(cause="shutdown")
+                self._m_queue_depth.dec()
             item.future.set_exception(RuntimeError(
                 f"{self.artifact.source.name}: engine stopped before the "
                 "request was served"
@@ -163,6 +230,36 @@ class ServeEngine:
 
     def __exit__(self, *exc) -> None:
         self.stop()
+
+    # -- stats & metrics -----------------------------------------------------
+
+    @property
+    def stats(self) -> dict:
+        """A point-in-time copy of the legacy counters dict
+        (``requests`` / ``batches`` / ``rejected`` /
+        ``max_batch_seen``).  A *copy*: the worker keeps mutating the
+        backing dict under its lock, so callers never see a torn read —
+        and writes to the returned dict change nothing."""
+        with self._stats_lock:
+            return dict(self._stats)
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        with self._stats_lock:
+            self._stats[key] += n
+
+    def metrics(self) -> dict:
+        """The engine registry's :meth:`snapshot` document (empty but
+        schema-valid when the engine runs with ``NULL_REGISTRY``)."""
+        return self.registry.snapshot()
+
+    def flight_records(self) -> list:
+        """The last N batch records, oldest first: per-batch dicts of
+        ``{"batch_id", "request_ids", "n", "outcome",
+        "queue_wait_ms", "batch_form_ms", "execute_ms", "respond_ms"}``
+        (stage times in milliseconds; queue-wait is the mean over the
+        batch's requests).  Bounded by
+        :attr:`ServeConfig.flight_records`."""
+        return list(self._flight)
 
     # -- request path --------------------------------------------------------
 
@@ -180,41 +277,53 @@ class ServeEngine:
                 "use `with engine:`"
             )
         src = self.artifact.source
-        if not isinstance(inputs, Mapping):
-            if len(src.graph_inputs) != 1:
+        try:
+            if not isinstance(inputs, Mapping):
+                if len(src.graph_inputs) != 1:
+                    raise ValueError(
+                        f"{src.name} has {len(src.graph_inputs)} inputs "
+                        f"({src.graph_inputs}); pass a dict, not a bare "
+                        "array"
+                    )
+                inputs = {src.graph_inputs[0]: inputs}
+            missing = set(src.graph_inputs) - set(inputs)
+            unknown = set(inputs) - set(src.graph_inputs)
+            if missing or unknown:
                 raise ValueError(
-                    f"{src.name} has {len(src.graph_inputs)} inputs "
-                    f"({src.graph_inputs}); pass a dict, not a bare array"
+                    f"{src.name}: request must bind exactly the graph "
+                    f"inputs {list(src.graph_inputs)}"
+                    + (f" — missing {sorted(missing)}" if missing else "")
+                    + (f" — unknown {sorted(unknown)}" if unknown else "")
                 )
-            inputs = {src.graph_inputs[0]: inputs}
-        missing = set(src.graph_inputs) - set(inputs)
-        unknown = set(inputs) - set(src.graph_inputs)
-        if missing or unknown:
-            raise ValueError(
-                f"{src.name}: request must bind exactly the graph inputs "
-                f"{list(src.graph_inputs)}"
-                + (f" — missing {sorted(missing)}" if missing else "")
-                + (f" — unknown {sorted(unknown)}" if unknown else "")
-            )
-        arrays = {}
-        for k in src.graph_inputs:
-            v = np.asarray(inputs[k])
-            want = tuple(src.values[k].shape)
-            if v.shape != want:
-                raise ValueError(
-                    f"{src.name}: input {k!r} has shape {v.shape}; "
-                    f"expected the per-sample shape {want} (no batch dim)"
-                )
-            arrays[k] = v
-        req = _Request(arrays, Future(), time.perf_counter())
+            arrays = {}
+            for k in src.graph_inputs:
+                v = np.asarray(inputs[k])
+                want = tuple(src.values[k].shape)
+                if v.shape != want:
+                    raise ValueError(
+                        f"{src.name}: input {k!r} has shape {v.shape}; "
+                        f"expected the per-sample shape {want} "
+                        "(no batch dim)"
+                    )
+                arrays[k] = v
+        except ValueError:
+            if self.registry.enabled:
+                self._m_rejected.inc(cause="invalid")
+            raise
+        req = _Request(next(self._req_ids), arrays, Future(),
+                       time.perf_counter())
         try:
             self._queue.put_nowait(req)
         except queue.Full:
-            self.stats["rejected"] += 1
+            self._bump("rejected")
+            if self.registry.enabled:
+                self._m_rejected.inc(cause="queue_full")
             raise queue.Full(
                 f"{src.name}: admission queue full "
                 f"(queue_depth={self.config.queue_depth})"
             ) from None
+        if self.registry.enabled:
+            self._m_queue_depth.inc()
         return req.future
 
     def __call__(self, inputs):
@@ -229,9 +338,9 @@ class ServeEngine:
                 item = self._queue.get()
                 if item is _STOP:
                     return
+                t_dequeue = time.perf_counter()
                 batch = [item]
-                deadline = (time.perf_counter()
-                            + self.config.latency_budget_ms / 1e3)
+                deadline = t_dequeue + self.config.latency_budget_ms / 1e3
                 while len(batch) < self.config.max_batch:
                     wait = deadline - time.perf_counter()
                     if wait <= 0:
@@ -247,15 +356,21 @@ class ServeEngine:
                         except queue.Empty:
                             break
                     if nxt is _STOP:
-                        self._execute(batch, tracer)
+                        self._execute(batch, tracer, t_dequeue)
                         return
                     batch.append(nxt)
-                self._execute(batch, tracer)
+                self._execute(batch, tracer, t_dequeue)
 
-    def _execute(self, batch: list, tracer) -> None:
+    def _execute(self, batch: list, tracer, t_dequeue: float) -> None:
         src = self.artifact.source
+        reg = self.registry
         n = len(batch)
-        t0 = time.perf_counter()
+        t_sealed = time.perf_counter()
+        if reg.enabled:
+            self._m_queue_depth.dec(n)
+            self._m_inflight.inc()
+            self._m_occupancy.observe(n)
+        outcome = "ok"
         try:
             stacked = {
                 k: np.stack([r.inputs[k] for r in batch])
@@ -272,23 +387,71 @@ class ServeEngine:
             else:
                 rows = [{k: v[i] for k, v in out.items()} for i in range(n)]
         except Exception as exc:  # propagate to every caller, keep serving
+            outcome = f"error:{type(exc).__name__}"
+            t_exec_end = time.perf_counter()
             for r in batch:
                 r.future.set_exception(exc)
+            self._finish_batch(batch, tracer, t_dequeue, t_sealed,
+                               t_exec_end, time.perf_counter(), outcome)
             return
-        t1 = time.perf_counter()
-        self.stats["requests"] += n
-        self.stats["batches"] += 1
-        self.stats["max_batch_seen"] = max(self.stats["max_batch_seen"], n)
+        t_exec_end = time.perf_counter()
+        self._bump("requests", n)
+        self._bump("batches")
+        with self._stats_lock:
+            self._stats["max_batch_seen"] = max(
+                self._stats["max_batch_seen"], n)
+        for r in batch:
+            r.future.set_result(rows.pop(0))
+        t_respond = time.perf_counter()
         if tracer.enabled:
             tracer.counter("serve_batch", {"size": n})
             for r in batch:
                 tracer.counter(
-                    "serve_latency_ms", {"ms": (t1 - r.t_submit) * 1e3}
+                    "serve_latency_ms",
+                    {"ms": (t_exec_end - r.t_submit) * 1e3}
                 )
-            elapsed = t1 - (self._t_start or t1)
+            elapsed = t_exec_end - (self._t_start or t_exec_end)
             if elapsed > 0:
-                tracer.counter(
-                    "serve_qps", {"qps": self.stats["requests"] / elapsed}
-                )
-        for r in batch:
-            r.future.set_result(rows.pop(0))
+                with self._stats_lock:
+                    served = self._stats["requests"]
+                tracer.counter("serve_qps", {"qps": served / elapsed})
+        self._finish_batch(batch, tracer, t_dequeue, t_sealed,
+                           t_exec_end, t_respond, outcome)
+
+    def _finish_batch(self, batch, tracer, t_dequeue, t_sealed,
+                      t_exec_end, t_respond, outcome: str) -> None:
+        """Record lifecycle metrics + one flight record for a finished
+        (served or failed) batch."""
+        reg = self.registry
+        n = len(batch)
+        waits_ms = [(t_dequeue - r.t_submit) * 1e3 for r in batch]
+        form_ms = (t_sealed - t_dequeue) * 1e3
+        exec_ms = (t_exec_end - t_sealed) * 1e3
+        respond_ms = (t_respond - t_exec_end) * 1e3
+        if reg.enabled:
+            self._m_inflight.dec()
+            if outcome == "ok":
+                self._m_requests.inc(n)
+                self._m_batches.inc()
+            else:
+                self._m_rejected.inc(n, cause="execute_error")
+            for w in waits_ms:
+                self._m_stage_ms.observe(w, stage="queue_wait")
+            self._m_stage_ms.observe(form_ms, stage="batch_form")
+            self._m_stage_ms.observe(exec_ms, stage="execute")
+            self._m_stage_ms.observe(respond_ms, stage="respond")
+            if outcome == "ok":
+                for r in batch:
+                    self._m_latency_ms.observe(
+                        (t_respond - r.t_submit) * 1e3)
+        if self.config.flight_records:
+            self._flight.append({
+                "batch_id": self.stats["batches"],
+                "request_ids": [r.req_id for r in batch],
+                "n": n,
+                "outcome": outcome,
+                "queue_wait_ms": round(sum(waits_ms) / n, 4),
+                "batch_form_ms": round(form_ms, 4),
+                "execute_ms": round(exec_ms, 4),
+                "respond_ms": round(respond_ms, 4),
+            })

@@ -7,10 +7,20 @@ times are deterministic under ``seed`` (uniform spacing at the offered
 QPS); inputs are seeded small-integer tensors matching the artifact's
 compiled input shapes, same value model as
 :func:`repro.passes.interp.random_env`.
+
+Saturation is data, not a crash: when admission rejects an arrival
+(:class:`queue.Full`) the generator records the rejection and keeps to
+its schedule — rejected arrivals are *excluded* from the latency
+distribution (they have no completion) but counted in the report, so an
+overloaded run reads as "p99 exploded, rejects nonzero" instead of a
+stack trace.  Counters come from the engine's metrics registry when it
+is enabled (the ``serve_*_total`` series), falling back to the legacy
+``engine.stats`` snapshot otherwise.
 """
 from __future__ import annotations
 
 import dataclasses
+import queue as queue_mod
 import time
 from typing import Optional
 
@@ -28,7 +38,11 @@ def _percentile(sorted_ms: list, q: float) -> float:
 
 @dataclasses.dataclass
 class LoadReport:
-    """One load level's outcome — a row of ``BENCH_serve.json``."""
+    """One load level's outcome — a row of ``BENCH_serve.json``.
+
+    ``requests`` counts *served* requests; ``rejected`` the arrivals
+    admission turned away (their latencies are not in the
+    distribution)."""
 
     offered_qps: float
     achieved_qps: float
@@ -56,6 +70,23 @@ class LoadReport:
         }
 
 
+def _counter_deltas(engine):
+    """Start-of-run counter baseline: registry series when enabled
+    (one aggregation path, satellite of the metrics registry), legacy
+    stats snapshot otherwise.  Returns a closure producing
+    ``(batches, rejected)`` deltas."""
+    reg = getattr(engine, "registry", None)
+    if reg is not None and reg.enabled:
+        c_batches = reg.counter("serve_batches_total")
+        c_rejected = reg.counter("serve_rejected_total", labels=("cause",))
+        b0, r0 = c_batches.value(), c_rejected.total()
+        return lambda: (int(c_batches.value() - b0),
+                        int(c_rejected.total() - r0))
+    stats0 = engine.stats
+    return lambda: (engine.stats["batches"] - stats0["batches"],
+                    engine.stats["rejected"] - stats0["rejected"])
+
+
 def run_load(engine, *, offered_qps: float, requests: int,
              seed: int = 0, inputs: Optional[list] = None) -> LoadReport:
     """Drive ``engine`` with ``requests`` arrivals at ``offered_qps``
@@ -79,41 +110,47 @@ def run_load(engine, *, offered_qps: float, requests: int,
                 for k in src.graph_inputs
             })
     gap = 1.0 / offered_qps
-    batches_before = engine.stats["batches"]
-    rejected_before = engine.stats["rejected"]
+    deltas = _counter_deltas(engine)
     done_at: list = [None] * requests
     futures = []
+    rejected_local = 0
     t_start = time.perf_counter()
     for i in range(requests):
         arrival = t_start + i * gap
         delay = arrival - time.perf_counter()
         if delay > 0:
             time.sleep(delay)
-        fut = engine.submit(inputs[i % len(inputs)])
+        try:
+            fut = engine.submit(inputs[i % len(inputs)])
+        except queue_mod.Full:
+            # saturation: admission said no — record it and hold the
+            # open-loop schedule (do NOT retry; that would close the loop)
+            rejected_local += 1
+            continue
 
         def _stamp(f, i=i):
             done_at[i] = time.perf_counter()
 
         fut.add_done_callback(_stamp)
-        futures.append((arrival, fut))
-    for _, fut in futures:
+        futures.append((arrival, i, fut))
+    for _, _, fut in futures:
         fut.result()  # surface worker exceptions loudly
     t_end = time.perf_counter()
     lat_ms = sorted(
-        (done_at[i] - arrival) * 1e3
-        for i, (arrival, _) in enumerate(futures)
+        (done_at[i] - arrival) * 1e3 for arrival, i, _ in futures
     )
     duration = t_end - t_start
-    batches = engine.stats["batches"] - batches_before
+    served = len(futures)
+    batches, rejected_counted = deltas()
     return LoadReport(
         offered_qps=offered_qps,
-        achieved_qps=requests / duration if duration > 0 else 0.0,
-        requests=requests,
+        achieved_qps=served / duration if duration > 0 else 0.0,
+        requests=served,
         duration_s=duration,
         p50_ms=_percentile(lat_ms, 50),
         p99_ms=_percentile(lat_ms, 99),
-        mean_ms=sum(lat_ms) / len(lat_ms),
-        mean_batch=requests / batches if batches else 0.0,
+        mean_ms=sum(lat_ms) / len(lat_ms) if lat_ms else 0.0,
+        mean_batch=served / batches if batches else 0.0,
         batches=batches,
-        rejected=engine.stats["rejected"] - rejected_before,
+        rejected=max(rejected_counted, rejected_local),
     )

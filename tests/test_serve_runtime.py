@@ -217,7 +217,7 @@ class TestServeEngine:
             # racing shutdown would take
             eng._queue.put(engine_mod._STOP)
             orphan = engine_mod._Request(
-                {k: np.asarray(v) for k, v in x.items()},
+                -1, {k: np.asarray(v) for k, v in x.items()},
                 Future(), time.perf_counter())
             eng._queue.put(orphan)
             gate.set()
